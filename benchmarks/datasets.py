@@ -1,0 +1,33 @@
+"""Benchmark graphs: synthetic stand-ins scaled to this container.
+
+The paper's datasets (P2P .. Web, Table 2) are not redistributable here; the
+benchmarks use R-MAT (power-law, the paper's web/social shape) and
+Erdős–Rényi graphs at sizes that exercise the same algorithmic regimes.
+Names record the analogy.
+"""
+
+from __future__ import annotations
+
+from repro.data import graphgen
+
+# name -> (kind, params); sizes chosen for single-core CPU wall times
+SMALL = {
+    "p2p-like": ("er", dict(n=6_000, m=42_000, seed=1)),
+    "hep-like": ("rmat", dict(scale=13, edge_factor=6, seed=2)),
+}
+MEDIUM = {
+    "amazon-like": ("rmat", dict(scale=14, edge_factor=6, seed=3)),
+    "wiki-like": ("rmat", dict(scale=15, edge_factor=4, seed=4)),
+}
+
+
+def load(name):
+    for group in (SMALL, MEDIUM):
+        if name in group:
+            kind, kw = group[name]
+            if kind == "er":
+                n = kw["n"]
+                return n, graphgen.erdos_renyi(n, kw["m"], kw["seed"])
+            n, e = graphgen.rmat(kw["scale"], kw["edge_factor"], kw["seed"])
+            return n, e
+    raise KeyError(name)

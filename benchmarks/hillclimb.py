@@ -1,0 +1,64 @@
+"""Hillclimb driver: re-lower one cell after a code/config change and diff
+the roofline terms against a recorded baseline.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch qwen2.5-14b \
+      --shape decode_32k --tag flat_constraints \
+      [--baseline results/perf/<file>.json]
+
+Writes results/perf/<arch>_<shape>_<tag>.json and prints the before/after
+table used in EXPERIMENTS.md §Perf.
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import registry
+    from repro.launch.dryrun import run_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cell = registry.get_cell(args.arch, args.shape)
+    rec = run_cell(cell, mesh, "2pod16x16" if args.multi_pod else "pod16x16")
+    safe = args.arch.replace(".", "_").replace("-", "_")
+    out = f"results/perf/{safe}_{args.shape}_{args.tag}.json"
+    os.makedirs("results/perf", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump([rec], f, indent=1)
+    print(f"wrote {out}")
+    keys = ("t_compute", "t_memory", "t_collective", "bottleneck",
+            "temp_bytes", "roofline_fraction", "model_flops_ratio")
+    if not rec.get("ok"):
+        print("FAIL:", rec.get("error"))
+        return
+    if args.baseline:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        base = base[0] if isinstance(base, list) else base
+        print(f"{'term':<20}{'baseline':>14}{'now':>14}{'delta':>10}")
+        for k in keys:
+            b, n = base.get(k), rec.get(k)
+            if isinstance(b, float) and isinstance(n, float) and b:
+                print(f"{k:<20}{b:>14.4e}{n:>14.4e}{n/b:>9.2f}x")
+            else:
+                print(f"{k:<20}{str(b):>14}{str(n):>14}")
+    else:
+        for k in keys:
+            print(f"{k:<20}{rec.get(k)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,196 @@
+"""Benchmark harness — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  table3_*  — in-memory decomposition: Alg 1 (TD-inmem) vs Alg 2
+              (TD-inmem+) vs the vectorized bulk peel (ours).  The paper's
+              headline speedup (2.2–73x) is algorithmic; we report the
+              same comparison on power-law graphs.
+  table4_*  — out-of-memory regime: bottom-up partitioned vs the
+              global-iterate baseline (the MapReduce [16] stand-in).
+  table5_*  — top-down top-t vs bottom-up full decomposition.
+  table6_*  — k_max-truss vs c_max-core statistics (sizes, clustering).
+  kernel_*  — Pallas kernel microbenches (interpret mode, correctness-
+              scaled shapes; TPU wall-times come from the roofline).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+ROWS = []
+
+
+def emit(name: str, us: float, derived: str = ""):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _time(fn, repeats=1):
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out
+
+
+def table3_inmemory():
+    from benchmarks.datasets import SMALL, load
+    from repro.core.peel import truss_decompose
+    from repro.core.serial import alg1_truss, alg2_truss
+
+    for name in SMALL:
+        n, edges = load(name)
+        us1, phi1 = _time(lambda: alg1_truss(n, edges))
+        us2, phi2 = _time(lambda: alg2_truss(n, edges))
+        usb, phib = _time(lambda: truss_decompose(n, edges))
+        assert (phi1 == phi2).all() and (phi2 == phib).all()
+        kmax = int(phi2.max())
+        emit(f"table3_{name}_alg1_TDinmem", us1,
+             f"m={len(edges)};kmax={kmax}")
+        emit(f"table3_{name}_alg2_TDinmem+", us2,
+             f"speedup_vs_alg1={us1/us2:.2f}")
+        emit(f"table3_{name}_bulkpeel_ours", usb,
+             f"speedup_vs_alg1={us1/usb:.2f}")
+
+
+def table4_bottom_up():
+    from benchmarks.datasets import MEDIUM, load
+    from repro.core.bottom_up import bottom_up_decompose
+    from repro.core.graph import build_graph
+    from repro.core.peel import peel_recompute
+    from repro.core.serial import alg2_truss
+    from repro.core.support import list_triangles_np
+
+    for name in MEDIUM:
+        n, edges = load(name)
+        budget = max(len(edges) // 8, 1024)   # "memory" = 1/8 of the graph
+        usb, res = _time(lambda: bottom_up_decompose(n, edges, budget))
+        # global-iterate baseline (MapReduce stand-in): recompute supports
+        # from scratch every round over the whole graph
+        g = build_graph(n, edges)
+        tris = list_triangles_np(g)
+        if len(tris) == 0:
+            tris = np.full((1, 3), g.m, np.int32)
+        tj = jnp.asarray(tris)
+        usm, phim = _time(
+            lambda: np.asarray(peel_recompute(tj, jnp.ones(g.m, bool))))
+        # cross-check the two paths against each other (the serial oracle is
+        # exercised on these sizes in table3 / tests; python-oracle runs on
+        # 300k+ edge graphs would dominate the harness wall time)
+        assert (res.phi == phim).all()
+        emit(f"table4_{name}_TDbottomup", usb,
+             f"m={len(edges)};rounds={res.rounds};scans={res.scans};"
+             f"budget={budget}")
+        emit(f"table4_{name}_globaliter_MRstandin", usm,
+             f"slowdown_vs_bottomup={usm/usb:.2f}")
+
+
+def table5_top_down():
+    from benchmarks.datasets import MEDIUM, load
+    from repro.core.bottom_up import bottom_up_decompose
+    from repro.core.top_down import top_down_decompose
+
+    for name in MEDIUM:
+        n, edges = load(name)
+        budget = max(len(edges) // 8, 1024)
+        ust, res_t = _time(lambda: top_down_decompose(n, edges, t=5))
+        usa, res_a = _time(lambda: top_down_decompose(n, edges))
+        usb, res_b = _time(lambda: bottom_up_decompose(n, edges, budget))
+        for k in res_t.classes:
+            assert (res_t.phi == k).sum() == (res_b.phi == k).sum()
+        emit(f"table5_{name}_TDtopdown_top5", ust,
+             f"classes={res_t.classes};cand={max(res_t.candidate_sizes or [0])}")
+        emit(f"table5_{name}_TDtopdown_all", usa,
+             f"kmax={res_a.kmax};pruned={res_a.pruned}")
+        emit(f"table5_{name}_TDbottomup_all", usb,
+             f"top5_speedup_vs_bottomup={usb/ust:.2f}")
+
+
+def table6_truss_vs_core():
+    from benchmarks.datasets import MEDIUM, SMALL, load
+    from repro.core.graph import clustering_coefficient, incident_vertices
+    from repro.core.kcore import cmax_core
+    from repro.core.peel import kmax_truss
+
+    for name in list(SMALL) + list(MEDIUM):
+        n, edges = load(name)
+        us, (kmax, t_edges) = _time(lambda: kmax_truss(n, edges))
+        cmax, c_edges = cmax_core(n, edges)
+        vt = len(incident_vertices(t_edges))
+        vc = len(incident_vertices(c_edges))
+        cct = clustering_coefficient(n, t_edges) if len(t_edges) else 0.0
+        ccc = clustering_coefficient(n, c_edges) if len(c_edges) else 0.0
+        emit(f"table6_{name}_kmaxtruss_vs_cmaxcore", us,
+             f"VT/VC={vt}/{vc};ET/EC={len(t_edges)}/{len(c_edges)};"
+             f"kmax/cmax={kmax}/{cmax};CCT/CCC={cct:.2f}/{ccc:.2f}")
+
+
+def kernel_micro():
+    from repro.core.graph import canonical_edges
+    from repro.data import graphgen
+    from repro.kernels.triangle_count.ops import (adjacency_from_edges,
+                                                  dense_support)
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.embedding_bag.ops import embedding_bag
+
+    rng = np.random.default_rng(0)
+    n = 256
+    edges = graphgen.erdos_renyi(n, 4000, seed=5)
+    A = jnp.asarray(adjacency_from_edges(n, edges))
+    us, S = _time(lambda: jax.block_until_ready(
+        dense_support(A, block=128, interpret=True)), repeats=2)
+    emit("kernel_triangle_count_256", us,
+         f"triangles={float(np.asarray(S).sum())/6:.0f}")
+
+    q = jnp.asarray(rng.standard_normal((1, 4, 256, 64)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 2, 256, 64)).astype(np.float32))
+    us, _ = _time(lambda: jax.block_until_ready(
+        flash_attention(q, k, k, bq=128, bk=128, interpret=True)), repeats=2)
+    emit("kernel_flash_attention_256", us, "GQA4:2,d64")
+
+    tbl = jnp.asarray(rng.standard_normal((4096, 18)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 4096, (64, 100)).astype(np.int32))
+    us, _ = _time(lambda: jax.block_until_ready(
+        embedding_bag(tbl, idx, interpret=True)), repeats=2)
+    emit("kernel_embedding_bag_64x100", us, "din bag shape")
+
+
+def roofline_summary():
+    """Read dry-run results if present (launch/dryrun.py --out)."""
+    import json
+    import os
+    path = os.environ.get("DRYRUN_JSON", "results/dryrun_all.json")
+    if not os.path.exists(path):
+        emit("roofline_summary_skipped", 0.0, f"no {path}")
+        return
+    with open(path) as f:
+        recs = json.load(f)
+    for r in recs:
+        if not r.get("ok"):
+            continue
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        t = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        emit(name, t * 1e6,
+             f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.3f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table3_inmemory()
+    table4_bottom_up()
+    table5_top_down()
+    table6_truss_vs_core()
+    kernel_micro()
+    roofline_summary()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Batched serving example: prefill + greedy decode with a KV cache.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "gemma3-4b", "--requests", "8",
+                "--prompt-len", "32", "--new-tokens", "16"]
+    serve.main()

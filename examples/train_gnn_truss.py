@@ -1,0 +1,59 @@
+"""The paper's technique as a first-class pipeline feature: train GraphSAGE
+with truss-based neighbor sampling (strong-tie-weighted fanouts) and
+compare against uniform sampling.
+
+Run:  PYTHONPATH=src python examples/train_gnn_truss.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparsify import sampling_weights, trussness_features
+from repro.data import graphgen
+from repro.models.gnn import models as G
+from repro.models.gnn.sampler import CSR, minibatch
+from repro.optim import adamw
+
+
+def run(weighted: bool, steps: int = 60):
+    n = 400
+    edges = graphgen.planted_cliques(n, 8, 8, 900, seed=1)
+    rng = np.random.default_rng(0)
+    # labels correlate with membership in cohesive cores -> trussness-aware
+    # sampling should help
+    _, tf = trussness_features(n, edges)
+    node_core = np.zeros(n)
+    for (u, v), t in zip(edges, tf):
+        node_core[u] = max(node_core[u], t)
+        node_core[v] = max(node_core[v], t)
+    labels = (node_core > 0.5).astype(np.int32)
+    feats = rng.standard_normal((n, 8)).astype(np.float32)
+    feats[:, 0] += labels * 0.5
+
+    w = sampling_weights(n, edges) if weighted else None
+    csr = CSR.from_edges(n, edges, edge_w=w)
+    cfg = G.GraphSAGEConfig(n_layers=2, d_hidden=32, d_in=8, n_classes=2)
+    params = G.sage_init(jax.random.PRNGKey(0), cfg)
+    ocfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=steps)
+    state = adamw.init_state(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, g = jax.value_and_grad(
+            lambda p, b: G.sage_loss(p, b, cfg))(params, batch)
+        params, state, _ = adamw.update(ocfg, params, state, g)
+        return params, state, loss
+
+    loss = None
+    for s in range(steps):
+        mb = minibatch(csr, feats, labels, 16, (5, 3), rng)
+        params, state, loss = step(params, state,
+                                   {k: jnp.asarray(v) for k, v in mb.items()})
+    return float(loss)
+
+
+if __name__ == "__main__":
+    lu = run(weighted=False)
+    lw = run(weighted=True)
+    print(f"GraphSAGE final loss — uniform sampling: {lu:.4f}, "
+          f"truss-weighted sampling: {lw:.4f}")

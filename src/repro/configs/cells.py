@@ -1,0 +1,143 @@
+"""Cell abstraction: one (architecture × input-shape) lowering unit.
+
+A Cell knows how to build, for a given mesh: the step function (train /
+prefill / decode / serve / retrieval), abstract inputs (ShapeDtypeStruct —
+no allocation), and input shardings.  launch/dryrun.py consumes cells for
+``.lower().compile()`` + roofline extraction; launch/train.py and the smoke
+tests consume reduced variants of the same configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                     # train | prefill | decode | serve | retrieval
+    model_flops: float            # analytic useful flops per step (global)
+    build: Callable[[Any], tuple]  # mesh -> (fn, args, in_sh[, out_sh])
+    notes: str = ""
+    donate: tuple = ()            # donated arg indices (decode: the cache)
+
+    @property
+    def key(self) -> str:
+        return f"{self.arch}×{self.shape}"
+
+
+def resolve_spec(mesh, spec: P) -> P:
+    """Drop axes not present on this mesh (e.g. 'pod' on single pod)."""
+    names = set(mesh.axis_names)
+
+    def fix(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    return P(*(fix(e) for e in spec))
+
+
+def shardings(mesh, spec_tree):
+    """Pytree of PartitionSpec -> pytree of NamedSharding (mesh-resolved)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_spec(mesh, s)),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def dp(mesh, *rest) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return P(lead, *rest)
+
+
+def data_axis_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                        if a in mesh.axis_names]))
+
+
+def abstract_params(init_fn, *args) -> Any:
+    return jax.eval_shape(init_fn, *args)
+
+
+def make_train_step(loss_fn, ocfg: adamw.AdamWConfig, microbatches: int = 1,
+                    grad_specs=None):
+    """Generic train step: grad-accum scan over microbatches + AdamW.
+
+    loss_fn(params, batch) -> scalar.  Gradients accumulate in f32 (the
+    fits-in-fast-memory discipline: activation peak is ONE microbatch).
+
+    ``grad_specs``: optional pytree of PartitionSpec for the f32 gradient
+    accumulator — ZeRO-2: each microbatch's gradient is reduce-scattered
+    onto the data axes instead of kept whole per device (a 14B-param f32
+    grad is 3.5 GB/chip model-sharded but 219 MB ZeRO-sharded; the MoE
+    42B config doesn't fit HBM without this — EXPERIMENTS.md §Perf P3).
+    """
+
+    def _constrain(g):
+        if grad_specs is None:
+            return g
+        from jax.sharding import PartitionSpec as PS
+        from repro.models.common import shard
+
+        flat_g, tree = jax.tree.flatten(g)
+        flat_s = jax.tree.leaves(grad_specs,
+                                 is_leaf=lambda x: isinstance(x, PS))
+        return jax.tree.unflatten(
+            tree, [shard(a, s) for a, s in zip(flat_g, flat_s)])
+
+    def step(params, opt_state, batch):
+        if microbatches > 1:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                g_acc, l_acc = acc
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                g_acc = _constrain(g_acc)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            g0 = _constrain(g0)
+            (grads, loss), _ = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            grads = _constrain(grads)
+        params, opt_state, om = adamw.update(ocfg, params, opt_state, grads)
+        return params, opt_state, {"loss": loss, **om}
+
+    return step
+
+
+def train_state_shardings(mesh, cfg_specs, params_abs):
+    """(param shardings, ZeRO opt-state shardings) for a param spec tree."""
+    psh = shardings(mesh, cfg_specs)
+    osp = adamw.zero_specs(
+        cfg_specs, params_abs,
+        data_axes=tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+        data_size=data_axis_size(mesh))
+    return psh, shardings(mesh, osp)
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)

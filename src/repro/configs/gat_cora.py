@@ -1,0 +1,7 @@
+"""gat-cora [gnn] — 2 layers, d_hidden=8, 8 heads, attention aggregator.
+[arXiv:1710.10903]"""
+from repro.models.gnn.models import GATConfig
+from repro.configs import gnn_family
+
+CONFIG = GATConfig(n_layers=2, d_hidden=8, n_heads=8)
+CELLS = gnn_family.gat_cells("gat-cora", CONFIG)

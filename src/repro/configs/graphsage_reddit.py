@@ -1,0 +1,8 @@
+"""graphsage-reddit [gnn] — 2 layers, d_hidden=128, mean aggregator,
+sample sizes 25-10 (training fanout per the minibatch shape is 15-10 as
+assigned to the shape).  [arXiv:1706.02216]"""
+from repro.models.gnn.models import GraphSAGEConfig
+from repro.configs import gnn_family
+
+CONFIG = GraphSAGEConfig(n_layers=2, d_hidden=128, aggregator="mean")
+CELLS = gnn_family.sage_cells("graphsage-reddit", CONFIG)

@@ -1,0 +1,121 @@
+"""LM-family cells: train_4k / prefill_32k / decode_32k / long_500k.
+
+All four shapes lower for every LM arch.  ``long_500k`` is a decode shape —
+per-step attention cost is O(cache), not O(cache²); the sub-quadratic
+concern applies to prefill, which is never lowered at 500k (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import cells as C
+from repro.models import transformer as T
+from repro.optim import adamw
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1, long=True),
+}
+
+OCFG = adamw.AdamWConfig(lr=3e-4, warmup_steps=2000, total_steps=100_000)
+
+
+def _attn_fwd_flops(cfg: T.LMConfig, batch: int, seq: int) -> float:
+    """Causal attention matmul flops (QKᵀ + PV), window-aware per layer."""
+    per_layer_full = 2 * 2 * batch * seq * seq * cfg.n_q * cfg.d_head / 2
+    per_layer_local = 2 * 2 * batch * seq * min(cfg.window, seq) * cfg.n_q * cfg.d_head
+    total = 0.0
+    for i in range(cfg.n_layers):
+        kind = cfg.pattern[i % len(cfg.pattern)]
+        total += per_layer_local if kind == "local" else per_layer_full
+    return total
+
+
+def _decode_attn_flops(cfg: T.LMConfig, batch: int, cache: int) -> float:
+    total = 0.0
+    for i in range(cfg.n_layers):
+        kind = cfg.pattern[i % len(cfg.pattern)]
+        s = min(cfg.window, cache) if kind == "local" else cache
+        total += 2 * 2 * batch * s * cfg.n_q * cfg.d_head
+    return total
+
+
+def model_flops(cfg: T.LMConfig, shape_id: str) -> float:
+    sh = SHAPES[shape_id]
+    n_active = cfg.active_param_count()
+    if sh["kind"] == "train":
+        toks = sh["batch"] * sh["seq"]
+        return 3 * (2 * n_active * toks + _attn_fwd_flops(cfg, sh["batch"], sh["seq"]))
+    if sh["kind"] == "prefill":
+        toks = sh["batch"] * sh["seq"]
+        return 2 * n_active * toks + _attn_fwd_flops(cfg, sh["batch"], sh["seq"])
+    return 2 * n_active * sh["batch"] + _decode_attn_flops(cfg, sh["batch"], sh["seq"])
+
+
+def make_cells(arch: str, cfg: T.LMConfig, microbatches: int = 8) -> dict:
+    cells = {}
+    for shape_id, sh in SHAPES.items():
+        cells[shape_id] = C.Cell(
+            arch=arch, shape=shape_id, kind=sh["kind"],
+            model_flops=model_flops(cfg, shape_id),
+            build=partial(_build, cfg, shape_id, microbatches),
+            donate=(1,) if sh["kind"] == "decode" else (),
+        )
+    return cells
+
+
+def _build(cfg: T.LMConfig, shape_id: str, microbatches: int, mesh):
+    sh = SHAPES[shape_id]
+    b, s = sh["batch"], sh["seq"]
+    params_abs = C.abstract_params(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = T.param_specs(cfg)
+    psh, _ = C.train_state_shardings(mesh, pspecs, params_abs)
+
+    if sh["kind"] == "train":
+        opt_abs = C.abstract_params(adamw.init_state, params_abs)
+        _, osh = C.train_state_shardings(mesh, pspecs, params_abs)
+        batch_abs = {"tokens": C.sds((b, s), jnp.int32),
+                     "labels": C.sds((b, s), jnp.int32)}
+        bsh = C.shardings(mesh, {"tokens": C.dp(mesh, None),
+                                 "labels": C.dp(mesh, None)})
+        # ZeRO-2: gradient accumulator sharded like the master params
+        gspecs = adamw.zero_specs(
+            pspecs, params_abs,
+            data_axes=tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+            data_size=C.data_axis_size(mesh))["master"]
+        step = C.make_train_step(
+            lambda p, mb: T.loss_fn(p, mb, cfg)[0], OCFG, microbatches,
+            grad_specs=gspecs)
+        return step, (params_abs, opt_abs, batch_abs), (psh, osh, bsh)
+
+    if sh["kind"] == "prefill":
+        toks_abs = C.sds((b, s), jnp.int32)
+        tsh = C.shardings(mesh, C.dp(mesh, None))
+
+        def step(params, tokens):
+            return T.prefill(params, tokens, cfg)
+
+        return step, (params_abs, toks_abs), (psh, tsh)
+
+    # decode — cache donated (in-place update) with matching out sharding
+    long = sh.get("long", False)
+    cache_abs = C.abstract_params(
+        lambda: T.init_cache(cfg, b, s))
+    csh = C.shardings(mesh, T.cache_specs(cfg, long_context=long))
+    toks_abs = C.sds((b,), jnp.int32)
+    tsh = C.shardings(mesh, P() if long else C.dp(mesh))
+
+    def step(params, cache, tokens):
+        return T.decode_step(params, cache, tokens, cfg)
+
+    return (step, (params_abs, cache_abs, toks_abs), (psh, csh, tsh),
+            (csh, None))

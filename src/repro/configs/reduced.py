@@ -1,0 +1,114 @@
+"""Reduced per-arch configs + synthetic batches for smoke tests and the
+CPU-scale example drivers.  Same model code as the full configs — only
+depths/widths/vocabulary/graph sizes shrink."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.data import graphgen
+from repro.data.recsys_stream import RecsysStream
+from repro.data.tokens import TokenStream
+from repro.models import transformer as T
+from repro.models.gnn import models as G
+from repro.models.recsys import din as DIN
+
+
+def reduced_lm(cfg: T.LMConfig) -> T.LMConfig:
+    pat = cfg.pattern
+    n_layers = max(2 * len(pat) + (1 if cfg.n_layers % len(pat) else 0),
+                   2 + cfg.n_layers % len(pat))
+    return dataclasses.replace(
+        cfg, n_layers=n_layers, d_model=64,
+        n_q=4, n_kv=max(1, 4 * cfg.n_kv // cfg.n_q), d_head=16,
+        d_ff=128, d_ff_expert=32 if cfg.moe else 0,
+        n_experts=min(cfg.n_experts, 8), vocab=211,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+        microbatches=1, attn_chunk=64,
+    )
+
+
+def reduced_gnn(cfg):
+    if isinstance(cfg, G.MeshGraphNetConfig):
+        return dataclasses.replace(cfg, n_layers=3, d_hidden=32, d_node_in=8)
+    if isinstance(cfg, G.GraphSAGEConfig):
+        return dataclasses.replace(cfg, d_hidden=32, d_in=8, n_classes=5)
+    if isinstance(cfg, G.GATConfig):
+        return dataclasses.replace(cfg, d_in=8, n_classes=5)
+    if isinstance(cfg, G.EquiformerV2Config):
+        return dataclasses.replace(cfg, n_layers=2, d_hidden=16, l_max=2,
+                                   n_heads=4, d_in=8)
+    raise TypeError(cfg)
+
+
+def reduced_din(cfg: DIN.DINConfig) -> DIN.DINConfig:
+    return dataclasses.replace(cfg, n_items=5000, n_cats=20)
+
+
+def _gnn_batch(arch, seed=0):
+    n = 48
+    edges = graphgen.erdos_renyi(n, 160, seed=seed)
+    b = graphgen.gnn_full_batch(n, edges, d_feat=8, n_classes=5, seed=seed)
+    b["targets_node"] = b.pop("targets", None)
+    out = {"node_feat": b["node_feat"], "edge_index": b["edge_index"],
+           "edge_mask": b["edge_mask"], "positions": b["positions"],
+           "edge_feat": b["edge_feat"]}
+    rng = np.random.default_rng(seed)
+    if arch == "meshgraphnet":
+        out["targets"] = b["targets_vec"]
+        out["node_mask"] = np.ones(n, np.float32)
+    elif arch == "equiformer-v2":
+        out["targets"] = rng.standard_normal(n).astype(np.float32)
+        out["node_mask"] = np.ones(n, np.float32)
+    else:
+        out["labels"] = b["labels"]
+        out["label_mask"] = b["label_mask"]
+    return {k: jnp.asarray(v) for k, v in out.items() if v is not None}
+
+
+def make_reduced(arch: str):
+    """Returns (cfg, init_fn, loss_fn, batch_fn) at smoke scale."""
+    full = registry.get_config(arch)
+    if arch in registry.LM_ARCHS:
+        cfg = reduced_lm(full)
+        stream = TokenStream(cfg.vocab, seq_len=32, global_batch=4, seed=0)
+
+        def batch_fn(step):
+            return {k: jnp.asarray(v) for k, v in stream.batch(step).items()}
+
+        return (cfg,
+                lambda: T.init_params(jax.random.PRNGKey(0), cfg),
+                lambda p, b: T.loss_fn(p, b, cfg)[0],
+                batch_fn)
+    if arch in registry.GNN_ARCHS:
+        cfg = reduced_gnn(full)
+        init = {
+            "meshgraphnet": G.mgn_init, "equiformer-v2": G.eqv2_init,
+            "graphsage-reddit": G.sage_init, "gat-cora": G.gat_init,
+        }[arch]
+        loss = {
+            "meshgraphnet": G.mgn_loss, "equiformer-v2": G.eqv2_loss,
+            "graphsage-reddit": G.sage_loss, "gat-cora": G.gat_loss,
+        }[arch]
+        return (cfg,
+                lambda: init(jax.random.PRNGKey(0), cfg),
+                lambda p, b: loss(p, b, cfg),
+                lambda step: _gnn_batch(arch, seed=step % 7))
+    # din
+    cfg = reduced_din(full)
+    stream = RecsysStream(cfg.n_items, cfg.n_cats, cfg.seq_len,
+                          global_batch=8, seed=0)
+
+    def batch_fn(step):
+        return {k: jnp.asarray(v) for k, v in stream.batch(step).items()}
+
+    return (cfg,
+            lambda: DIN.din_init(jax.random.PRNGKey(0), cfg),
+            lambda p, b: DIN.din_loss(p, b, cfg),
+            batch_fn)

@@ -1,0 +1,45 @@
+"""Architecture registry: --arch <id> -> config module + cells."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "granite-8b": "repro.configs.granite_8b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3_5_moe",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b",
+    "meshgraphnet": "repro.configs.meshgraphnet",
+    "equiformer-v2": "repro.configs.equiformer_v2",
+    "graphsage-reddit": "repro.configs.graphsage_reddit",
+    "gat-cora": "repro.configs.gat_cora",
+    "din": "repro.configs.din",
+}
+
+LM_ARCHS = [a for a in ARCHS if a in (
+    "qwen2.5-14b", "gemma3-4b", "granite-8b",
+    "phi3.5-moe-42b-a6.6b", "moonshot-v1-16b-a3b")]
+GNN_ARCHS = ["meshgraphnet", "equiformer-v2", "graphsage-reddit", "gat-cora"]
+RECSYS_ARCHS = ["din"]
+
+
+def get_module(arch: str):
+    return importlib.import_module(ARCHS[arch])
+
+
+def get_config(arch: str):
+    return get_module(arch).CONFIG
+
+
+def get_cells(arch: str) -> dict:
+    return get_module(arch).CELLS
+
+
+def get_cell(arch: str, shape: str):
+    return get_cells(arch)[shape]
+
+
+def all_cells():
+    for arch in ARCHS:
+        for shape, cell in get_cells(arch).items():
+            yield cell

@@ -1,0 +1,253 @@
+"""Bottom-up I/O-efficient truss decomposition (paper Section 5, Alg 3-5).
+
+Two stages, adapted to the TPU memory hierarchy (DESIGN.md §2):
+
+Stage 1 — ``lower_bounding`` (Algorithm 3): partition the current graph's
+vertices into parts whose neighborhood subgraphs fit the working-set budget;
+decompose each NS(P) *locally* (bulk peel, device-side); Lemma 1 makes the
+local trussness a global lower bound φ(e).  Internal edges are removed after
+each round and emitted to ``G_new``; the loop repeats on the shrinking
+remainder until no edges are left.
+
+Stage 2 — ``bottom_up_decompose`` (Algorithm 4 + Procedure 5): for k = 2, 3,
+…: extract the candidate subgraph H = NS(U_k), U_k = endpoints of edges with
+φ(e) <= k; peel H at threshold (k-2) — the removed internal edges are exactly
+Φ_k (Theorem 2); delete them from G_new and continue.
+
+Deviation from the paper (documented in DESIGN.md §7): Algorithm 3 Step 8
+flags internal zero-support edges as Φ_2 in *every* round, but from round 2
+onward local supports are measured against the already-shrunk working graph,
+which can under-count (a crossing edge whose triangle partner was emitted to
+G_new in an earlier round shows support 0 yet can have trussness 3).  We flag
+Φ_2 exactly in round 1 only (supports there are exact w.r.t. G), and start
+stage 2 at k = 2 so any remaining 2-class edges are recovered exactly —
+stage-2 candidate supports are always exact w.r.t. G_new.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph as glib
+from repro.core import partition as plib
+from repro.core.peel import peel_classes, peel_threshold
+from repro.core.support import edge_support_np, list_triangles_np
+
+
+def _resolve_partitioner(partitioner):
+    """Normalize to fn(graph, budget, round_idx) -> parts.
+
+    The randomized partitioner is re-seeded every round (Chu–Cheng's
+    guarantee that crossing edges eventually co-locate holds w.h.p. only
+    under re-randomization); deterministic ones ignore the round index.
+    """
+    if callable(partitioner):
+        return lambda g, b, r: partitioner(g, b)
+    fn = plib.PARTITIONERS[partitioner]
+    if partitioner == "random":
+        return lambda g, b, r: fn(g, b, seed=r)
+    return lambda g, b, r: fn(g, b)
+
+
+@dataclasses.dataclass
+class LowerBoundResult:
+    edges: np.ndarray        # canonical edge list of the original graph
+    phi: np.ndarray          # trussness; filled with 2 for the exact Phi_2
+    lb: np.ndarray           # lower bound phi(e) for G_new edges (>=2)
+    in_gnew: np.ndarray      # bool mask: edge still undecided (in G_new)
+    rounds: int              # partition rounds (the paper's O(m/M) iterations)
+    scans: int               # NS extractions (I/O-scan analogue)
+    max_part_edges: int      # largest NS working set seen (budget check)
+
+
+def _local_truss(sub_edges: np.ndarray, n: int) -> np.ndarray:
+    """Trussness of every edge of the subgraph (device bulk peel)."""
+    g = glib.build_graph(n, sub_edges)
+    if g.m == 0:
+        return np.zeros(0, np.int64)
+    tris = list_triangles_np(g)
+    sup = edge_support_np(g).astype(np.int32)
+    if len(tris) == 0:
+        tris = np.full((1, 3), g.m, np.int32)
+    phi, _ = peel_classes(jnp.asarray(sup), jnp.asarray(tris), jnp.ones(g.m, bool))
+    return np.asarray(phi).astype(np.int64)
+
+
+def lower_bounding(
+    n: int,
+    edges: np.ndarray,
+    budget: int,
+    partitioner: str | Callable = "sequential",
+) -> LowerBoundResult:
+    """Algorithm 3: per-edge lower bounds + exact round-1 Phi_2."""
+    part_fn = _resolve_partitioner(partitioner)
+    edges = glib.canonical_edges(edges, n)
+    m = len(edges)
+    phi = np.zeros(m, dtype=np.int64)
+    lb = np.full(m, 2, dtype=np.int64)
+    alive = np.ones(m, dtype=bool)          # still in the working graph
+    in_gnew = np.zeros(m, dtype=bool)       # emitted to G_new
+    rounds = scans = 0
+    max_part = 0
+    cur_budget = budget
+
+    while alive.any():
+        rounds += 1
+        cur_ids = np.nonzero(alive)[0]
+        g = glib.build_graph(n, edges[cur_ids])
+        parts = part_fn(g, cur_budget, rounds)
+        if not parts:
+            break
+        round_removed = np.zeros(len(cur_ids), dtype=bool)
+        for P in parts:
+            scans += 1
+            sub_ids, sub_edges, internal = glib.neighborhood_subgraph(g, P)
+            if len(sub_ids) == 0:
+                continue
+            max_part = max(max_part, len(sub_ids))
+            phi_local = _local_truss(sub_edges, n)
+            int_ids = sub_ids[internal]               # ids in current graph
+            glob_ids = cur_ids[int_ids]               # ids in original graph
+            lb[glob_ids] = np.maximum(lb[glob_ids], phi_local[internal])
+            if rounds == 1:
+                # Exact Phi_2: internal support == global support in G here.
+                is_phi2 = phi_local[internal] == 2
+                phi[glob_ids[is_phi2]] = 2
+                in_gnew[glob_ids[~is_phi2]] = True
+            else:
+                in_gnew[glob_ids] = True
+            round_removed[int_ids] = True
+        if not round_removed.any():
+            # Stalled: no crossing edge became internal (can happen with a
+            # deterministic partitioner).  Paper's remedy is the randomized
+            # re-partition; the hard fallback is to grow the working set.
+            cur_budget *= 2
+            continue
+        alive[cur_ids[round_removed]] = False
+
+    return LowerBoundResult(
+        edges=edges, phi=phi, lb=lb, in_gnew=in_gnew,
+        rounds=rounds, scans=scans, max_part_edges=max_part,
+    )
+
+
+@dataclasses.dataclass
+class BottomUpResult:
+    edges: np.ndarray
+    phi: np.ndarray
+    kmax: int
+    rounds: int
+    scans: int
+    candidate_sizes: List[int]   # |H| per k (I/O + working-set accounting)
+
+
+def bottom_up_decompose(
+    n: int,
+    edges: np.ndarray,
+    budget: int,
+    partitioner: str | Callable = "sequential",
+) -> BottomUpResult:
+    """Algorithm 4: full decomposition under a working-set budget."""
+    lbres = lower_bounding(n, edges, budget, partitioner)
+    edges = lbres.edges
+    phi = lbres.phi.copy()
+    lb = lbres.lb
+    remaining = lbres.in_gnew.copy()
+    cand_sizes: List[int] = []
+    scans = lbres.scans
+
+    k = 2
+    while remaining.any():
+        scans += 1
+        # U_k: endpoints of remaining edges whose lower bound admits class k.
+        elig = remaining & (lb <= k)
+        if not elig.any():
+            k += 1
+            continue
+        u_k = np.zeros(n, dtype=bool)
+        eg = edges[elig]
+        u_k[eg[:, 0]] = True
+        u_k[eg[:, 1]] = True
+        # H = NS(U_k) within G_new: every remaining edge with >=1 endpoint in U_k.
+        u_in = u_k[edges[:, 0]]
+        v_in = u_k[edges[:, 1]]
+        in_h = remaining & (u_in | v_in)
+        internal = remaining & u_in & v_in
+        h_ids = np.nonzero(in_h)[0]
+        cand_sizes.append(len(h_ids))
+        sub = glib.build_graph(n, edges[h_ids])
+        tris = list_triangles_np(sub)
+        sup = edge_support_np(sub).astype(np.int32)
+        if len(tris) == 0:
+            tris = np.full((1, 3), sub.m, np.int32)
+        # Map internal mask to subgraph ids (canonical order preserved).
+        removable = jnp.asarray(internal[h_ids])
+        alive, _, removed = peel_threshold(
+            jnp.asarray(sup), jnp.asarray(tris),
+            jnp.ones(sub.m, bool), removable, jnp.int32(k - 2),
+        )
+        removed = np.asarray(removed)
+        rm_glob = h_ids[removed]
+        phi[rm_glob] = k
+        remaining[rm_glob] = False
+        k += 1
+
+    kmax = int(phi.max()) if len(phi) else 2
+    return BottomUpResult(
+        edges=edges, phi=phi, kmax=kmax, rounds=lbres.rounds,
+        scans=scans, candidate_sizes=cand_sizes,
+    )
+
+
+def partitioned_support(
+    n: int,
+    edges: np.ndarray,
+    budget: int,
+    partitioner: str | Callable = "sequential",
+) -> np.ndarray:
+    """Exact sup(e) w.r.t. the FULL graph, computed under a working-set
+    budget (triangle-credit variant of Algorithm 3 used by the top-down
+    algorithm; see DESIGN.md §7).
+
+    Invariant: every triangle of G is credited exactly once — in the first
+    round in which one of its edges becomes internal (all internal edges of a
+    triangle lie in the same part, and a triangle loses an edge from the
+    working graph the moment it is first credited).
+    """
+    part_fn = _resolve_partitioner(partitioner)
+    edges = glib.canonical_edges(edges, n)
+    m = len(edges)
+    sup = np.zeros(m, dtype=np.int64)
+    alive = np.ones(m, dtype=bool)
+    rounds = 0
+    cur_budget = budget
+
+    while alive.any():
+        rounds += 1
+        cur_ids = np.nonzero(alive)[0]
+        g = glib.build_graph(n, edges[cur_ids])
+        parts = part_fn(g, cur_budget, rounds)
+        if not parts:
+            break
+        round_removed = np.zeros(len(cur_ids), dtype=bool)
+        for P in parts:
+            sub_ids, sub_edges, internal = glib.neighborhood_subgraph(g, P)
+            if len(sub_ids) == 0:
+                continue
+            sub = glib.build_graph(n, sub_edges)
+            tris = list_triangles_np(sub)  # every NS triangle has an internal edge
+            if len(tris):
+                # subgraph edge id -> current-graph id -> original id
+                to_glob = cur_ids[sub_ids]
+                np.add.at(sup, to_glob[tris.reshape(-1)], 1)
+            round_removed[sub_ids[internal]] = True
+        if not round_removed.any():
+            cur_budget *= 2   # stall fallback (see lower_bounding)
+            continue
+        alive[cur_ids[round_removed]] = False
+
+    return sup

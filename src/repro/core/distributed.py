@@ -1,0 +1,194 @@
+"""Distributed truss decomposition (shard_map over the production mesh).
+
+Three device-parallel pieces (DESIGN.md §2):
+
+1. ``distributed_local_truss`` — the LowerBounding stage (Algorithm 3) at pod
+   scale: every device owns one (padded) neighborhood subgraph NS(P_i) and
+   peels it locally with NO communication — the partition-locality that makes
+   the paper's design beat iterate-globally MapReduce.  vmap over the parts
+   stacked on each device.
+
+2. ``peel_classes_sharded`` — bulk peeling of ONE big graph whose triangle
+   list is sharded across devices: each round every device computes the
+   support decrement induced by its triangle shard and a single psum
+   all-reduce merges them.  Edge-state (alive/sup/phi/k) is replicated, so
+   the per-round communication is exactly one all-reduce of m int32 — the
+   ICI analogue of the paper's "one sequential scan per iteration".
+
+3. ``ring_support_dense`` — SUMMA-style dense support counting: adjacency
+   row-blocks rotate around the ring (``ppermute``) while each device
+   accumulates A_i @ A into its block of (A @ A) ∘ A.  Sequential-neighbor
+   traffic instead of all-to-all: the scan(N) discipline applied to ICI.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.peel import _tri_alive, peel_classes
+
+_BIG = jnp.int32(np.iinfo(np.int32).max // 2)
+
+
+# ---------------------------------------------------------------------------
+# 1. LowerBounding at pod scale
+# ---------------------------------------------------------------------------
+
+def pad_parts(
+    parts: Sequence[tuple[np.ndarray, np.ndarray]], n_devices: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack per-part (sup, tris) into device-shardable padded arrays.
+
+    Returns (sup_p, tris_p, alive_p): shapes (P, Em), (P, Tm, 3), (P, Em)
+    with P a multiple of n_devices.  Padding edges are dead; padding
+    triangles point at the per-part drop slot Em.
+    """
+    n_parts = len(parts)
+    P_total = max(1, -(-n_parts // n_devices) * n_devices)
+    Em = max([len(s) for s, _ in parts] + [1])
+    Tm = max([len(t) for _, t in parts] + [1])
+    sup_p = np.zeros((P_total, Em), np.int32)
+    tris_p = np.full((P_total, Tm, 3), Em, np.int32)
+    alive_p = np.zeros((P_total, Em), bool)
+    for i, (sup, tris) in enumerate(parts):
+        sup_p[i, : len(sup)] = sup
+        alive_p[i, : len(sup)] = True
+        if len(tris):
+            tris_p[i, : len(tris)] = tris
+    return sup_p, tris_p, alive_p
+
+
+def distributed_local_truss(mesh, sup_p, tris_p, alive_p, axis: str = "data"):
+    """Peel every part locally, parts sharded over ``axis``; returns phi_p."""
+
+    def local(sup, tris, alive):
+        phi, _ = jax.vmap(lambda s, t, a: peel_classes(s, t, a))(sup, tris, alive)
+        return phi
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis)),
+        out_specs=P(axis),
+        check_vma=False,  # data-dependent trip counts differ per shard
+    )
+    return fn(sup_p, tris_p, alive_p)
+
+
+# ---------------------------------------------------------------------------
+# 2. Sharded-triangle bulk peel (one big graph)
+# ---------------------------------------------------------------------------
+
+def _peel_sharded_body(sup0, tris_loc, alive0, axis: str):
+    """Runs on each device: triangle shard local, edge state replicated."""
+    m = sup0.shape[0]
+
+    def cond(state):
+        alive, sup, phi, k = state
+        return jnp.any(alive)
+
+    def body(state):
+        alive, sup, phi, k = state
+        rm = alive & (sup <= k - 2)
+        has_rm = jnp.any(rm)
+
+        def remove(_):
+            alive2 = alive & ~rm
+            phi2 = jnp.where(rm, k, phi)
+            died = _tri_alive(alive, tris_loc) & ~_tri_alive(alive2, tris_loc)
+            dec = jnp.zeros(m + 1, jnp.int32)
+            for c in range(3):
+                e = tris_loc[:, c]
+                dec = dec.at[e].add((died & alive2[e]).astype(jnp.int32), mode="drop")
+            dec = jax.lax.psum(dec, axis)       # the one all-reduce per round
+            return alive2, sup - dec[:m], phi2, k
+
+        def jump(_):
+            min_sup = jnp.min(jnp.where(alive, sup, _BIG))
+            return alive, sup, phi, jnp.maximum(k + 1, min_sup + 2)
+
+        return jax.lax.cond(has_rm, remove, jump, operand=None)
+
+    state0 = (alive0, sup0, jnp.zeros(m, jnp.int32), jnp.int32(2))
+    alive, sup, phi, k = jax.lax.while_loop(cond, body, state0)
+    return phi
+
+
+def peel_classes_sharded(mesh, sup0, tris, alive0, axis: str = "data"):
+    """Trussness of one big graph with the triangle list sharded on ``axis``.
+
+    ``tris`` (T, 3) must be padded to a multiple of the axis size (padding
+    rows point at edge id m = drop slot).
+    """
+    fn = jax.shard_map(
+        partial(_peel_sharded_body, axis=axis), mesh=mesh,
+        in_specs=(P(), P(axis), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(sup0, tris, alive0)
+
+
+def pad_triangles(tris: np.ndarray, m: int, multiple: int) -> np.ndarray:
+    t = len(tris)
+    t_pad = max(1, -(-t // multiple)) * multiple
+    out = np.full((t_pad, 3), m, np.int32)
+    if t:
+        out[:t] = tris
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 3. Ring (SUMMA) dense support counting
+# ---------------------------------------------------------------------------
+
+def ring_support_dense(mesh, A: jnp.ndarray, axis: str = "data"):
+    """S = (A @ A) ∘ A with A row-sharded; neighbor-ring collective schedule.
+
+    A: (n, n) 0/1 matrix (float dtype), n divisible by the axis size.
+    Returns S with S[u, v] = common-neighbor count for the edge (u, v)
+    (zero off-edges) — per-edge support for the dense-core regime.
+    """
+    p = mesh.shape[axis]
+    perm = [(j, (j + 1) % p) for j in range(p)]
+
+    def body(a_loc):                      # (nb, n) block of rows
+        nb = a_loc.shape[0]
+        idx0 = jax.lax.axis_index(axis)
+
+        def step(i, carry):
+            blk, acc = carry              # blk holds rows of device (idx0 - i) % p
+            src = (idx0 - i) % p
+            cols = jax.lax.dynamic_slice(a_loc, (0, src * nb), (nb, nb))
+            acc = acc + cols @ blk        # (nb, nb) @ (nb, n)
+            blk = jax.lax.ppermute(blk, axis, perm)
+            return blk, acc
+
+        _, acc = jax.lax.fori_loop(0, p, step, (a_loc, jnp.zeros_like(a_loc)))
+        return acc * a_loc
+
+    fn = jax.shard_map(
+        body, mesh=mesh, in_specs=P(axis, None), out_specs=P(axis, None)
+    )
+    return fn(A)
+
+
+def allgather_support_dense(mesh, A: jnp.ndarray, axis: str = "data"):
+    """Baseline: same computation via one big all-gather (no ring overlap).
+
+    Used by EXPERIMENTS.md §Perf to contrast collective schedules.
+    """
+
+    def body(a_loc):
+        a_full = jax.lax.all_gather(a_loc, axis, tiled=True)   # (n, n)
+        return (a_loc @ a_full) * a_loc
+
+    fn = jax.shard_map(
+        body, mesh=mesh, in_specs=P(axis, None), out_specs=P(axis, None)
+    )
+    return fn(A)

@@ -1,0 +1,180 @@
+"""Graph representation for truss decomposition.
+
+Host-side (numpy) preprocessing produces static-shape arrays consumed by the
+JAX algorithms:
+
+* canonical edge list ``edges`` — (m, 2) int32, ``u < v``, lexicographically
+  sorted, deduplicated, self-loop free.  The row index of an edge is its
+  *edge id*, stable across the whole decomposition.
+* degree-ordered orientation (the paper's Theorem-1 trick): rank vertices by
+  ``(deg, id)``; orient every edge from its lower-rank endpoint ``a`` to the
+  higher-rank endpoint ``b``.  Out-degrees are then bounded by ``O(sqrt(m))``
+  for any graph, which is what gives wedge enumeration its ``O(m^1.5)`` total
+  work bound — the vectorized analogue of "iterate over the lower-degree
+  endpoint's neighbors".
+* CSR of the oriented out-neighborhoods with rows sorted by neighbor id, so
+  membership tests are vectorized binary searches instead of hash lookups
+  (sorted arrays are the TPU-idiomatic replacement for the paper's hashtable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+Int = np.int32
+
+
+def canonical_edges(edges: np.ndarray, n: Optional[int] = None) -> np.ndarray:
+    """Canonicalize an edge list: undirected, simple, u < v, lex-sorted."""
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if edges.size == 0:
+        return np.zeros((0, 2), dtype=Int)
+    u = np.minimum(edges[:, 0], edges[:, 1])
+    v = np.maximum(edges[:, 0], edges[:, 1])
+    keep = u != v  # drop self loops
+    u, v = u[keep], v[keep]
+    if n is None:
+        n = int(v.max()) + 1 if v.size else 0
+    key = u * np.int64(n) + v
+    key = np.unique(key)
+    out = np.stack([key // n, key % n], axis=1)
+    return out.astype(Int)
+
+
+def degrees(n: int, edges: np.ndarray) -> np.ndarray:
+    deg = np.zeros(n, dtype=Int)
+    if len(edges):
+        np.add.at(deg, edges[:, 0], 1)
+        np.add.at(deg, edges[:, 1], 1)
+    return deg
+
+
+@dataclasses.dataclass
+class Graph:
+    """Static-shape packed graph (all arrays numpy; moved to device lazily).
+
+    Attributes:
+      n: number of vertices.
+      edges: (m, 2) canonical edge list (edge id == row index).
+      deg: (n,) degrees in the undirected graph.
+      rank: (n,) degree-order rank of each vertex (position in (deg, id) order).
+      src, dst: (m,) oriented endpoints per edge id: rank[src] < rank[dst].
+      indptr: (n+1,) CSR row pointers of oriented out-adjacency.
+      nbrs: (m,) concatenated out-neighbor lists, each row sorted by vertex id.
+      nbr_eid: (m,) edge id of each (row_vertex, nbrs[i]) entry.
+      max_out_deg: max oriented out-degree (static bound for wedge enumeration).
+    """
+
+    n: int
+    edges: np.ndarray
+    deg: np.ndarray
+    rank: np.ndarray
+    src: np.ndarray
+    dst: np.ndarray
+    indptr: np.ndarray
+    nbrs: np.ndarray
+    nbr_eid: np.ndarray
+    max_out_deg: int
+
+    @property
+    def m(self) -> int:
+        return len(self.edges)
+
+    def subgraph(self, edge_mask: np.ndarray) -> "Graph":
+        """Graph induced by the kept edges (vertex ids preserved)."""
+        return build_graph(self.n, self.edges[edge_mask])
+
+
+def build_graph(n: int, edges: np.ndarray) -> Graph:
+    """Build the oriented CSR package from a canonical edge list."""
+    edges = canonical_edges(edges, n)
+    m = len(edges)
+    deg = degrees(n, edges)
+    # rank by (deg, id): stable and total.
+    order = np.lexsort((np.arange(n), deg))  # vertices sorted by (deg, id)
+    rank = np.empty(n, dtype=Int)
+    rank[order] = np.arange(n, dtype=Int)
+    if m == 0:
+        return Graph(
+            n=n, edges=edges, deg=deg, rank=rank,
+            src=np.zeros(0, Int), dst=np.zeros(0, Int),
+            indptr=np.zeros(n + 1, Int), nbrs=np.zeros(0, Int),
+            nbr_eid=np.zeros(0, Int), max_out_deg=0,
+        )
+    u, v = edges[:, 0], edges[:, 1]
+    u_first = rank[u] < rank[v]
+    src = np.where(u_first, u, v).astype(Int)
+    dst = np.where(u_first, v, u).astype(Int)
+    # CSR over (src -> dst), rows sorted by dst id for binary search.
+    order = np.lexsort((dst, src))
+    rows = src[order]
+    nbrs = dst[order]
+    nbr_eid = np.arange(m, dtype=Int)[order]
+    indptr = np.zeros(n + 1, dtype=Int)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr, dtype=np.int64).astype(Int)
+    out_deg = indptr[1:] - indptr[:-1]
+    return Graph(
+        n=n, edges=edges, deg=deg, rank=rank, src=src, dst=dst,
+        indptr=indptr, nbrs=nbrs, nbr_eid=nbr_eid,
+        max_out_deg=int(out_deg.max()) if n else 0,
+    )
+
+
+def edge_id_lookup(graph: Graph, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Edge ids for vertex pairs (a, b); -1 if absent.  Host-side helper."""
+    u = np.minimum(a, b).astype(np.int64)
+    v = np.maximum(a, b).astype(np.int64)
+    key = u * np.int64(graph.n) + v
+    ekey = graph.edges[:, 0].astype(np.int64) * np.int64(graph.n) + graph.edges[:, 1]
+    pos = np.searchsorted(ekey, key)
+    pos = np.clip(pos, 0, len(ekey) - 1) if len(ekey) else np.zeros_like(pos)
+    ok = len(ekey) > 0
+    hit = ok & (ekey[pos] == key) if ok else np.zeros_like(key, dtype=bool)
+    return np.where(hit, pos, -1).astype(Int)
+
+
+def neighborhood_subgraph(
+    graph: Graph, part_vertices: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Extract NS(P): all edges with >= 1 endpoint in P (paper Definition 4).
+
+    Returns (edge_ids, edges, internal_mask) where ``internal_mask`` marks
+    edges with *both* endpoints in P (the paper's internal edges).
+    """
+    in_part = np.zeros(graph.n, dtype=bool)
+    in_part[part_vertices] = True
+    u_in = in_part[graph.edges[:, 0]]
+    v_in = in_part[graph.edges[:, 1]]
+    keep = u_in | v_in
+    edge_ids = np.nonzero(keep)[0].astype(Int)
+    internal = (u_in & v_in)[edge_ids]
+    return edge_ids, graph.edges[edge_ids], internal
+
+
+def incident_vertices(edges: np.ndarray) -> np.ndarray:
+    """Sorted unique vertices touched by an edge list."""
+    if len(edges) == 0:
+        return np.zeros(0, dtype=Int)
+    return np.unique(edges.reshape(-1)).astype(Int)
+
+
+# ---------------------------------------------------------------------------
+# Reference statistics used by benchmarks (Table 6).
+# ---------------------------------------------------------------------------
+
+def clustering_coefficient(n: int, edges: np.ndarray) -> float:
+    """Global clustering coefficient: 3 * #triangles / #wedges."""
+    g = build_graph(n, edges)
+    if g.m == 0:
+        return 0.0
+    from repro.core import support as _support  # lazy to avoid jax import here
+
+    sup = np.asarray(_support.edge_support_np(g))
+    tri3 = sup.sum()  # counts each triangle 3x
+    d = g.deg.astype(np.int64)
+    wedges = (d * (d - 1) // 2).sum()
+    return float(tri3) / float(wedges) if wedges else 0.0

@@ -1,0 +1,190 @@
+"""Top-down truss decomposition for the top-t classes (paper Section 6).
+
+``upper_bounds`` implements Procedure 6 / Lemma 2: for e = (u, v),
+``psi(e) = min(sup(e), x_u, x_v) + 2`` where ``x_w`` is the largest x such
+that x edges incident to w (excluding e) have support >= x — an h-index over
+incident supports, computed vectorized for all edges at once.
+
+``top_down_decompose`` implements Algorithm 7: classes are extracted from
+k = max(psi) downward.  Per k it extracts the candidate H = NS(U_k) with
+``U_k = {v : exists unclassified alive e at v with psi(e) >= k}`` and peels it
+at threshold (k-3) (i.e. removes sup < k-2, Procedure 8); the surviving
+internal unclassified edges are Phi_k.  Classified edges that no longer share
+any triangle with an undecided edge are pruned from the working graph
+(Algorithm 7 Steps 7-9).
+
+Deviation from the paper (DESIGN.md §7): Procedure 8 counts support
+contributed by *external unclassified* edges of H — edges whose own upper
+bound rules them out of T_k (psi < k at every vertex outside U_k) — which can
+keep a non-T_k internal edge alive and over-report Phi_k.  We exclude
+external unclassified edges from the candidate peel, which makes the result
+provably exact: survivors S satisfy "every edge of S ∪ T_k has support
+>= k-2 within S ∪ T_k", so S ⊆ T_k by maximality, and S ⊇ Phi_k because a
+T_k edge's triangles inside T_k use only classified or Phi_k (internal)
+co-edges, all present.  ``faithful_proc8=True`` restores the paper's literal
+procedure for comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph as glib
+from repro.core.bottom_up import partitioned_support
+from repro.core.peel import peel_threshold, support_from_triangles
+from repro.core.support import edge_support_np, list_triangles_np
+
+
+def upper_bounds(n: int, edges: np.ndarray, sup: np.ndarray) -> np.ndarray:
+    """Procedure 6: psi(e) upper bound on trussness, vectorized."""
+    m = len(edges)
+    if m == 0:
+        return np.zeros(0, np.int64)
+    sup = np.asarray(sup, dtype=np.int64)
+    inc_v = np.concatenate([edges[:, 0], edges[:, 1]]).astype(np.int64)
+    inc_e = np.concatenate([np.arange(m), np.arange(m)]).astype(np.int64)
+    inc_s = sup[inc_e]
+    order = np.lexsort((-inc_s, inc_v))
+    v_sorted = inc_v[order]
+    s_sorted = inc_s[order]
+    # segment starts per vertex
+    seg_start = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(seg_start, v_sorted + 1, 1)
+    seg_start = np.cumsum(seg_start)
+    r = np.arange(len(v_sorted), dtype=np.int64) - seg_start[v_sorted] + 1
+    # h0(v) = #{r : s_r >= r}; s_r - r strictly decreasing within a segment.
+    cond = (s_sorted >= r).astype(np.int64)
+    h0 = np.zeros(n, dtype=np.int64)
+    np.add.at(h0, v_sorted, cond)
+    # s_{h0+1}(v): the (h0+1)-th largest incident support (0 if none).
+    deg = seg_start[1:] - seg_start[:-1]
+    idx = seg_start[:-1] + h0  # position of rank h0+1
+    has_next = h0 < deg
+    s_next = np.where(has_next, s_sorted[np.minimum(idx, len(s_sorted) - 1)], 0)
+    # x_v(e): exclude e from v's h-index.
+    def x_at(vcol):
+        v = edges[:, vcol].astype(np.int64)
+        h = h0[v]
+        drop = (sup >= h) & ~(s_next[v] >= np.maximum(h, 1))
+        # if sup(e) < h0: exclusion doesn't affect counts at threshold h0;
+        # x >= 0 always (the empty set satisfies x = 0).
+        x = np.where(sup < h, h, np.where(drop, h - 1, h))
+        return np.maximum(x, 0)
+
+    x_u = x_at(0)
+    x_v = x_at(1)
+    return np.minimum(sup, np.minimum(x_u, x_v)) + 2
+
+
+@dataclasses.dataclass
+class TopDownResult:
+    edges: np.ndarray
+    phi: np.ndarray          # 0 = undecided (beyond the requested top-t)
+    classes: List[int]       # the k values emitted, descending
+    kmax: int
+    candidate_sizes: List[int]
+    pruned: int              # edges pruned by Steps 7-9
+
+
+def top_down_decompose(
+    n: int,
+    edges: np.ndarray,
+    t: Optional[int] = None,
+    budget: Optional[int] = None,
+    faithful_proc8: bool = False,
+) -> TopDownResult:
+    """Algorithm 7: top-t k-classes (all classes if t is None)."""
+    edges = glib.canonical_edges(edges, n)
+    m = len(edges)
+    phi = np.zeros(m, dtype=np.int64)
+    if m == 0:
+        return TopDownResult(edges, phi, [], 2, [], 0)
+
+    # Stage 1 (Alg 3 variant): exact supports; Phi_2 = zero-support edges.
+    if budget is None:
+        g = glib.build_graph(n, edges)
+        sup = edge_support_np(g)
+    else:
+        sup = partitioned_support(n, edges, budget)
+    phi[sup == 0] = 2
+    alive = sup > 0                      # G_new
+    psi = upper_bounds(n, edges, sup)
+
+    # Static triangle list over G_new; supports maintained against masks.
+    gnew = glib.build_graph(n, edges[alive])
+    gnew_ids = np.nonzero(alive)[0]
+    tris_l = list_triangles_np(gnew)
+    if len(tris_l) == 0:
+        tris_l = np.full((1, 3), gnew.m, np.int32)
+    tris = jnp.asarray(tris_l)
+    # masks below are in G_new-local edge ids
+    alive_l = np.ones(gnew.m, dtype=bool)
+    classified_l = np.zeros(gnew.m, dtype=bool)
+    psi_l = psi[gnew_ids]
+    edges_l = edges[gnew_ids]
+
+    classes: List[int] = []
+    cand_sizes: List[int] = []
+    pruned_total = 0
+    k = int(psi_l.max()) if gnew.m else 2
+
+    while k >= 3 and (t is None or len(classes) < t):
+        undecided = alive_l & ~classified_l
+        if not undecided.any():
+            break
+        elig = undecided & (psi_l >= k)
+        if not elig.any():
+            k = int(psi_l[undecided].max())
+            continue
+        u_k = np.zeros(n, dtype=bool)
+        eg = edges_l[elig]
+        u_k[eg[:, 0]] = True
+        u_k[eg[:, 1]] = True
+        u_in = u_k[edges_l[:, 0]]
+        v_in = u_k[edges_l[:, 1]]
+        in_h = alive_l & (u_in | v_in)
+        internal = alive_l & u_in & v_in
+        tentative = internal & ~classified_l
+        cand_sizes.append(int(in_h.sum()))
+        if faithful_proc8:
+            alive0 = in_h
+        else:
+            # exclude external unclassified support (see module docstring)
+            alive0 = tentative | (classified_l & in_h)
+        sup0 = support_from_triangles(tris, jnp.asarray(alive0), gnew.m)
+        surv, _, _ = peel_threshold(
+            sup0, tris, jnp.asarray(alive0), jnp.asarray(tentative),
+            jnp.int32(k - 3),
+        )
+        phi_k = np.asarray(surv) & tentative
+        if phi_k.any():
+            classes.append(k)
+            classified_l |= phi_k
+            phi[gnew_ids[phi_k]] = k
+            # Steps 7-9: prune classified edges with no undecided triangle.
+            und = jnp.asarray(alive_l & ~classified_l)
+            ta = (
+                jnp.asarray(alive_l)[tris[:, 0]]
+                & jnp.asarray(alive_l)[tris[:, 1]]
+                & jnp.asarray(alive_l)[tris[:, 2]]
+            )
+            needs = np.zeros(gnew.m + 1, dtype=np.int64)
+            tri_needs = np.asarray(
+                ta & (und[tris[:, 0]] | und[tris[:, 1]] | und[tris[:, 2]])
+            )
+            np.add.at(needs, np.asarray(tris).reshape(-1),
+                      np.repeat(tri_needs, 3))
+            prunable = alive_l & classified_l & (needs[:gnew.m] == 0)
+            pruned_total += int(prunable.sum())
+            alive_l &= ~prunable
+        k -= 1
+
+    kmax = classes[0] if classes else 2
+    return TopDownResult(
+        edges=edges, phi=phi, classes=classes, kmax=kmax,
+        candidate_sizes=cand_sizes, pruned=pruned_total,
+    )

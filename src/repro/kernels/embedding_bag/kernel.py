@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: embedding-bag (ragged gather + reduce).
+
+The recsys hot path (kernel_taxonomy §RecSys): bag lookups into a huge
+embedding table.  The table stays in HBM; the kernel uses
+``PrefetchScalarGridSpec`` so the grid's BlockSpec index_map reads the
+*prefetched* bag indices and DMAs exactly the needed rows HBM→VMEM — the
+TPU-idiomatic replacement for a gather kernel (indices are known one grid
+step ahead, so the pipeliner overlaps row fetch with accumulation).
+
+Grid (B, L): for bag b, step l accumulates table[idx[b, l]] into the (1, D)
+output tile; mean bags divide on the last step.  D must be lane-aligned
+(pad to 128 in ops.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, row_ref, o_ref, acc_ref, *, mode, bag_len):
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += row_ref[...].astype(jnp.float32)
+
+    @pl.when(l == bag_len - 1)
+    def _finish():
+        acc = acc_ref[...]
+        if mode == "mean":
+            acc = acc / jnp.float32(bag_len)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def embedding_bag_kernel(
+    table: jnp.ndarray,   # (V, D), D lane-aligned
+    idx: jnp.ndarray,     # (B, L) int32
+    *,
+    mode: str = "mean",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    assert mode in ("sum", "mean")
+    B, L = idx.shape
+    V, D = table.shape
+    kernel = functools.partial(_bag_kernel, mode=mode, bag_len=L)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, L),
+            in_specs=[
+                pl.BlockSpec((1, D), lambda b, l, idx_ref: (idx_ref[b, l], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, D), lambda b, l, idx_ref: (b, 0)),
+            scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        interpret=interpret,
+    )(idx, table)

@@ -1,0 +1,26 @@
+"""jit'd public wrapper for the embedding-bag kernel (lane padding)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag import ref
+from repro.kernels.embedding_bag.kernel import embedding_bag_kernel
+
+_LANES = 128
+
+
+@partial(jax.jit, static_argnames=("mode", "interpret", "use_kernel"))
+def embedding_bag(table, idx, *, mode="mean", interpret=True, use_kernel=True):
+    """Bag-reduce embedding lookup; pads the feature dim to the lane width."""
+    if not use_kernel:
+        return ref.embedding_bag(table, idx, mode=mode)
+    V, D = table.shape
+    Dp = -(-D // _LANES) * _LANES
+    tbl = table if Dp == D else jnp.pad(table, ((0, 0), (0, Dp - D)))
+    out = embedding_bag_kernel(tbl, idx.astype(jnp.int32), mode=mode,
+                               interpret=interpret)
+    return out[:, :D]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the embedding-bag gather-reduce.
+
+JAX has no native EmbeddingBag; the reference is ``take`` + reduce, the
+production sparse path is ``take`` + ``segment_sum`` (models/recsys), and
+the Pallas kernel streams rows via scalar-prefetch indexing.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag(
+    table: jnp.ndarray,    # (V, D)
+    idx: jnp.ndarray,      # (B, L) int32
+    *,
+    mode: str = "mean",
+    weights: jnp.ndarray | None = None,   # (B, L) optional per-sample weights
+) -> jnp.ndarray:
+    rows = table[idx]                      # (B, L, D)
+    if weights is not None:
+        rows = rows * weights[..., None]
+    if mode == "sum":
+        return rows.sum(axis=1)
+    if mode == "mean":
+        return rows.mean(axis=1)
+    raise ValueError(mode)

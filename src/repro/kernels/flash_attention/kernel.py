@@ -1,0 +1,123 @@
+"""Pallas TPU flash attention (forward): causal / sliding-window GQA.
+
+Online-softmax tiling (FlashAttention re-thought for TPU):
+  * grid (batch, q_head, q_block, kv_block), kv innermost so the running
+    (m, l, acc) state lives in VMEM scratch across kv steps;
+  * GQA without materializing repeated KV: the kv BlockSpec index_map sends
+    q-head h to kv-head h // group — the MXU reads each KV tile once per
+    group from HBM, never expanding it;
+  * causal + window masking at block granularity: fully-masked kv blocks are
+    skipped with pl.when (no MXU work, no VMEM traffic for the skipped tile
+    beyond the pipelined fetch), partial blocks are masked elementwise;
+  * q tile (bq, d) and kv tiles (bk, d) with d padded to lane width; f32
+    accumulation, bf16-friendly inputs.
+
+VMEM per step: q (bq*d) + k,v (2*bk*d) + acc (bq*d) + m,l (2*bq).
+bq = bk = 512, d = 128 in f32: ~1.3 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                 *, scale, causal, window, bq, bk):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Block-level relevance: q rows [qi*bq, qi*bq+bq), kv cols [kj*bk, ...).
+    q_lo = qi * bq
+    q_hi = q_lo + bq - 1
+    k_lo = kj * bk
+    relevant = True
+    if causal:
+        relevant = jnp.asarray(k_lo <= q_hi)
+    if window is not None:
+        relevant = relevant & jnp.asarray(kj * bk + bk - 1 > q_lo - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_ref[...]                          # (bq, 1)
+        m_cur = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=1))[:, None]
+        alpha = jnp.exp(m_prev - m_cur)              # (bq, 1)
+        p = jnp.exp(s - m_cur)                       # (bq, bk)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)[:, None]
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_cur
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)              # fully-masked rows -> 0
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jnp.ndarray,   # (B, Hq, S, D)
+    k: jnp.ndarray,   # (B, Hkv, Skv, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    bq: int = 512,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, s, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    bq = min(bq, s)
+    bk = min(bk, skv)
+    assert s % bq == 0 and skv % bk == 0, (s, bq, skv, bk)
+    scale = 1.0 / (d ** 0.5)
+    grid = (b, hq, s // bq, skv // bk)
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window, bq=bq, bk=bk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, h, i, j: (bb, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, h, i, j: (bb, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, h, i, j: (bb, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bb, h, i, j: (bb, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,31 @@
+"""jit'd public wrapper for flash attention with a jnp fallback.
+
+``flash_attention(..., use_kernel=False)`` routes to the reference — that is
+also the path the dry-run lowers (the Pallas kernel targets real TPUs; on
+the CPU host platform XLA has no Mosaic backend, so lowering substitutes the
+mathematically identical jnp formulation; see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                   "interpret", "use_kernel"))
+def flash_attention(
+    q, k, v, *, causal=True, window=None,
+    bq=512, bk=512, interpret=True, use_kernel=True,
+):
+    if use_kernel:
+        return flash_attention_kernel(
+            q, k, v, causal=causal, window=window,
+            bq=bq, bk=bk, interpret=interpret,
+        )
+    return ref.mha_reference(q, k, v, causal=causal, window=window)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for causal (optionally sliding-window) GQA attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_reference(
+    q: jnp.ndarray,   # (B, Hq, S, D)
+    k: jnp.ndarray,   # (B, Hkv, S, D)
+    v: jnp.ndarray,   # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jnp.ndarray:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0
+    group = hq // hkv
+    kf = jnp.repeat(k, group, axis=1)
+    vf = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kf.astype(jnp.float32)) * scale
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax._src_unused if False else None  # noqa: keep module import-light
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: blocked dense triangle counting S = (A @ A) ∘ A.
+
+This is the paper's support computation (its hot spot) mapped onto the MXU
+(DESIGN.md §2): the neighborhood-subgraph-fits-in-memory discipline becomes
+adjacency *tiles* that fit in VMEM.  Grid (i, j, k) with the contraction k
+innermost; each (i, j) output tile accumulates A[i,k] @ A[k,j] in an f32
+VMEM scratch accumulator and applies the edge mask A[i,j] once on the last
+k step.  All tile dims should be multiples of 128 to align with the MXU;
+inputs may be bf16 (0/1 values are exact in bf16), accumulation is f32.
+
+VMEM budget per step: bm*bk + bk*bn + 2*bm*bn tiles.  With 256x256x256 f32
+that is 4 * 256KiB = 1 MiB — comfortably inside the ~16 MiB/core VMEM, and
+the k-loop gives the pipeliner double-buffering room.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ik, a_kj, a_ij, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ik[...], a_kj[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...] * a_ij[...].astype(jnp.float32)
+
+
+def triangle_count_kernel(
+    A: jnp.ndarray,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """S = (A @ A) ∘ A.  A: (n, n), n divisible by the tile dims."""
+    n = A.shape[0]
+    assert A.shape == (n, n)
+    bm, bn, bk = (min(b, n) for b in (bm, bn, bk))
+    assert n % bm == 0 and n % bn == 0 and n % bk == 0, (n, bm, bn, bk)
+    grid = (n // bm, n // bn, n // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(A, A, A)

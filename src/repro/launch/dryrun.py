@@ -1,0 +1,211 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch × shape × mesh) cell.
+
+For each cell: lower the step on the production mesh with ShapeDtypeStruct
+inputs (no allocation), compile, and extract
+
+  * memory_analysis  — per-device arg/output/temp bytes (proves it fits);
+  * cost_analysis    — per-device HLO flops / bytes accessed;
+  * collective bytes — parsed from the post-SPMD HLO text per collective op
+                       (all-gather / all-reduce / reduce-scatter / all-to-all
+                        / collective-permute);
+  * the three roofline terms against TPU v5e constants
+      compute    = flops_dev / 197e12
+      memory     = bytes_dev / 819e9
+      collective = comm_bytes_dev / 50e9   (per-link ICI, algo-bytes model)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|[sbuf]\d+|bf16|f16|f32|f64)\[([\d,]*)\]")
+
+
+def _type_bytes(text: str) -> int:
+    """Sum bytes of every dtype[dims] token in ``text``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective result bytes from post-SPMD HLO.
+
+    HLO lines look like ``%name = TYPE[dims]{layout} op(args...)`` — the
+    result type sits between '=' and the op name; tuple results list several
+    TYPE[dims] tokens there.
+    """
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        rhs = s.split("=", 1)[1]
+        for op in COLLECTIVE_OPS:
+            m = re.search(rf"\b{op}(-start)?\(", rhs)
+            if m:
+                out[op] += _type_bytes(rhs[: m.start()])
+                counts[op] += 1
+                break
+    return {"bytes": out, "counts": counts}
+
+
+def run_cell(cell, mesh, mesh_name: str) -> dict:
+    rec = {"arch": cell.arch, "shape": cell.shape, "kind": cell.kind,
+           "mesh": mesh_name, "model_flops": cell.model_flops,
+           "notes": cell.notes}
+    t0 = time.time()
+    try:
+        import jax
+
+        with mesh:
+            built = cell.build(mesh)
+            fn, args, in_sh = built[:3]
+            out_sh = built[3] if len(built) > 3 else None
+            jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=cell.donate)
+            lowered = jfn.lower(*args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        n_dev = mesh.size
+        # cost_analysis counts while bodies once; the loop-aware walker
+        # multiplies by trip counts (launch/hlo_analysis.py).
+        from repro.launch import hlo_analysis
+
+        loops = hlo_analysis.analyze(hlo)
+        coll = {"bytes": loops["collective_bytes"],
+                "counts": loops["collective_counts"]}
+        flops_dev = max(float(cost.get("flops", 0.0)), float(loops["flops"]))
+        bytes_dev = max(float(cost.get("bytes accessed", 0.0)),
+                        float(loops["dot_bytes"]))
+        comm_dev = float(sum(coll["bytes"].values()))
+        rec.update({
+            "ok": True,
+            "lower_s": round(t_lower - t0, 1),
+            "compile_s": round(t_compile - t_lower, 1),
+            "n_devices": n_dev,
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            "xla_cost_flops": float(cost.get("flops", 0.0)),
+            "loop_aware_flops": float(loops["flops"]),
+            "collective_bytes_per_device": comm_dev,
+            "collectives": coll,
+            "arg_bytes": int(mem.argument_size_in_bytes),
+            "out_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "code_bytes": int(mem.generated_code_size_in_bytes),
+            "t_compute": flops_dev / PEAK_FLOPS,
+            "t_memory": bytes_dev / HBM_BW,
+            "t_collective": comm_dev / ICI_BW,
+        })
+        terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+                 "collective": rec["t_collective"]}
+        rec["bottleneck"] = max(terms, key=terms.get)
+        total_flops = flops_dev * n_dev
+        rec["model_flops_ratio"] = (cell.model_flops / total_flops
+                                    if total_flops else 0.0)
+        rec["roofline_fraction"] = (
+            rec["t_compute"] / max(max(terms.values()), 1e-30))
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import registry
+    from repro.launch.mesh import make_production_mesh
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [("pod16x16", make_production_mesh(multi_pod=False)),
+                  ("2pod16x16", make_production_mesh(multi_pod=True))]
+    else:
+        mp = args.multi_pod
+        meshes = [("2pod16x16" if mp else "pod16x16",
+                   make_production_mesh(multi_pod=mp))]
+
+    cells = []
+    for arch in registry.ARCHS:
+        if args.arch and arch != args.arch:
+            continue
+        for shape, cell in registry.get_cells(arch).items():
+            if args.shape and shape != args.shape:
+                continue
+            cells.append(cell)
+    if not cells:
+        raise SystemExit("no cells matched")
+
+    results = []
+    for mesh_name, mesh in meshes:
+        for cell in cells:
+            print(f"[dryrun] {cell.key} on {mesh_name} ...", flush=True)
+            rec = run_cell(cell, mesh, mesh_name)
+            status = "OK" if rec.get("ok") else f"FAIL {rec.get('error')}"
+            extra = ""
+            if rec.get("ok"):
+                extra = (f" compute={rec['t_compute']:.3e}s"
+                         f" memory={rec['t_memory']:.3e}s"
+                         f" coll={rec['t_collective']:.3e}s"
+                         f" bottleneck={rec['bottleneck']}"
+                         f" temp={rec['temp_bytes']/2**30:.2f}GiB")
+            print(f"[dryrun] {cell.key} {mesh_name}: {status}{extra}",
+                  flush=True)
+            results.append(rec)
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(r.get("ok", False) for r in results)
+    print(f"[dryrun] {n_ok}/{len(results)} cells compiled")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,230 @@
+"""Loop-aware flop/byte accounting from post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE — with
+scan-over-layers + microbatch-accumulation + chunked attention, that
+under-counts real work by orders of magnitude.  This walker parses the HLO
+text and:
+
+  * computes matmul flops per ``dot`` from shapes + contracting dims
+    (2 · Π(result dims) · Π(contracting dims));
+  * recurses through called computations (fusion / call / conditional
+    branches / while bodies);
+  * multiplies while bodies by their trip count, recovered from the loop
+    condition's comparison constant (lax.scan / fori loops compare the
+    induction variable against a literal);
+  * accumulates dot operand+result bytes × trips — a streamed-traffic proxy
+    used as a lower bound on HBM traffic for the memory roofline term.
+
+Elementwise work is ignored (matmuls dominate the compute term at these
+shapes); convolutions are counted like dots when they appear.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_TOKEN = re.compile(r"(pred|[subf]\d+|bf16|f16|f32|f64)\[([\d,]*)\]")
+
+
+def _shape_list(text):
+    out = []
+    for m in _SHAPE_TOKEN.finditer(text):
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((m.group(1), dims))
+    return out
+
+
+def _numel(dims):
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclass
+class Computation:
+    name: str
+    lines: list = field(default_factory=list)
+
+
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+
+def parse_computations(hlo: str) -> dict:
+    comps = {}
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+        elif line:
+            cur.lines.append(line)
+    return comps
+
+
+_CALL_RE = re.compile(
+    r"(?:calls=|to_apply=|body=|condition=|branch_computations=\{)%?([\w\.\-]+)")
+
+
+_INSTR_RE = re.compile(r"^%?([\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _instr_shapes(comp: "Computation") -> dict:
+    """name -> (dtype, dims) of each instruction's (first) result."""
+    table = {}
+    for line in comp.lines:
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        shapes = _shape_list(m.group(2).split("(", 1)[0])
+        if shapes:
+            table[m.group(1)] = shapes[0]
+    return table
+
+
+def _dot_flops_bytes(line: str, table: dict):
+    """(flops, bytes) for a dot/convolution instruction line."""
+    if "=" not in line:
+        return 0, 0
+    _, rhs = line.split("=", 1)
+    shapes = _shape_list(rhs.split("(", 1)[0])
+    if not shapes:
+        return 0, 0
+    result = shapes[0]
+    # operand shapes come from the instruction table (refs have no types)
+    ops_m = re.search(r"\b(?:dot|convolution)\(([^)]*)\)", rhs)
+    operands = []
+    if ops_m:
+        for ref in ops_m.group(1).split(","):
+            name = ref.strip().lstrip("%")
+            if name in table:
+                operands.append(table[name])
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+    contract = 1
+    if m and operands:
+        lhs_dims = operands[0][1]
+        for i in (int(x) for x in m.group(1).split(",") if x):
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    flops = 2 * _numel(result[1]) * contract
+    byts = _numel(result[1]) * _DTYPE_BYTES.get(result[0], 4)
+    byts += sum(_numel(d) * _DTYPE_BYTES.get(t, 4) for t, d in operands[:2])
+    return flops, byts
+
+
+def _while_trip_count(cond: Computation) -> int:
+    """Recover the scan/fori trip count from the loop condition.
+
+    lax.scan lowers to ``i < N``: the bound N is a scalar integer literal in
+    the condition computation, fed to a compare (possibly via a
+    wrapped-compare fusion).  We resolve the constant that is an ARGUMENT of
+    the compare/fusion line — taking any max constant in the region can
+    catch unrelated folded literals (e.g. clamp bounds).
+    """
+    consts: dict[str, int] = {}
+    for line in cond.lines:
+        m = re.match(r"%?([\w\.\-]+)\s*=.*?[su]\d+\[\]\s+constant\((\d+)\)",
+                     line)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    # candidate compare lines: direct compare or a fusion named *compare*
+    for line in cond.lines:
+        rhs = line.split("=", 1)[1] if "=" in line else line
+        is_cmp = re.search(r"\bcompare\(", rhs) or (
+            "fusion(" in rhs and "compare" in line)
+        if not is_cmp:
+            continue
+        m = re.search(r"(?:compare|fusion)\(([^)]*)\)", rhs)
+        if not m:
+            continue
+        vals = [consts[a.strip().lstrip("%")] for a in m.group(1).split(",")
+                if a.strip().lstrip("%") in consts]
+        if vals:
+            return max(max(vals), 1)
+    return max(consts.values()) if consts else 1
+
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def analyze(hlo: str, entry: str | None = None) -> dict:
+    comps = parse_computations(hlo)
+    zero_coll = {k: 0.0 for k in COLLECTIVE_OPS}
+    if not comps:
+        return {"flops": 0.0, "dot_bytes": 0.0, "collective_bytes": zero_coll,
+                "collective_counts": dict(zero_coll)}
+    if entry is None:
+        entry = next((n for n in comps if "main" in n), None) \
+            or next(iter(comps))
+    cache: dict[str, tuple] = {}
+
+    def _merge(a, b, k=1.0):
+        return {key: a[key] + k * b[key] for key in a}
+
+    def walk(name: str) -> tuple:
+        if name in cache:
+            return cache[name]
+        comp = comps.get(name)
+        if comp is None:
+            return (0.0, 0.0, dict(zero_coll), dict(zero_coll))
+        cache[name] = (0.0, 0.0, dict(zero_coll), dict(zero_coll))
+        table = _instr_shapes(comp)
+        flops = byts = 0.0
+        coll = dict(zero_coll)
+        cnts = dict(zero_coll)
+        for line in comp.lines:
+            rhs = line.split("=", 1)[1] if "=" in line else line
+            mcoll = _COLL_RE.search(rhs)
+            if re.search(r"\bdot\(", rhs) or re.search(r"\bconvolution\(", rhs):
+                f, b = _dot_flops_bytes(line, table)
+                flops += f
+                byts += b
+            elif mcoll:
+                op = mcoll.group(1)
+                sz = sum(_numel(d) * _DTYPE_BYTES.get(t, 4)
+                         for t, d in _shape_list(rhs[: mcoll.start()]))
+                coll[op] += sz
+                cnts[op] += 1
+            elif " while(" in rhs or rhs.startswith("while("):
+                mb = re.search(r"body=%?([\w\.\-]+)", rhs)
+                mc = re.search(r"condition=%?([\w\.\-]+)", rhs)
+                body = mb.group(1) if mb else None
+                cond = mc.group(1) if mc else None
+                trips = _while_trip_count(comps[cond]) if cond in comps else 1
+                bf, bb, bc, bn = walk(body) if body else (0, 0, zero_coll, zero_coll)
+                flops += trips * bf
+                byts += trips * bb
+                coll = _merge(coll, bc, trips)
+                cnts = _merge(cnts, bn, trips)
+            else:
+                for m in _CALL_RE.finditer(rhs):
+                    sub = m.group(1)
+                    if sub in comps and sub != name:
+                        f, b, c, n = walk(sub)
+                        flops += f
+                        byts += b
+                        coll = _merge(coll, c)
+                        cnts = _merge(cnts, n)
+        cache[name] = (flops, byts, coll, cnts)
+        return cache[name]
+
+    f, b, c, n = walk(entry)
+    return {"flops": f, "dot_bytes": b, "collective_bytes": c,
+            "collective_counts": n}

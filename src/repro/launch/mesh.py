@@ -1,0 +1,33 @@
+"""Production mesh definition (TPU v5e pods).
+
+Single pod: (data=16, model=16) = 256 chips.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips — the 'pod' axis carries
+only data parallelism (gradient all-reduce over DCI), model parallelism
+stays inside a pod's ICI.
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n: int | None = None, axes=("data", "model")):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    nd = n or len(jax.devices())
+    if len(axes) == 1:
+        return jax.make_mesh((nd,), axes)
+    d = 1
+    while nd % 2 == 0 and d * d < nd:   # largest power-of-two split
+        d *= 2
+        nd //= 2
+    total = n or len(jax.devices())
+    return jax.make_mesh((d, total // d), axes)

@@ -1,0 +1,126 @@
+"""Memory-bounded attention paths for long sequences (pure jnp).
+
+The Pallas flash kernel targets real TPUs; on the CPU host platform the
+dry-run lowers these mathematically identical scan-based formulations:
+
+* ``chunked_attention`` — FlashAttention-style online softmax over
+  (q_chunk × k_chunk) tiles via lax.scan: peak memory O(bq·bk) per
+  (batch, head) instead of O(S²).  Causal block skipping is done by
+  masking; the roofline accounts the full rectangle (see EXPERIMENTS.md
+  §Perf for the causal-skip iteration).
+* ``banded_attention`` — sliding-window layers (gemma3 local): each q chunk
+  attends to a static band [chunk_start - window, chunk_end), gathered with
+  dynamic_slice — O(S·(W+bq)) work, the window-limited cost the local
+  pattern is designed for.
+
+Both support GQA via head-group reshape without materializing repeated KV.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def _gqa_split(q, k, v):
+    """(B,S,Hq,D),(B,S,Hk,D) -> grouped (B,Hk,G,S,D) forms."""
+    b, sq, hq, d = q.shape
+    hk = k.shape[2]
+    g = hq // hk
+    qg = q.reshape(b, sq, hk, g, d).transpose(0, 2, 3, 1, 4)   # B,Hk,G,Sq,D
+    kg = k.transpose(0, 2, 1, 3)                               # B,Hk,Sk,D
+    vg = v.transpose(0, 2, 1, 3)
+    return qg, kg, vg, g
+
+
+def chunked_attention(q, k, v, *, causal=True, q_chunk=512, k_chunk=1024,
+                      positions_q=None, positions_kv=None):
+    """Online-softmax attention; layouts (B, S, H, D) in/out."""
+    b, sq, hq, d = q.shape
+    skv = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, skv)
+    assert sq % q_chunk == 0 and skv % k_chunk == 0
+    nq, nk = sq // q_chunk, skv // k_chunk
+    scale = 1.0 / math.sqrt(d)
+    qg, kg, vg, g = _gqa_split(q, k, v)
+    if positions_q is None:
+        positions_q = jnp.arange(sq, dtype=jnp.int32)
+    if positions_kv is None:
+        positions_kv = jnp.arange(skv, dtype=jnp.int32)
+
+    def q_block(qb, pq):
+        # qb: (B,Hk,G,bq,D); scan over k chunks with running (m, l, acc)
+        def kv_step(carry, idx):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(kg, idx * k_chunk, k_chunk, 2)
+            vb = jax.lax.dynamic_slice_in_dim(vg, idx * k_chunk, k_chunk, 2)
+            pk = jax.lax.dynamic_slice_in_dim(positions_kv, idx * k_chunk,
+                                              k_chunk, 0)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            if causal:
+                mask = pk[None, :] <= pq[:, None]               # (bq, bk)
+                s = jnp.where(mask[None, None, None], s, _NEG)
+            m2 = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m2)
+            p = jnp.exp(s - m2[..., None])
+            l2 = l * alpha + p.sum(-1)
+            acc2 = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32))
+            return (m2, l2, acc2), None
+
+        m0 = jnp.full((b, kg.shape[1], g, q_chunk), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, kg.shape[1], g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kg.shape[1], g, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    def q_step(_, i):
+        qb = jax.lax.dynamic_slice_in_dim(qg, i * q_chunk, q_chunk, 3)
+        pq = jax.lax.dynamic_slice_in_dim(positions_q, i * q_chunk, q_chunk, 0)
+        return None, q_block(qb, pq)
+
+    _, blocks = jax.lax.scan(q_step, None, jnp.arange(nq))
+    # blocks: (nq, B, Hk, G, bq, D) -> (B, S, Hq, D)
+    out = blocks.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, hq, d)
+    return out.astype(q.dtype)
+
+
+def banded_attention(q, k, v, *, window, q_chunk=512):
+    """Sliding-window causal attention: q chunk i sees k[i*bq - W, i*bq + bq)."""
+    b, s, hq, d = q.shape
+    q_chunk = min(q_chunk, s)
+    assert s % q_chunk == 0
+    nq = s // q_chunk
+    scale = 1.0 / math.sqrt(d)
+    qg, kg, vg, g = _gqa_split(q, k, v)
+    W = window
+    band = W + q_chunk                       # static band width
+    # pad keys at the front so every band slice is in range
+    kp = jnp.pad(kg, ((0, 0), (0, 0), (W, 0), (0, 0)))
+    vp = jnp.pad(vg, ((0, 0), (0, 0), (W, 0), (0, 0)))
+
+    def q_step(_, i):
+        qb = jax.lax.dynamic_slice_in_dim(qg, i * q_chunk, q_chunk, 3)
+        kb = jax.lax.dynamic_slice_in_dim(kp, i * q_chunk, band, 2)
+        vb = jax.lax.dynamic_slice_in_dim(vp, i * q_chunk, band, 2)
+        s_ = jnp.einsum("bhgqd,bhkd->bhgqk", qb.astype(jnp.float32),
+                        kb.astype(jnp.float32)) * scale
+        pq = i * q_chunk + jnp.arange(q_chunk)
+        pk = i * q_chunk - W + jnp.arange(band)
+        mask = (pk[None, :] <= pq[:, None]) & (pk[None, :] > pq[:, None] - W) \
+               & (pk[None, :] >= 0)
+        s_ = jnp.where(mask[None, None, None], s_, _NEG)
+        p = jax.nn.softmax(s_, axis=-1)
+        ob = jnp.einsum("bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32))
+        return None, ob
+
+    _, blocks = jax.lax.scan(q_step, None, jnp.arange(nq))
+    out = blocks.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, hq, d)
+    return out.astype(q.dtype)

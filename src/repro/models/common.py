@@ -1,0 +1,172 @@
+"""Shared model building blocks (pure-JAX, pytree params, mesh-aware).
+
+Sharding discipline: model code annotates activations with
+``shard(x, PartitionSpec(...))`` which is a no-op when no mesh is active
+(CPU smoke tests) and a ``with_sharding_constraint`` under the production
+mesh (dry-run / training).  Batch-like dims use ``dp_axes()`` which resolves
+to ``('pod', 'data')`` on the multi-pod mesh and ``('data',)`` on one pod.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Mesh helpers
+# ---------------------------------------------------------------------------
+
+def current_mesh():
+    """The active mesh (physical `with mesh:` or use_mesh), else None."""
+    try:
+        from jax._src import mesh as mesh_lib
+
+        pm = mesh_lib.thread_resources.env.physical_mesh
+        if pm is not None and not pm.empty:
+            return pm
+    except Exception:
+        pass
+    am = jax.sharding.get_abstract_mesh()
+    if am is not None and not am.empty:
+        return am
+    return None
+
+
+def mesh_axis_names() -> tuple[str, ...]:
+    m = current_mesh()
+    return tuple(m.axis_names) if m is not None else ()
+
+
+def dp_axes() -> tuple[str, ...]:
+    """Data-parallel axes present on the active mesh, pod-major."""
+    names = mesh_axis_names()
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def dp_spec(*rest) -> P:
+    """P(dp_axes(), *rest) — batch dim over all data axes."""
+    axes = dp_axes()
+    lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return P(lead, *rest)
+
+
+def shard(x: jnp.ndarray, spec: P) -> jnp.ndarray:
+    """with_sharding_constraint when a mesh is active, else identity."""
+    if current_mesh() is None:
+        return x
+    # Drop axes that don't exist on this mesh (e.g. 'pod' on single pod).
+    names = set(mesh_axis_names())
+
+    def fix(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    spec = P(*(fix(e) for e in spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.float32, scale=1.0):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float64) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (..., S, H, D) rotary on last dim; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)        # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token-mean CE in f32; logits (..., V), labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def bce_with_logits(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def finite_check(tree) -> jnp.ndarray:
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(tree)
+              if jnp.issubdtype(x.dtype, jnp.floating)]
+    return jnp.all(jnp.stack(leaves)) if leaves else jnp.asarray(True)

@@ -1,0 +1,341 @@
+"""Ring-scheduled full-graph message passing (shard_map).
+
+The memory problem: equiformer-v2 node features on ogb_products are
+(2.45M, 49, 128) f32 ≈ 61 GB — they must live sharded, and a naive
+``x[src]`` gather would all-gather the whole array.  The paper's discipline
+(partition into neighborhood subgraphs, stream sequentially — DESIGN.md §2)
+maps to a **compute-fused ring reduce-scatter**:
+
+* nodes are block-sharded over the flattened mesh axes (owner = src block);
+* every device keeps the edges whose SOURCE it owns, bucketed by the
+  destination block (host prep below) — so the feature gather is local;
+* the per-block partial aggregations travel the ring (`ppermute`), each
+  device adding its contribution for the block the accumulator is destined
+  to; after P steps each device holds the full aggregation for its own
+  block.  Peak memory: x_loc + ONE rotating block (≈ 2×240 MB) instead of
+  61 GB; per-device traffic equals the reduce-scatter lower bound
+  ((P-1)/P of the message volume) — a psum-per-block schedule would be P×
+  worse (measured in EXPERIMENTS.md §Perf).
+
+Attention normalization across devices: per-edge weights are
+``exp(soft-clipped logit)`` computed from source-side invariants; the ring
+carries (numerator, denominator), the owner divides — identical to the
+plain path's segment-softmax of clipped logits.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.gnn import layers as L
+from repro.models.gnn.models import EquiformerV2Config, _rbf, _so2_conv
+from repro.models.gnn.wigner import rotation_to_z, wigner_stack
+
+
+# ---------------------------------------------------------------------------
+# Host prep: owner-bucketed edges
+# ---------------------------------------------------------------------------
+
+def bucket_edges_by_owner(
+    n_pad: int, edge_index: np.ndarray, positions: np.ndarray,
+    n_devices: int, pad_factor: float = 2.0,
+) -> dict:
+    """Bucket directed edges by (owner = src block, dst block).
+
+    Returns (P, P, Eb) arrays: src_loc, dst_loc (block-local ids), edge_mask,
+    and dst_pos (P, P, Eb, 3).  n_pad must be divisible by n_devices.
+    """
+    Pn = n_devices
+    assert n_pad % Pn == 0
+    W = n_pad // Pn
+    src = edge_index[:, 0].astype(np.int64)
+    dst = edge_index[:, 1].astype(np.int64)
+    own = src // W
+    blk = dst // W
+    counts = np.zeros((Pn, Pn), np.int64)
+    np.add.at(counts, (own, blk), 1)
+    Eb = max(1, int(counts.max()),
+             int(np.ceil(pad_factor * len(src) / (Pn * Pn))))
+    key = own * Pn + blk
+    order = np.argsort(key, kind="stable")
+    ssrc, sdst, skey = src[order], dst[order], key[order]
+    slot = np.arange(len(skey)) - np.searchsorted(skey, skey, side="left")
+    keep = slot < Eb
+    src_loc = np.zeros((Pn, Pn, Eb), np.int32)
+    dst_loc = np.zeros((Pn, Pn, Eb), np.int32)
+    mask = np.zeros((Pn, Pn, Eb), bool)
+    dst_pos = np.zeros((Pn, Pn, Eb, 3), np.float32)
+    o, b, s_ = own[order][keep], blk[order][keep], slot[keep]
+    src_loc[o, b, s_] = (ssrc[keep] - o * W).astype(np.int32)
+    dst_loc[o, b, s_] = (sdst[keep] - b * W).astype(np.int32)
+    mask[o, b, s_] = True
+    dst_pos[o, b, s_] = positions[np.minimum(sdst[keep], len(positions) - 1)]
+    return {"src_loc": src_loc, "dst_loc": dst_loc, "edge_mask": mask,
+            "dst_pos": dst_pos, "overflow": int((~keep).sum())}
+
+
+def pad_nodes(arr: np.ndarray, n_pad: int) -> np.ndarray:
+    out = np.zeros((n_pad,) + arr.shape[1:], arr.dtype)
+    out[: len(arr)] = arr
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Ring reduce-scatter with fused compute
+# ---------------------------------------------------------------------------
+
+def ring_aggregate(contrib_fn: Callable, acc_init, axis, axis_size: int):
+    """After the ring, each device holds  sum_dev contrib_fn(dev -> my block).
+
+    Schedule: the accumulator for block b starts at device (b+1) mod P; at
+    step j device d adds its contribution for block (d-1-j) mod P, then the
+    accumulators rotate +1.  After P add-rotate steps a final rotate(-1)
+    lands block b's accumulator on device b.
+    """
+    Pn = axis_size
+    perm_f = [(j, (j + 1) % Pn) for j in range(Pn)]
+    perm_b = [(j, (j - 1) % Pn) for j in range(Pn)]
+    my = jax.lax.axis_index(axis)
+
+    def step(acc, j):
+        b = (my - 1 - j) % Pn
+        acc = jax.tree.map(jnp.add, acc, contrib_fn(b))
+        acc = jax.tree.map(lambda a: jax.lax.ppermute(a, axis, perm_f), acc)
+        return acc, None
+
+    acc, _ = jax.lax.scan(step, acc_init, jnp.arange(Pn, dtype=jnp.int32))
+    return jax.tree.map(lambda a: jax.lax.ppermute(a, axis, perm_b), acc)
+
+
+def _float0_like(x):
+    import numpy as _np
+
+    return _np.zeros(x.shape, jax.dtypes.float0)
+
+
+def make_ring_layer(contrib_fn: Callable, axis, axis_size: int):
+    """custom-VJP ring: O(1 block) memory in BOTH passes.
+
+    ``contrib_fn(b, x, blk, pos, dpos, src, dst, emask) -> {"num","den"}``.
+    Differentiating through the forward scan would save every ring carry
+    (P × block ≈ 61 GB on ogb_products); instead the backward runs its OWN
+    ring — the transpose of reduce-scatter is an all-gather, so the output
+    cotangent blocks rotate the ring while each device re-computes its
+    per-step contribution and applies the step VJP (2× recompute, O(block)
+    memory; EXPERIMENTS.md §Perf: 800 GiB -> ~4 GiB temp).
+    """
+    Pn = axis_size
+    perm_f = [(j, (j + 1) % Pn) for j in range(Pn)]
+    perm_b = [(j, (j - 1) % Pn) for j in range(Pn)]
+
+    @jax.custom_vjp
+    def ring_layer(x, blk, pos, dpos_b, src_b, dst_b, emask_b):
+        my = jax.lax.axis_index(axis)
+
+        def step(acc, j):
+            b = (my - 1 - j) % Pn
+            add = contrib_fn(b, x, blk, pos, dpos_b, src_b, dst_b, emask_b)
+            acc = jax.tree.map(jnp.add, acc, add)
+            return jax.tree.map(
+                lambda a: jax.lax.ppermute(a, axis, perm_f), acc), None
+
+        W = x.shape[0]
+        probe = jax.eval_shape(
+            contrib_fn, jax.ShapeDtypeStruct((), jnp.int32),
+            x, blk, pos, dpos_b, src_b, dst_b, emask_b)
+        acc0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), probe)
+        acc, _ = jax.lax.scan(step, acc0, jnp.arange(Pn, dtype=jnp.int32))
+        return jax.tree.map(
+            lambda a: jax.lax.ppermute(a, axis, perm_b), acc)
+
+    def fwd(x, blk, pos, dpos_b, src_b, dst_b, emask_b):
+        out = ring_layer(x, blk, pos, dpos_b, src_b, dst_b, emask_b)
+        return out, (x, blk, pos, dpos_b, src_b, dst_b, emask_b)
+
+    def bwd(res, g):
+        x, blk, pos, dpos_b, src_b, dst_b, emask_b = res
+        my = jax.lax.axis_index(axis)
+
+        def step(carry, j):
+            gblk, dx, dblk, dpos, ddpos = carry
+            b = (my + j) % Pn   # block whose cotangent we currently hold
+
+            def f(x_, blk_, pos_, dpos_):
+                return contrib_fn(b, x_, blk_, pos_, dpos_, src_b, dst_b,
+                                  emask_b)
+
+            _, vjp = jax.vjp(f, x, blk, pos, dpos_b)
+            dxj, dblkj, dposj, ddposj = vjp(gblk)
+            dx = jax.tree.map(jnp.add, dx, dxj)
+            dblk = jax.tree.map(jnp.add, dblk, dblkj)
+            dpos = dpos + dposj
+            ddpos = ddpos + ddposj
+            gblk = jax.tree.map(
+                lambda a: jax.lax.ppermute(a, axis, perm_b), gblk)
+            return (gblk, dx, dblk, dpos, ddpos), None
+
+        dx0 = jnp.zeros_like(x)
+        dblk0 = jax.tree.map(jnp.zeros_like, blk)
+        dpos0 = jnp.zeros_like(pos)
+        ddpos0 = jnp.zeros_like(dpos_b)
+        (_, dx, dblk, dpos, ddpos), _ = jax.lax.scan(
+            step, (g, dx0, dblk0, dpos0, ddpos0),
+            jnp.arange(Pn, dtype=jnp.int32))
+        return (dx, dblk, dpos, ddpos, _float0_like(src_b),
+                _float0_like(dst_b), _float0_like(emask_b))
+
+    ring_layer.defvjp(fwd, bwd)
+    return ring_layer
+
+
+# ---------------------------------------------------------------------------
+# EquiformerV2 ring forward (node-sharded)
+# ---------------------------------------------------------------------------
+
+def eqv2_ring_loss(params, batch, cfg: EquiformerV2Config, mesh,
+                   axes=("data", "model")):
+    """Masked-MSE loss with node features sharded over the flattened axes.
+
+    batch: node_feat (N, F), positions (N, 3), targets (N,), node_mask (N,)
+    node-sharded; src_loc/dst_loc/edge_mask/dst_pos from
+    ``bucket_edges_by_owner`` — sharded on dim 0 (owner).
+    """
+    ax = tuple(a for a in axes if a in mesh.axis_names)
+    Pn = int(np.prod([mesh.shape[a] for a in ax]))
+    S, C = cfg.n_sph, cfg.d_hidden
+
+    def _contrib(b, x, blk, pos, dpos_b, src_b, dst_b, emask_b):
+        W = x.shape[0]
+        s_l = src_b[b]                        # (Eb,)
+        d_l = dst_b[b]
+        msk = emask_b[b]
+        d_vec = dpos_b[b] - pos[s_l]
+        dist = jnp.linalg.norm(d_vec, axis=-1) + 1e-9
+        rbf = _rbf(dist, cfg.n_rbf)
+        D = wigner_stack(rotation_to_z(d_vec), cfg.l_max)
+        xr = jnp.einsum("est,etc->esc", D, x[s_l])
+        radial = L.mlp(blk["rbf_mlp"], rbf)
+        y = _so2_conv(xr, blk, radial, cfg)
+        msg = jnp.einsum("ets,etc->esc", D, y)
+        att_in = jnp.concatenate([x[s_l][:, 0], rbf], axis=-1)
+        logit = 10.0 * jnp.tanh(L.mlp(blk["attn_mlp"], att_in) / 10.0)
+        w = jnp.exp(logit) * msk[:, None]     # (Eb, H)
+        hd = C // cfg.n_heads
+        msg_h = (msg.reshape(-1, S, cfg.n_heads, hd)
+                 * w[:, None, :, None]).reshape(-1, S * C)
+        msg_h = jnp.where(msk[:, None], msg_h, 0.0)
+        dt = jnp.bfloat16 if cfg.ring_dtype == "bf16" else jnp.float32
+        return {
+            "num": jax.ops.segment_sum(msg_h, d_l, num_segments=W).astype(dt),
+            "den": jax.ops.segment_sum(w, d_l, num_segments=W).astype(dt),
+        }
+
+    def body(node_feat, pos, targets, node_mask, src_b, dst_b, emask_b, dpos_b):
+        # bucketed arrays arrive (1, P, Eb[, 3]) — drop the device dim
+        src_b, dst_b, emask_b, dpos_b = (
+            a[0] for a in (src_b, dst_b, emask_b, dpos_b))
+        W = node_feat.shape[0]
+        x0 = jnp.zeros((W, S, C))
+        x0 = x0.at[:, 0, :].set(node_feat @ params["embed"])
+        ring_layer = make_ring_layer(_contrib, ax, Pn)
+
+        def layer(x, blk):
+            agg = ring_layer(x, blk, pos, dpos_b, src_b, dst_b, emask_b)
+            hd = C // cfg.n_heads
+            num = agg["num"].astype(jnp.float32).reshape(W, S, cfg.n_heads, hd)
+            den = jnp.maximum(agg["den"].astype(jnp.float32),
+                              1e-9)[:, None, :, None]
+            out = (num / den).reshape(W, S, C)
+            gates = jax.nn.sigmoid(
+                L.mlp(blk["gate_mlp"], out[:, 0]).reshape(W, cfg.l_max, C))
+            parts = [jax.nn.silu(out[:, 0:1])]
+            for l in range(1, cfg.l_max + 1):
+                sl = slice(l * l, (l + 1) * (l + 1))
+                parts.append(out[:, sl] * gates[:, None, l - 1])
+            return x + jnp.concatenate(parts, axis=1)
+
+        x = x0
+        for blk in params["blocks"]:
+            x = jax.checkpoint(layer)(x, blk)
+        out = L.mlp(params["head"], x[:, 0])[:, 0]
+        err = jnp.square(out - targets) * node_mask
+        num = jax.lax.psum(err.sum(), ax)
+        den = jax.lax.psum(node_mask.sum(), ax)
+        return num / jnp.maximum(den, 1.0)
+
+    spec = P(ax if len(ax) > 1 else ax[0])
+    fn = jax.jit(jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(spec,) * 8,
+        out_specs=P(),
+        check_vma=False,
+    ))
+    return fn(batch["node_feat"], batch["positions"], batch["targets"],
+              batch["node_mask"], batch["src_loc"], batch["dst_loc"],
+              batch["edge_mask"], batch["dst_pos"])
+
+
+# ---------------------------------------------------------------------------
+# GraphSAGE ring forward (the paper-representative hillclimb pair)
+# ---------------------------------------------------------------------------
+
+def sage_ring_loss(params, batch, cfg, mesh, axes=("data", "model")):
+    """GraphSAGE full-graph training with node-sharded features and the same
+    owner-bucketed ring reduce-scatter as equiformer (EXPERIMENTS.md §Perf
+    P6): replaces the replicate-nodes + psum-per-layer baseline.
+
+    batch: node_feat (N, F) node-sharded, labels/label_mask node-sharded,
+    src_loc/dst_loc/edge_mask from bucket_edges_by_owner (sharded dim 0).
+    """
+    import repro.models.gnn.layers as L2
+
+    ax = tuple(a for a in axes if a in mesh.axis_names)
+    Pn = int(np.prod([mesh.shape[a] for a in ax]))
+
+    def body(node_feat, labels, label_mask, src_b, dst_b, emask_b):
+        src_b, dst_b, emask_b = (a[0] for a in (src_b, dst_b, emask_b))
+        W = node_feat.shape[0]
+
+        def make_contrib():
+            def contrib(b, x, blk, pos, dpos, s_b, d_b, m_b):
+                s_l, d_l, msk = s_b[b], d_b[b], m_b[b]
+                rows = jnp.where(msk[:, None], x[s_l], 0.0)
+                return {
+                    "num": jax.ops.segment_sum(rows, d_l, num_segments=W),
+                    "den": jax.ops.segment_sum(
+                        msk.astype(jnp.float32), d_l, num_segments=W),
+                }
+            return contrib
+
+        h = node_feat
+        zero3 = jnp.zeros((W, 3))
+        zdpos = jnp.zeros(src_b.shape + (3,))
+        for lp in params["layers"]:
+            ring = make_ring_layer(make_contrib(), ax, Pn)
+            agg = ring(h, {}, zero3, zdpos, src_b, dst_b, emask_b)
+            nbr = agg["num"] / jnp.maximum(agg["den"], 1.0)[:, None]
+            h = jax.nn.relu(h @ lp["w_self"] + nbr @ lp["w_nbr"] + lp["b"])
+        logits = h @ params["head"]
+        from repro.models import common as cm
+
+        lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logits.astype(jnp.float32),
+                                 labels[:, None], axis=-1)[:, 0]
+        nll = (lse - ll) * label_mask
+        num = jax.lax.psum(nll.sum(), ax)
+        den = jax.lax.psum(label_mask.sum(), ax)
+        return num / jnp.maximum(den, 1.0)
+
+    spec = P(ax if len(ax) > 1 else ax[0])
+    fn = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(spec,) * 6, out_specs=P(),
+        check_vma=False,
+    ))
+    return fn(batch["node_feat"], batch["labels"], batch["label_mask"],
+              batch["src_loc"], batch["dst_loc"], batch["edge_mask"])

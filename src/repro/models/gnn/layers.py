@@ -1,0 +1,98 @@
+"""GNN message-passing primitives (segment-op based; JAX has no CSR SpMM).
+
+Message passing IS ``jnp.take`` over an edge index + ``jax.ops.segment_sum``
+(or max) back into nodes — this module is the system's SpMM/SDDMM layer
+(kernel_taxonomy §GNN).  All shapes static; padded edges carry a mask.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def segment_softmax(scores, seg_ids, n_segments, mask=None):
+    """Softmax over entries grouped by seg_ids (edge-softmax for GAT)."""
+    scores = scores.astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    smax = jax.ops.segment_max(scores, seg_ids, num_segments=n_segments)
+    smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
+    ex = jnp.exp(scores - smax[seg_ids])
+    if mask is not None:
+        ex = jnp.where(mask, ex, 0.0)
+    denom = jax.ops.segment_sum(ex, seg_ids, num_segments=n_segments)
+    return ex / jnp.maximum(denom[seg_ids], 1e-9)
+
+
+def aggregate(msgs, dst, n_nodes, agg="sum", mask=None):
+    """Scatter-aggregate edge messages into destination nodes."""
+    if mask is not None:
+        msgs = jnp.where(mask[:, None], msgs, 0.0)
+    if agg == "sum":
+        return jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+    if agg == "mean":
+        s = jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+        ones = jnp.ones(msgs.shape[0], msgs.dtype)
+        if mask is not None:
+            ones = jnp.where(mask, ones, 0.0)
+        cnt = jax.ops.segment_sum(ones, dst, num_segments=n_nodes)
+        return s / jnp.maximum(cnt[:, None], 1.0)
+    if agg == "max":
+        if mask is not None:
+            msgs = jnp.where(mask[:, None], msgs, -1e30)
+        out = jax.ops.segment_max(msgs, dst, num_segments=n_nodes)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(agg)
+
+
+def mlp(params: list, x, act=jax.nn.relu, final_act=False):
+    for i, (w, b) in enumerate(params):
+        x = x @ w + b
+        if i < len(params) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def mlp_init(key, dims, dtype=jnp.float32):
+    ks = cm.split_keys(key, len(dims) - 1)
+    return [
+        (cm.dense_init(ks[i], (dims[i], dims[i + 1]), dtype=dtype),
+         jnp.zeros((dims[i + 1],), dtype))
+        for i in range(len(dims) - 1)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Layers used by the assigned archs
+# ---------------------------------------------------------------------------
+
+def sage_layer(params, h, src, dst, n_nodes, edge_mask=None, agg="mean"):
+    """GraphSAGE: h' = ReLU(W_self h ++ W_nbr mean_j h_j)."""
+    nbr = aggregate(h[src], dst, n_nodes, agg=agg, mask=edge_mask)
+    out = h @ params["w_self"] + nbr @ params["w_nbr"] + params["b"]
+    return jax.nn.relu(out)
+
+
+def gat_layer(params, h, src, dst, n_nodes, n_heads, d_head, edge_mask=None,
+              negative_slope=0.2, final=False):
+    """GAT: multi-head edge attention (SDDMM -> edge softmax -> SpMM)."""
+    H, Dh = n_heads, d_head
+    z = (h @ params["w"]).reshape(-1, H, Dh)           # (N, H, Dh)
+    a_src = jnp.einsum("nhd,hd->nh", z, params["a_src"])
+    a_dst = jnp.einsum("nhd,hd->nh", z, params["a_dst"])
+    e = jax.nn.leaky_relu(a_src[src] + a_dst[dst], negative_slope)  # (E, H)
+    alpha = jax.vmap(
+        lambda s: segment_softmax(s, dst, n_nodes, mask=edge_mask),
+        in_axes=1, out_axes=1,
+    )(e)                                               # (E, H)
+    msgs = z[src] * alpha[..., None]                   # (E, H, Dh)
+    out = aggregate(msgs.reshape(msgs.shape[0], -1), dst, n_nodes,
+                    agg="sum", mask=edge_mask).reshape(-1, H, Dh)
+    if final:
+        return out.mean(axis=1)                        # average heads
+    return jax.nn.elu(out.reshape(-1, H * Dh))

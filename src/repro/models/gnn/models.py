@@ -1,0 +1,377 @@
+"""The four assigned GNN architectures.
+
+Common batch format (static shapes, padded):
+  node_feat (N, F) f32 | edge_index (E, 2) int32 (src, dst, both directions
+  for undirected graphs) | edge_mask (E,) bool | node_mask (N,) bool |
+  labels (N,) int32 (node tasks) or (G,) f32 (graph tasks) |
+  label_mask | positions (N, 3) for geometric models (synthetic when the
+  assigned dataset has none — DESIGN.md §4).
+
+Each model: Config, init_params, forward, loss_fn, param_specs.
+Full-graph sharding: edge arrays P(dp), node arrays replicated (baseline) —
+the ring-schedule optimization lives in gnn/distributed.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models.common import dp_spec, shard
+from repro.models.gnn import layers as L
+from repro.models.gnn.wigner import rotation_to_z, wigner_stack
+
+
+# ---------------------------------------------------------------------------
+# MeshGraphNet  [arXiv:2010.03409]
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MeshGraphNetConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_node_in: int = 16
+    d_edge_in: int = 4      # relative position (3) + norm (1)
+    d_out: int = 3
+    aggregator: str = "sum"
+    edge_chunks: int = 1    # scan over edge chunks for huge graphs
+
+
+def _mgn_mlp_dims(cfg, d_in):
+    return [d_in] + [cfg.d_hidden] * cfg.mlp_layers
+
+
+def mgn_init(key, cfg: MeshGraphNetConfig):
+    ks = cm.split_keys(key, 2 * cfg.n_layers + 3)
+    params = {
+        "node_enc": L.mlp_init(ks[0], _mgn_mlp_dims(cfg, cfg.d_node_in)),
+        "edge_enc": L.mlp_init(ks[1], _mgn_mlp_dims(cfg, cfg.d_edge_in)),
+        "decoder": L.mlp_init(ks[2], [cfg.d_hidden] * cfg.mlp_layers + [cfg.d_out]),
+        "blocks": [],
+    }
+    for i in range(cfg.n_layers):
+        params["blocks"].append({
+            "edge_mlp": L.mlp_init(ks[3 + 2 * i], _mgn_mlp_dims(cfg, 3 * cfg.d_hidden)),
+            "node_mlp": L.mlp_init(ks[4 + 2 * i], _mgn_mlp_dims(cfg, 2 * cfg.d_hidden)),
+        })
+    return params
+
+
+def _edge_spec():
+    """Edge arrays shard over every mesh axis (pure edge parallelism)."""
+    from repro.models.common import mesh_axis_names
+
+    ax = tuple(a for a in ("pod", "data", "model") if a in mesh_axis_names())
+    return P(ax if len(ax) > 1 else (ax[0] if ax else None), None)
+
+
+def mgn_forward(params, batch, cfg: MeshGraphNetConfig):
+    src, dst = batch["edge_index"][:, 0], batch["edge_index"][:, 1]
+    emask = batch.get("edge_mask")
+    n = batch["node_feat"].shape[0]
+    h = L.mlp(params["node_enc"], batch["node_feat"])
+    e = L.mlp(params["edge_enc"], batch["edge_feat"])
+    e = shard(e, _edge_spec())
+    # node state sharded too: with 15 layers of remat-saved node buffers,
+    # replicated (N, C) states blow past HBM on ogb_products (§Perf P8)
+    h = shard(h, _edge_spec())
+
+    def block(carry, blk):
+        h, e = carry
+        e_in = jnp.concatenate([e, h[src], h[dst]], axis=-1)
+        e = shard(e + L.mlp(blk["edge_mlp"], e_in), _edge_spec())
+        agg = L.aggregate(e, dst, n, agg=cfg.aggregator, mask=emask)
+        h = shard(h + L.mlp(blk["node_mlp"],
+                            jnp.concatenate([h, agg], axis=-1)), _edge_spec())
+        return (h, e)
+
+    for blk in params["blocks"]:
+        h, e = jax.checkpoint(block)((h, e), blk)
+    return L.mlp(params["decoder"], h)
+
+
+def mgn_loss(params, batch, cfg):
+    out = mgn_forward(params, batch, cfg)
+    err = jnp.square(out - batch["targets"])
+    if batch.get("node_mask") is not None:
+        err = err * batch["node_mask"][:, None]
+        return err.sum() / jnp.maximum(batch["node_mask"].sum() * cfg.d_out, 1.0)
+    return err.mean()
+
+
+# ---------------------------------------------------------------------------
+# GraphSAGE  [arXiv:1706.02216]
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GraphSAGEConfig:
+    name: str = "graphsage"
+    n_layers: int = 2
+    d_hidden: int = 128
+    d_in: int = 602
+    n_classes: int = 41
+    aggregator: str = "mean"
+
+
+def sage_init(key, cfg: GraphSAGEConfig):
+    ks = cm.split_keys(key, cfg.n_layers + 1)
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.d_hidden]
+    layers = []
+    for i in range(cfg.n_layers):
+        k1, k2 = jax.random.split(ks[i])
+        layers.append({
+            "w_self": cm.dense_init(k1, (dims[i], dims[i + 1])),
+            "w_nbr": cm.dense_init(k2, (dims[i], dims[i + 1])),
+            "b": jnp.zeros((dims[i + 1],)),
+        })
+    return {"layers": layers,
+            "head": cm.dense_init(ks[-1], (cfg.d_hidden, cfg.n_classes))}
+
+
+def sage_forward(params, batch, cfg: GraphSAGEConfig):
+    src, dst = batch["edge_index"][:, 0], batch["edge_index"][:, 1]
+    h = batch["node_feat"]
+    n = h.shape[0]
+    for lp in params["layers"]:
+        h = L.sage_layer(lp, h, src, dst, n, batch.get("edge_mask"),
+                         agg=cfg.aggregator)
+        h = shard(h, dp_spec(None))
+    return h @ params["head"]
+
+
+def sage_loss(params, batch, cfg):
+    logits = sage_forward(params, batch, cfg)
+    return cm.cross_entropy(logits, batch["labels"], batch.get("label_mask"))
+
+
+# ---------------------------------------------------------------------------
+# GAT  [arXiv:1710.10903]
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat"
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_in: int = 1433
+    n_classes: int = 7
+
+
+def gat_init(key, cfg: GATConfig):
+    ks = cm.split_keys(key, cfg.n_layers)
+    layers = []
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        final = i == cfg.n_layers - 1
+        heads = cfg.n_heads
+        d_head = cfg.n_classes if final else cfg.d_hidden
+        k1, k2, k3 = jax.random.split(ks[i], 3)
+        layers.append({
+            "w": cm.dense_init(k1, (d_in, heads * d_head)),
+            "a_src": cm.dense_init(k2, (heads, d_head)),
+            "a_dst": cm.dense_init(k3, (heads, d_head)),
+        })
+        d_in = heads * d_head
+    return {"layers": layers}
+
+
+def _gat_layer_dims(cfg: "GATConfig", i: int):
+    final = i == cfg.n_layers - 1
+    return cfg.n_heads, (cfg.n_classes if final else cfg.d_hidden), final
+
+
+def gat_forward(params, batch, cfg: GATConfig):
+    src, dst = batch["edge_index"][:, 0], batch["edge_index"][:, 1]
+    h = batch["node_feat"]
+    n = h.shape[0]
+    for i, lp in enumerate(params["layers"]):
+        heads, dh, final = _gat_layer_dims(cfg, i)
+        h = L.gat_layer(lp, h, src, dst, n, heads, dh,
+                        batch.get("edge_mask"), final=final)
+        h = shard(h, dp_spec(None))
+    return h
+
+
+def gat_loss(params, batch, cfg):
+    logits = gat_forward(params, batch, cfg)
+    return cm.cross_entropy(logits, batch["labels"], batch.get("label_mask"))
+
+
+# ---------------------------------------------------------------------------
+# EquiformerV2 (eSCN SO(2) convolutions)  [arXiv:2306.12059]
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EquiformerV2Config:
+    name: str = "equiformer_v2"
+    n_layers: int = 12
+    d_hidden: int = 128      # channels per irrep slot
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    d_in: int = 16           # scalar input features
+    d_out: int = 1           # graph/node scalar output
+    n_rbf: int = 16
+    edge_chunks: int = 1     # scan over edge chunks (memory control)
+    ring_dtype: str = "f32"  # ring payload dtype ("bf16" halves ICI bytes)
+
+    @property
+    def n_sph(self) -> int:
+        return (self.l_max + 1) ** 2
+
+
+def _sph_index(l, m):
+    return l * l + l + m
+
+
+def _m_slots(cfg, m):
+    """Irrep slots with degree >= m (the SO(2) conv operand rows for |m|=m)."""
+    return [_sph_index(l, m) for l in range(m, cfg.l_max + 1)], \
+           [_sph_index(l, -m) for l in range(m, cfg.l_max + 1)]
+
+
+def eqv2_init(key, cfg: EquiformerV2Config):
+    C = cfg.d_hidden
+    ks = cm.split_keys(key, 4 * cfg.n_layers + 4)
+    params = {
+        "embed": cm.dense_init(ks[0], (cfg.d_in, C)),
+        "head": L.mlp_init(ks[1], [C, C, cfg.d_out]),
+        "blocks": [],
+    }
+    for i in range(cfg.n_layers):
+        kk = cm.split_keys(ks[2 + i], 8)
+        blk = {"rbf_mlp": L.mlp_init(kk[0], [cfg.n_rbf, C, (cfg.m_max + 1)]),
+               "attn_mlp": L.mlp_init(kk[1], [C + cfg.n_rbf, C, cfg.n_heads]),
+               "gate_mlp": L.mlp_init(kk[2], [C, C, cfg.l_max * C]),
+               "so2": {}}
+        for m in range(cfg.m_max + 1):
+            n_l = cfg.l_max + 1 - m
+            blk["so2"][f"wc_{m}"] = cm.dense_init(
+                kk[3 + m], (n_l, n_l, C, C), in_axis=-2)
+            if m > 0:
+                blk["so2"][f"ws_{m}"] = cm.dense_init(
+                    jax.random.fold_in(kk[3 + m], 1), (n_l, n_l, C, C), in_axis=-2)
+        params["blocks"].append(blk)
+    return params
+
+
+def _so2_conv(x_rot, blk, radial, cfg):
+    """x_rot: (E, S, C) features in edge-aligned frames; SO(2) m-mixing."""
+    C = cfg.d_hidden
+    y = jnp.zeros_like(x_rot)
+    for m in range(cfg.m_max + 1):
+        pos, neg = _m_slots(cfg, m)
+        r = radial[:, None, m:m + 1]                       # (E, 1, 1)
+        if m == 0:
+            xm = x_rot[:, pos, :]                          # (E, n_l, C)
+            ym = jnp.einsum("eic,iocd->eod", xm, blk["so2"]["wc_0"]) * r
+            y = y.at[:, pos, :].add(ym)
+        else:
+            xp = x_rot[:, pos, :]
+            xn = x_rot[:, neg, :]
+            wc, ws = blk["so2"][f"wc_{m}"], blk["so2"][f"ws_{m}"]
+            yp = (jnp.einsum("eic,iocd->eod", xp, wc)
+                  - jnp.einsum("eic,iocd->eod", xn, ws)) * r
+            yn = (jnp.einsum("eic,iocd->eod", xp, ws)
+                  + jnp.einsum("eic,iocd->eod", xn, wc)) * r
+            y = y.at[:, pos, :].add(yp)
+            y = y.at[:, neg, :].add(yn)
+    return y
+
+
+def _rbf(dist, n_rbf, cutoff=5.0):
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    return jnp.exp(-((dist[:, None] - centers) ** 2) / (cutoff / n_rbf) ** 2)
+
+
+def eqv2_forward(params, batch, cfg: EquiformerV2Config):
+    src, dst = batch["edge_index"][:, 0], batch["edge_index"][:, 1]
+    emask = batch.get("edge_mask")
+    pos = batch["positions"]
+    n = batch["node_feat"].shape[0]
+    C, S = cfg.d_hidden, cfg.n_sph
+    E = src.shape[0]
+
+    x = jnp.zeros((n, S, C))
+    x = x.at[:, 0, :].set(batch["node_feat"] @ params["embed"])
+
+    d_vec = pos[dst] - pos[src]
+    dist = jnp.linalg.norm(d_vec, axis=-1) + 1e-9
+    rbf = _rbf(dist, cfg.n_rbf)
+    Rz = rotation_to_z(d_vec)
+    D = wigner_stack(Rz, cfg.l_max)                       # (E, S, S)
+
+    def edge_messages(x, blk):
+        def chunk_fn(carry, idx):
+            s, d_, Dc, rbfc, maskc = idx
+            xr = jnp.einsum("est,etc->esc", Dc, x[s])     # rotate to edge frame
+            radial = L.mlp(blk["rbf_mlp"], rbfc)          # (Ec, m_max+1)
+            y = _so2_conv(xr, blk, radial, cfg)
+            msg = jnp.einsum("ets,etc->esc", Dc, y)       # rotate back (D^T)
+            # invariant attention over incoming edges (logits soft-clipped so
+            # the ring path can normalize with raw exp; source scalars + rbf
+            # only, so the logits are computable at the source owner)
+            att_in = jnp.concatenate([x[s][:, 0], rbfc], axis=-1)
+            logit = L.mlp(blk["attn_mlp"], att_in)        # (Ec, heads)
+            logit = 10.0 * jnp.tanh(logit / 10.0)
+            return carry, (msg, logit, d_, maskc)
+
+        if cfg.edge_chunks <= 1:
+            _, (msg, logit, d_, maskc) = chunk_fn(
+                None, (src, dst, D, rbf,
+                       emask if emask is not None else jnp.ones(E, bool)))
+        else:
+            k = cfg.edge_chunks
+            Ec = E // k
+            resh = lambda a: a.reshape((k, Ec) + a.shape[1:])
+            _, (msg, logit, d_, maskc) = jax.lax.scan(
+                chunk_fn, None,
+                (resh(src), resh(dst), resh(D), resh(rbf),
+                 resh(emask if emask is not None else jnp.ones(E, bool))))
+            msg = msg.reshape((E,) + msg.shape[2:])
+            logit = logit.reshape((E,) + logit.shape[2:])
+            d_ = d_.reshape((E,))
+            maskc = maskc.reshape((E,))
+        return msg, logit, d_, maskc
+
+    def one_block(x, blk):
+        msg, logit, d_, maskc = edge_messages(x, blk)
+        alpha = jax.vmap(lambda s: L.segment_softmax(s, d_, n, mask=maskc),
+                         in_axes=1, out_axes=1)(logit)     # (E, heads)
+        hd = C // cfg.n_heads
+        msg_h = msg.reshape(E, S, cfg.n_heads, hd) * alpha[:, None, :, None]
+        agg = L.aggregate(msg_h.reshape(E, -1), d_, n, agg="sum", mask=maskc)
+        agg = agg.reshape(n, S, C)
+        # gated nonlinearity: scalars gate the l>0 channels
+        gates = jax.nn.sigmoid(
+            L.mlp(blk["gate_mlp"], agg[:, 0]).reshape(n, cfg.l_max, C))
+        gated = [jax.nn.silu(agg[:, 0:1])]
+        for l in range(1, cfg.l_max + 1):
+            sl = slice(l * l, (l + 1) * (l + 1))
+            gated.append(agg[:, sl] * gates[:, None, l - 1])
+        return x + jnp.concatenate(gated, axis=1)
+
+    for blk in params["blocks"]:
+        x = jax.checkpoint(one_block)(x, blk)
+    return L.mlp(params["head"], x[:, 0])                  # invariant readout
+
+
+def eqv2_loss(params, batch, cfg):
+    out = eqv2_forward(params, batch, cfg)
+    if out.shape[-1] == 1:
+        err = jnp.square(out[:, 0] - batch["targets"])
+        if batch.get("node_mask") is not None:
+            err = err * batch["node_mask"]
+            return err.sum() / jnp.maximum(batch["node_mask"].sum(), 1.0)
+        return err.mean()
+    return cm.cross_entropy(out, batch["labels"], batch.get("label_mask"))

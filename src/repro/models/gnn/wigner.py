@@ -1,0 +1,150 @@
+"""Real-spherical-harmonic rotation matrices (Wigner D, real basis).
+
+Ivanic & Ruedenberg recursion ("Rotation Matrices for Real Spherical
+Harmonics", J. Phys. Chem. 1996 + 1998 erratum): D^l is built from D^{l-1}
+and the l=1 rotation, elementwise, with static Python loops over (l, m, n)
+— fully vectorizable over a batch of rotations (one per graph edge).
+
+Convention: real SH index order within degree l is m = -l..l; the l=1 block
+in this basis equals the 3x3 rotation conjugated by the (y, z, x) axis
+permutation.  ``wigner_stack`` returns the block-diagonal (S, S) matrix for
+S = (l_max+1)^2, the layout used by the eSCN layer.
+
+Used by equiformer-v2: rotate features into the edge-aligned frame, mix
+SO(2) (m-diagonal) there, rotate back — the O(L^6) -> O(L^3) trick
+[arXiv:2302.03655, arXiv:2306.12059].
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _delta(a, b):
+    return 1.0 if a == b else 0.0
+
+
+def _uvw(l: int, m: int, n: int):
+    """Recursion coefficients u, v, w (Table 1 of Ivanic–Ruedenberg)."""
+    am = abs(m)
+    if abs(n) < l:
+        d = (l + n) * (l - n)
+    else:
+        d = (2 * l) * (2 * l - 1)
+    u = math.sqrt((l + m) * (l - m) / d)
+    v = 0.5 * math.sqrt((1 + _delta(m, 0)) * (l + am - 1) * (l + am) / d) \
+        * (1 - 2 * _delta(m, 0))
+    w = -0.5 * math.sqrt((l - am - 1) * (l - am) / d) * (1 - _delta(m, 0))
+    return u, v, w
+
+
+def _get(M, l, a, b):
+    """Entry M^l_{a,b} (batched (..., 2l+1, 2l+1)); 0 if out of range."""
+    if abs(a) > l or abs(b) > l:
+        return 0.0
+    return M[..., a + l, b + l]
+
+
+def _P(i, l, a, b, r, Mprev):
+    """Helper P_i(l; a, b) of the recursion; r is the l=1 block."""
+    if b == -l:
+        return (_get(r, 1, i, 1) * _get(Mprev, l - 1, a, -l + 1)
+                + _get(r, 1, i, -1) * _get(Mprev, l - 1, a, l - 1))
+    if b == l:
+        return (_get(r, 1, i, 1) * _get(Mprev, l - 1, a, l - 1)
+                - _get(r, 1, i, -1) * _get(Mprev, l - 1, a, -l + 1))
+    return _get(r, 1, i, 0) * _get(Mprev, l - 1, a, b)
+
+
+def _rot_to_sh1(R):
+    """3x3 rotation -> l=1 real-SH block (basis order y, z, x).
+
+    R maps column vectors (x, y, z); in the SH basis (m=-1,0,1)=(y,z,x):
+    D^1 = Pinv R P with P the (x,y,z)->(y,z,x) permutation.
+    """
+    # D1[i, j] = R[axis(i), axis(j)] with axis map m=-1->y(1), 0->z(2), 1->x(0)
+    perm = jnp.array([1, 2, 0])
+    return R[..., perm[:, None], perm[None, :]]
+
+
+def wigner_blocks(R: jnp.ndarray, l_max: int):
+    """Per-degree rotation blocks [D^0, D^1, ..., D^{l_max}].
+
+    R: (..., 3, 3) rotation matrices.  Returns list of (..., 2l+1, 2l+1).
+    """
+    batch = R.shape[:-2]
+    blocks = [jnp.ones(batch + (1, 1), R.dtype)]
+    if l_max == 0:
+        return blocks
+    r = _rot_to_sh1(R)
+    blocks.append(r)
+    Mprev = r
+    for l in range(2, l_max + 1):
+        rows = []
+        for m in range(-l, l + 1):
+            cols = []
+            for n in range(-l, l + 1):
+                u, v, w = _uvw(l, m, n)
+                am = abs(m)
+                val = 0.0
+                if u != 0.0:
+                    val = val + u * _P(0, l, m, n, r, Mprev)
+                if v != 0.0:
+                    if m == 0:
+                        Vmn = _P(1, l, 1, n, r, Mprev) + _P(-1, l, -1, n, r, Mprev)
+                    elif m > 0:
+                        Vmn = (_P(1, l, m - 1, n, r, Mprev)
+                               * math.sqrt(1 + _delta(m, 1))
+                               - _P(-1, l, -m + 1, n, r, Mprev)
+                               * (1 - _delta(m, 1)))
+                    else:
+                        Vmn = (_P(1, l, m + 1, n, r, Mprev)
+                               * (1 - _delta(m, -1))
+                               + _P(-1, l, -m - 1, n, r, Mprev)
+                               * math.sqrt(1 + _delta(m, -1)))
+                    val = val + v * Vmn
+                if w != 0.0:
+                    if m > 0:
+                        Wmn = (_P(1, l, m + 1, n, r, Mprev)
+                               + _P(-1, l, -m - 1, n, r, Mprev))
+                    else:
+                        Wmn = (_P(1, l, m - 1, n, r, Mprev)
+                               - _P(-1, l, -m + 1, n, r, Mprev))
+                    val = val + w * Wmn
+                cols.append(val)
+            rows.append(jnp.stack(cols, axis=-1))
+        M = jnp.stack(rows, axis=-2)
+        blocks.append(M)
+        Mprev = M
+    return blocks
+
+
+def wigner_stack(R: jnp.ndarray, l_max: int) -> jnp.ndarray:
+    """Block-diagonal (..., S, S) rotation over all degrees, S=(l_max+1)^2."""
+    blocks = wigner_blocks(R, l_max)
+    S = (l_max + 1) ** 2
+    batch = R.shape[:-2]
+    out = jnp.zeros(batch + (S, S), R.dtype)
+    off = 0
+    for l, B in enumerate(blocks):
+        w = 2 * l + 1
+        out = out.at[..., off:off + w, off:off + w].set(B)
+        off += w
+    return out
+
+
+def rotation_to_z(d: jnp.ndarray, eps: float = 1e-9) -> jnp.ndarray:
+    """Rotation R with R @ d_hat = z_hat (rows are the new frame axes)."""
+    d = d / (jnp.linalg.norm(d, axis=-1, keepdims=True) + eps)
+    ref = jnp.where(
+        (jnp.abs(d[..., 2:3]) > 0.99), jnp.array([1.0, 0.0, 0.0], d.dtype),
+        jnp.array([0.0, 0.0, 1.0], d.dtype),
+    )
+    x = ref - d * jnp.sum(ref * d, axis=-1, keepdims=True)
+    x = x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + eps)
+    y = jnp.cross(d, x)
+    return jnp.stack([x, y, d], axis=-2)   # rows: x', y', z'=d

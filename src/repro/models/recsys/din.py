@@ -1,0 +1,134 @@
+"""Deep Interest Network [arXiv:1706.06978] — the assigned recsys arch.
+
+Exact assigned dims: embed_dim=18, seq_len=100, attn MLP 80-40,
+final MLP 200-80, target attention interaction.  Vocabulary sizes follow
+the DIN paper's scale (10M items / 1k categories; DESIGN.md §7).
+
+Shapes served: train_batch (B=65536 BCE training), serve_p99 (B=512),
+serve_bulk (B=262144), retrieval_cand (1 user × 1M candidates, scored by
+chunked scan — a batched-dot-plus-attention sweep, not a loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models.common import dp_spec, shard
+from repro.models.gnn.layers import mlp, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    n_items: int = 10_000_000
+    n_cats: int = 1_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: tuple = (80, 40)
+    mlp: tuple = (200, 80)
+    cand_chunks: int = 1024       # scan chunks for retrieval scoring
+    sharded_tables: bool = True   # use the shard_map lookup path
+
+    def param_count(self) -> int:
+        d = self.embed_dim
+        attn = (4 * d + 1) * self.attn_mlp[0] + \
+               (self.attn_mlp[0] + 1) * self.attn_mlp[1] + self.attn_mlp[1] + 1
+        head_in = 3 * d
+        head = (head_in + 1) * self.mlp[0] + (self.mlp[0] + 1) * self.mlp[1] \
+               + self.mlp[1] + 1
+        return (self.n_items + self.n_cats) * d + attn + head
+
+
+def din_init(key, cfg: DINConfig):
+    ks = cm.split_keys(key, 4)
+    d = cfg.embed_dim
+    return {
+        "item_emb": cm.embed_init(ks[0], (cfg.n_items, d)),
+        "cat_emb": cm.embed_init(ks[1], (cfg.n_cats, d)),
+        "attn": mlp_init(ks[2], [4 * d, *cfg.attn_mlp, 1]),
+        "head": mlp_init(ks[3], [3 * d, *cfg.mlp, 1]),
+    }
+
+
+def param_specs(cfg: DINConfig):
+    return {
+        "item_emb": P("model", None),
+        "cat_emb": P(None, None),       # tiny: replicate
+        "attn": [(P(None, None), P(None))] * 3,
+        "head": [(P(None, None), P(None))] * 3,
+    }
+
+
+def _lookup(params, cfg, item_ids, cat_ids):
+    from repro.models.recsys import embedding as emb
+
+    if cfg.sharded_tables and cm.current_mesh() is not None:
+        e_i = emb.sharded_lookup(params["item_emb"], item_ids)
+    else:
+        e_i = jnp.take(params["item_emb"], item_ids, axis=0)
+    e_c = jnp.take(params["cat_emb"], cat_ids, axis=0)
+    return e_i + e_c
+
+
+def _target_attention(params, e_hist, hist_mask, e_cand):
+    """DIN's adaptive interest: a(e_h, e_c) MLP, un-normalized weighted sum."""
+    L = e_hist.shape[-2]
+    e_c = jnp.broadcast_to(e_cand[..., None, :], e_hist.shape)
+    feats = jnp.concatenate(
+        [e_hist, e_c, e_hist - e_c, e_hist * e_c], axis=-1)
+    w = mlp(params["attn"], feats)[..., 0]               # (..., L)
+    w = jax.nn.sigmoid(w) * hist_mask
+    return jnp.einsum("...l,...ld->...d", w, e_hist)
+
+
+def din_scores(params, batch, cfg: DINConfig):
+    """Click logits: batch has hist_items/hist_cats (B, L), cand_item/cat (B,)."""
+    e_hist = _lookup(params, cfg, batch["hist_items"], batch["hist_cats"])
+    e_cand = _lookup(params, cfg, batch["cand_item"], batch["cand_cat"])
+    mask = batch.get("hist_mask")
+    if mask is None:
+        mask = jnp.ones(batch["hist_items"].shape, jnp.float32)
+    e_hist = shard(e_hist, dp_spec(None, None))
+    user = _target_attention(params, e_hist, mask, e_cand)
+    z = jnp.concatenate([user, e_cand, user * e_cand], axis=-1)
+    return mlp(params["head"], z)[..., 0]
+
+
+def din_loss(params, batch, cfg: DINConfig):
+    logits = din_scores(params, batch, cfg)
+    return cm.bce_with_logits(logits, batch["label"])
+
+
+def din_retrieval(params, batch, cfg: DINConfig):
+    """Score 1M candidates for one user: chunked scan (batched dot+attn)."""
+    e_hist = _lookup(params, cfg, batch["hist_items"], batch["hist_cats"])  # (1, L, D)
+    mask = batch.get("hist_mask")
+    if mask is None:
+        mask = jnp.ones(batch["hist_items"].shape, jnp.float32)
+    cand_items = batch["cand_items"]          # (Ncand,)
+    cand_cats = batch["cand_cats"]
+    n = cand_items.shape[0]
+    k = cfg.cand_chunks
+    assert n % k == 0, (n, k)
+
+    def chunk(carry, ids):
+        ci, cc = ids
+        e_c = _lookup(params, cfg, ci, cc)                 # (nc, D)
+        eh = jnp.broadcast_to(e_hist, (e_c.shape[0],) + e_hist.shape[1:])
+        mm = jnp.broadcast_to(mask, (e_c.shape[0],) + mask.shape[1:])
+        user = _target_attention(params, eh, mm, e_c)
+        z = jnp.concatenate([user, e_c, user * e_c], axis=-1)
+        return carry, mlp(params["head"], z)[..., 0]
+
+    _, scores = jax.lax.scan(
+        chunk, None,
+        (cand_items.reshape(k, n // k), cand_cats.reshape(k, n // k)),
+    )
+    return scores.reshape(n)

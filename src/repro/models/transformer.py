@@ -1,0 +1,573 @@
+"""Decoder-only LM family: GQA (+optional QKV bias), RoPE, local:global
+attention mixes, dense SwiGLU or MoE FFN, KV-cache serving.
+
+Covers the five assigned LM architectures (qwen2.5-14b, gemma3-4b,
+granite-8b, phi3.5-moe, moonshot-v1-16b-a3b) from one configurable stack:
+
+* layers are stored stacked (leading L dim) and executed with
+  ``lax.scan`` over *periods* of the layer-kind pattern (gemma3's 5 local : 1
+  global becomes period = 6 with an unrolled pattern inside the scan body) —
+  scan keeps compile time flat across 48-layer configs;
+* per-layer remat (configurable policy) + microbatch gradient accumulation
+  bound activation memory (the fits-in-fast-memory discipline, DESIGN.md §2);
+* tensor parallelism Megatron-style over the ``model`` axis (heads / ffn /
+  vocab), data parallelism over ``pod``×``data``; activation sharding is
+  annotated with ``common.shard`` so the same code runs unsharded on CPU;
+* MoE: top-k routing with capacity dispatch into an (E, C, D) buffer that is
+  expert-sharded over ``model`` (expert parallelism), optional shared
+  experts (moonshot / DeepSeek style);
+* serving: ``prefill`` (flash-attention path) returns a KV cache + last
+  logits; ``decode_step`` appends one token; the cache seq dim is sharded
+  over ``model`` (flash-decoding style partial softmax via XLA collectives).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models.common import dp_spec, shard
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_q: int = 4
+    n_kv: int = 2
+    d_head: int = 64
+    d_ff: int = 1024
+    vocab: int = 1024
+    qkv_bias: bool = False
+    tie_embed: bool = False
+    # attention pattern: tuple over one period, e.g. ("full",) or
+    # ("local",)*5 + ("global",); "local" uses sliding window.
+    pattern: tuple = ("full",)
+    window: int = 1024
+    rope_theta: float = 10_000.0
+    rope_theta_local: float = 10_000.0
+    # MoE (n_experts == 0 -> dense)
+    n_experts: int = 0
+    top_k: int = 2
+    d_ff_expert: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # numerics / execution
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-6
+    remat: bool = True
+    remat_policy: str = "full"          # "full" | "dots" | "none"
+    microbatches: int = 1
+    seq_shard_activations: bool = False  # sequence-parallel residuals
+    use_flash_kernel: bool = False       # Pallas path (real TPU / tests)
+    flash_block: int = 512
+    attn_chunk: int = 1024               # > this seq len: chunked/banded attn
+
+    @property
+    def moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def n_periods(self) -> int:
+        """Full pattern periods (scanned); the remainder is unrolled."""
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def n_remainder(self) -> int:
+        return self.n_layers % len(self.pattern)
+
+    def param_count(self) -> int:
+        d, dh = self.d_model, self.d_head
+        attn = d * (self.n_q + 2 * self.n_kv) * dh + self.n_q * dh * d
+        if self.qkv_bias:
+            attn += (self.n_q + 2 * self.n_kv) * dh
+        if self.moe:
+            ff = self.n_experts * 3 * d * self.d_ff_expert + d * self.n_experts
+            ff += self.n_shared_experts * 3 * d * self.d_ff_expert
+        else:
+            ff = 3 * d * self.d_ff
+        per_layer = attn + ff + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embed else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def active_param_count(self) -> int:
+        """6*N_active*D convention for the MoE roofline (DESIGN/EXPERIMENTS)."""
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        dense_like = dataclasses.replace(self, n_experts=0, d_ff=0).param_count()
+        ff_active = (self.top_k + self.n_shared_experts) * 3 * d * self.d_ff_expert
+        ff_active += d * self.n_experts  # router
+        return dense_like + self.n_layers * ff_active
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: LMConfig):
+    L, d, dh = cfg.n_layers, cfg.d_model, cfg.d_head
+    ks = cm.split_keys(key, 16)
+    pd = cfg.param_dtype
+    layers: dict[str, jnp.ndarray] = {
+        "ln1": jnp.zeros((L, d), pd),
+        "ln2": jnp.zeros((L, d), pd),
+        "wq": cm.dense_init(ks[0], (L, d, cfg.n_q * dh), dtype=pd),
+        "wk": cm.dense_init(ks[1], (L, d, cfg.n_kv * dh), dtype=pd),
+        "wv": cm.dense_init(ks[2], (L, d, cfg.n_kv * dh), dtype=pd),
+        "wo": cm.dense_init(ks[3], (L, cfg.n_q * dh, d), dtype=pd),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = jnp.zeros((L, cfg.n_q * dh), pd)
+        layers["bk"] = jnp.zeros((L, cfg.n_kv * dh), pd)
+        layers["bv"] = jnp.zeros((L, cfg.n_kv * dh), pd)
+    if cfg.moe:
+        E, fe = cfg.n_experts, cfg.d_ff_expert
+        layers["router"] = cm.dense_init(ks[4], (L, d, E), dtype=jnp.float32)
+        layers["we_gate"] = cm.dense_init(ks[5], (L, E, d, fe), in_axis=-2, dtype=pd)
+        layers["we_up"] = cm.dense_init(ks[6], (L, E, d, fe), in_axis=-2, dtype=pd)
+        layers["we_down"] = cm.dense_init(ks[7], (L, E, fe, d), in_axis=-2, dtype=pd)
+        if cfg.n_shared_experts:
+            fs = fe * cfg.n_shared_experts
+            layers["ws_gate"] = cm.dense_init(ks[8], (L, d, fs), dtype=pd)
+            layers["ws_up"] = cm.dense_init(ks[9], (L, d, fs), dtype=pd)
+            layers["ws_down"] = cm.dense_init(ks[10], (L, fs, d), dtype=pd)
+    else:
+        layers["w_gate"] = cm.dense_init(ks[4], (L, d, cfg.d_ff), dtype=pd)
+        layers["w_up"] = cm.dense_init(ks[5], (L, d, cfg.d_ff), dtype=pd)
+        layers["w_down"] = cm.dense_init(ks[6], (L, cfg.d_ff, d), dtype=pd)
+    params = {
+        "embed": cm.embed_init(ks[11], (cfg.vocab, d), dtype=pd),
+        "final_norm": jnp.zeros((d,), pd),
+        "layers": layers,
+    }
+    if not cfg.tie_embed:
+        params["lm_head"] = cm.dense_init(ks[12], (d, cfg.vocab), dtype=pd)
+    return params
+
+
+def param_specs(cfg: LMConfig):
+    """PartitionSpecs mirroring init_params (Megatron TP over 'model')."""
+    specs_layers = {
+        "ln1": P(None, None),
+        "ln2": P(None, None),
+        "wq": P(None, None, "model"),
+        "wk": P(None, None, "model"),
+        "wv": P(None, None, "model"),
+        "wo": P(None, "model", None),
+    }
+    if cfg.qkv_bias:
+        specs_layers |= {"bq": P(None, "model"), "bk": P(None, "model"),
+                         "bv": P(None, "model")}
+    if cfg.moe:
+        specs_layers |= {
+            "router": P(None, None, None),
+            "we_gate": P(None, "model", None, None),
+            "we_up": P(None, "model", None, None),
+            "we_down": P(None, "model", None, None),
+        }
+        if cfg.n_shared_experts:
+            specs_layers |= {
+                "ws_gate": P(None, None, "model"),
+                "ws_up": P(None, None, "model"),
+                "ws_down": P(None, "model", None),
+            }
+    else:
+        specs_layers |= {
+            "w_gate": P(None, None, "model"),
+            "w_up": P(None, None, "model"),
+            "w_down": P(None, "model", None),
+        }
+    specs = {
+        "embed": P("model", None),
+        "final_norm": P(None),
+        "layers": specs_layers,
+    }
+    if not cfg.tie_embed:
+        specs["lm_head"] = P(None, "model")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _attention_full(q, k, v, positions_q, positions_kv, window, cfg):
+    """Reference-path attention: (B, S, H, D) layout; causal (+window)."""
+    b, sq, hq, dh = q.shape
+    skv = k.shape[1]
+    group = hq // k.shape[2]
+    kf = jnp.repeat(k, group, axis=2)
+    vf = jnp.repeat(v, group, axis=2)
+    scale = 1.0 / math.sqrt(dh)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kf.astype(jnp.float32)) * scale
+    mask = positions_kv[:, None, :] <= positions_q[:, :, None]   # (B, Sq, Skv)
+    if window is not None:
+        mask &= positions_kv[:, None, :] > positions_q[:, :, None] - window
+    logits = jnp.where(mask[:, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _decode_attention(q, ck, cv, pos, window, cfg):
+    """Flash-decoding style: grouped GQA einsum over the (seq-sharded)
+    cache — no KV repeat, softmax partials combine via XLA collectives.
+
+    q: (B, 1, Hq, D); ck/cv: (B, S, Hkv, D); pos: (B,) current position.
+    """
+    b, _, hq, dh = q.shape
+    s, hkv = ck.shape[1], ck.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, ck.astype(jnp.float32)) * scale
+    kvpos = jnp.arange(s, dtype=jnp.int32)
+    valid = kvpos[None, :] <= pos[:, None]
+    if window is not None:
+        valid &= kvpos[None, :] > pos[:, None] - window
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, cv.astype(jnp.float32))
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+def _attention(q, k, v, positions_q, positions_kv, window, cfg):
+    if cfg.use_flash_kernel and q.shape[1] == k.shape[1]:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        qt = q.transpose(0, 2, 1, 3)
+        kt = k.transpose(0, 2, 1, 3)
+        vt = v.transpose(0, 2, 1, 3)
+        o = flash_attention(qt, kt, vt, causal=True, window=window,
+                            bq=cfg.flash_block, bk=cfg.flash_block,
+                            interpret=True)
+        return o.transpose(0, 2, 1, 3)
+    s = q.shape[1]
+    if s > cfg.attn_chunk and s == k.shape[1]:
+        from repro.models import attention as att
+
+        if window is not None:
+            return att.banded_attention(q, k, v, window=window,
+                                        q_chunk=cfg.attn_chunk)
+        return att.chunked_attention(q, k, v, causal=True,
+                                     q_chunk=cfg.attn_chunk,
+                                     k_chunk=cfg.attn_chunk)
+    return _attention_full(q, k, v, positions_q, positions_kv, window, cfg)
+
+
+def _attn_block(x, lp, kind, positions, cfg, cache=None, cache_pos=None):
+    """x: (B, S, D).  Returns (out, new_kv) where new_kv is (k, v) to cache."""
+    b, s, d = x.shape
+    dh = cfg.d_head
+    h = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    # constrain the FLAT head dim (always divisible by the model axis —
+    # head counts like qwen's 40 q / 8 kv are not, and per-head constraints
+    # force involuntary resharding copies; EXPERIMENTS.md §Perf P2)
+    q = shard(q, dp_spec(None, "model"))
+    k = shard(k, dp_spec(None, "model"))
+    v = shard(v, dp_spec(None, "model"))
+    q = q.reshape(b, s, cfg.n_q, dh)
+    k = k.reshape(b, s, cfg.n_kv, dh)
+    v = v.reshape(b, s, cfg.n_kv, dh)
+    theta = cfg.rope_theta_local if kind == "local" else cfg.rope_theta
+    q = cm.apply_rope(q, positions, theta)
+    k = cm.apply_rope(k, positions, theta)
+    window = cfg.window if kind == "local" else None
+    if cache is None:
+        o = _attention(q, k, v, positions, positions, window, cfg)
+        new_kv = (k, v)
+    else:
+        ck, cv = cache                      # (B, Smax, n_kv, dh)
+        # shard-local cache insert: one-hot select along the (sharded) seq
+        # dim instead of dynamic_update_slice, which forces a resharding
+        # collective when seq is model-sharded (EXPERIMENTS.md §Perf).
+        sel = (jnp.arange(ck.shape[1], dtype=jnp.int32)
+               == cache_pos)[None, :, None, None]
+        ck = jnp.where(sel, k.astype(ck.dtype), ck)
+        cv = jnp.where(sel, v.astype(cv.dtype), cv)
+        o = _decode_attention(q, ck, cv, positions[:, -1], window, cfg)
+        new_kv = (ck, cv)
+    o = o.reshape(b, s, cfg.n_q * dh)
+    return (o @ lp["wo"]), new_kv
+
+
+# ---------------------------------------------------------------------------
+# FFN (dense / MoE)
+# ---------------------------------------------------------------------------
+
+def _dense_ffn(x, lp, cfg):
+    h = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    g = h @ lp["w_gate"]
+    u = h @ lp["w_up"]
+    g = shard(g, dp_spec(None, "model"))
+    return cm.swiglu(g, u) @ lp["w_down"]
+
+
+def _moe_ffn(x, lp, cfg):
+    """Top-k capacity dispatch; buffer expert-sharded over 'model'."""
+    b, s, d = x.shape
+    h = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    T = b * s
+    xt = h.reshape(T, d)
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(1, int(cfg.capacity_factor * T * K / E))
+    logits = (xt.astype(jnp.float32) @ lp["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    topw, tope = jax.lax.top_k(probs, K)                        # (T, K)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    fe = tope.reshape(-1)                                       # (T*K,)
+    ft = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    fw = topw.reshape(-1)
+    # rank of each slot within its expert (cumsum over one-hot)
+    oh = jax.nn.one_hot(fe, E, dtype=jnp.int32)                 # (T*K, E)
+    rank = (jnp.cumsum(oh, axis=0) - oh)[jnp.arange(T * K), fe]
+    keep = rank < C
+    slot = jnp.where(keep, fe * C + rank, E * C)                # drop slot
+    buf = jnp.zeros((E * C + 1, d), xt.dtype).at[slot].add(xt[ft])
+    buf = shard(buf[: E * C].reshape(E, C, d), P("model", None, None))
+    # constrain the expert einsum RESULTS as well: without this, SPMD
+    # partitions the expert matmuls over capacity and replicates experts
+    # across 'model' — a measured 14x forward-flop blowup (§Perf P7)
+    g = shard(jnp.einsum("ecd,edf->ecf", buf, lp["we_gate"]),
+              P("model", None, None))
+    u = shard(jnp.einsum("ecd,edf->ecf", buf, lp["we_up"]),
+              P("model", None, None))
+    y = jnp.einsum("ecf,efd->ecd", cm.swiglu(g, u), lp["we_down"])
+    y = shard(y, P("model", None, None)).reshape(E * C, d)
+    y = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], axis=0)
+    contrib = y[slot] * fw[:, None].astype(y.dtype)
+    out = jnp.zeros((T, d), xt.dtype).at[ft].add(contrib)
+    if cfg.n_shared_experts:
+        g = xt @ lp["ws_gate"]
+        u = xt @ lp["ws_up"]
+        out = out + cm.swiglu(g, u) @ lp["ws_down"]
+    # auxiliary load-balance loss (Switch-style), returned via stash
+    me = probs.mean(axis=0)
+    ce_frac = jnp.bincount(fe, length=E).astype(jnp.float32) / (T * K)
+    aux = E * jnp.sum(me * ce_frac)
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Layer stack (scan over periods)
+# ---------------------------------------------------------------------------
+
+def _period_params(params, cfg: LMConfig):
+    """Split stacked (L, ...) layer params into (scanned, remainder):
+    scanned (n_periods, p, ...) + remainder (n_remainder, ...) (e.g. gemma3's
+    34 = 5 full local:local:local:local:local:global periods + 4 layers)."""
+    p = len(cfg.pattern)
+    nf = cfg.n_periods * p
+    scanned = jax.tree.map(
+        lambda a: a[:nf].reshape((cfg.n_periods, p) + a.shape[1:]),
+        params["layers"])
+    rem = jax.tree.map(lambda a: a[nf:], params["layers"])
+    return scanned, rem
+
+
+def _residual_spec(cfg):
+    return dp_spec("model", None) if cfg.seq_shard_activations else dp_spec(None, None)
+
+
+def forward(params, tokens, cfg: LMConfig, positions=None):
+    """tokens (B, S) -> logits (B, S, V); training/prefill path."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    x = shard(x, _residual_spec(cfg))
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def one_layer(x, lp, kind):
+        a, _ = _attn_block(x, lp, kind, positions, cfg)
+        x = shard(x + a, _residual_spec(cfg))
+        if cfg.moe:
+            f, aux = _moe_ffn(x, lp, cfg)
+        else:
+            f, aux = _dense_ffn(x, lp, cfg), jnp.zeros((), jnp.float32)
+        x = shard(x + f, _residual_spec(cfg))
+        return x, aux
+
+    def apply_layer(x, lp, kind):
+        if cfg.remat and cfg.remat_policy != "none":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat_policy == "dots" else None)
+            return jax.checkpoint(partial(one_layer, kind=kind),
+                                  policy=policy)(x, lp)
+        return one_layer(x, lp, kind)
+
+    def period_body(carry, period_lp):
+        x, aux = carry
+        for j, kind in enumerate(cfg.pattern):
+            lp = jax.tree.map(lambda a: a[j], period_lp)
+            x, aux_j = apply_layer(x, lp, kind)
+            aux = aux + aux_j
+        return (x, aux), None
+
+    scanned, rem = _period_params(params, cfg)
+    (x, aux), _ = jax.lax.scan(period_body, (x, aux0), scanned)
+    for j in range(cfg.n_remainder):
+        lp = jax.tree.map(lambda a: a[j], rem)
+        x, aux_j = apply_layer(x, lp, cfg.pattern[j])
+        aux = aux + aux_j
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embed else params["lm_head"]
+    logits = x @ head.astype(cfg.compute_dtype)
+    logits = shard(logits, dp_spec(None, "model"))
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: LMConfig):
+    logits, aux = forward(params, batch["tokens"], cfg)
+    loss = cm.cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss + 0.01 * aux, {"loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def cache_specs(cfg: LMConfig, long_context: bool = False):
+    if long_context:  # batch too small to shard: shard seq over everything
+        seq = ("data", "model")
+        return {"k": P(None, None, seq, None, None),
+                "v": P(None, None, seq, None, None), "pos": P()}
+    return {"k": P(None, ("pod", "data"), "model", None, None),
+            "v": P(None, ("pod", "data"), "model", None, None),
+            "pos": P(("pod", "data"))}
+
+
+def prefill(params, tokens, cfg: LMConfig, max_seq: Optional[int] = None):
+    """Returns (cache filled for s positions, last-token logits)."""
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    x = shard(x, _residual_spec(cfg))
+
+    ks, vs = [], []
+
+    def one_layer(x, lp, kind):
+        a, (k, v) = _attn_block(x, lp, kind, positions, cfg)
+        x = shard(x + a, _residual_spec(cfg))
+        f = _moe_ffn(x, lp, cfg)[0] if cfg.moe else _dense_ffn(x, lp, cfg)
+        x = shard(x + f, _residual_spec(cfg))
+        return x, (k, v)
+
+    def period_body(x, period_lp):
+        kvs = []
+        for j, kind in enumerate(cfg.pattern):
+            lp = jax.tree.map(lambda a: a[j], period_lp)
+            fn = partial(one_layer, kind=kind)
+            if cfg.remat:
+                fn = jax.checkpoint(fn)
+            x, kv = fn(x, lp)
+            kvs.append(kv)
+        k = jnp.stack([k for k, _ in kvs])          # (p, B, S, n_kv, dh)
+        v = jnp.stack([v for _, v in kvs])
+        return x, (k, v)
+
+    scanned, rem = _period_params(params, cfg)
+    x, (k_all, v_all) = jax.lax.scan(period_body, x, scanned)
+    # (n_periods, p, B, S, ...) -> (nf, B, S, ...)
+    k_all = k_all.reshape((-1,) + k_all.shape[2:])
+    v_all = v_all.reshape((-1,) + v_all.shape[2:])
+    rem_k, rem_v = [], []
+    for j in range(cfg.n_remainder):
+        lp = jax.tree.map(lambda a: a[j], rem)
+        fn = partial(one_layer, kind=cfg.pattern[j])
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        x, (k, v) = fn(x, lp)
+        rem_k.append(k)
+        rem_v.append(v)
+    if rem_k:
+        k_all = jnp.concatenate([k_all, jnp.stack(rem_k)], axis=0)
+        v_all = jnp.concatenate([v_all, jnp.stack(rem_v)], axis=0)
+    pad = max_seq - s
+    if pad:
+        zeros = jnp.zeros(k_all.shape[:2] + (pad,) + k_all.shape[3:], k_all.dtype)
+        k_all = jnp.concatenate([k_all, zeros], axis=2)
+        v_all = jnp.concatenate([v_all, zeros], axis=2)
+    x = cm.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embed else params["lm_head"]
+    logits = x @ head.astype(cfg.compute_dtype)
+    cache = {"k": k_all, "v": v_all,
+             "pos": jnp.full((b,), s, jnp.int32)}
+    return cache, logits[:, 0]
+
+
+def decode_step(params, cache, tokens, cfg: LMConfig):
+    """One decode step: tokens (B,) -> (new_cache, logits (B, V))."""
+    b = tokens.shape[0]
+    pos = cache["pos"]                                   # (B,)
+    positions = pos[:, None]                             # (B, 1)
+    x = params["embed"].astype(cfg.compute_dtype)[tokens[:, None]]
+    cache_pos = pos[0]                                   # uniform batch pos
+
+    def one_layer(x, lp_kv, kind):
+        lp, (ck, cv) = lp_kv
+        a, (nk, nv) = _attn_block(x, lp, kind, positions, cfg,
+                                  cache=(ck, cv), cache_pos=cache_pos)
+        x = x + a
+        f = _moe_ffn(x, lp, cfg)[0] if cfg.moe else _dense_ffn(x, lp, cfg)
+        return x + f, (nk, nv)
+
+    p = len(cfg.pattern)
+    nf = cfg.n_periods * p
+    k_p = cache["k"][:nf].reshape((cfg.n_periods, p) + cache["k"].shape[1:])
+    v_p = cache["v"][:nf].reshape((cfg.n_periods, p) + cache["v"].shape[1:])
+
+    def period_body(x, scanned):
+        period_lp, ck, cv = scanned
+        nks, nvs = [], []
+        for j, kind in enumerate(cfg.pattern):
+            lp = jax.tree.map(lambda a: a[j], period_lp)
+            x, (nk, nv) = one_layer(x, (lp, (ck[j], cv[j])), kind)
+            nks.append(nk)
+            nvs.append(nv)
+        return x, (jnp.stack(nks), jnp.stack(nvs))
+
+    scanned_lp, rem_lp = _period_params(params, cfg)
+    x, (nk, nv) = jax.lax.scan(period_body, x, (scanned_lp, k_p, v_p))
+    nk = nk.reshape((nf,) + cache["k"].shape[1:])
+    nv = nv.reshape((nf,) + cache["v"].shape[1:])
+    rem_ks, rem_vs = [], []
+    for j in range(cfg.n_remainder):
+        lp = jax.tree.map(lambda a: a[j], rem_lp)
+        x, (k2, v2) = one_layer(
+            x, (lp, (cache["k"][nf + j], cache["v"][nf + j])), cfg.pattern[j])
+        rem_ks.append(k2)
+        rem_vs.append(v2)
+    if rem_ks:
+        nk = jnp.concatenate([nk, jnp.stack(rem_ks)], axis=0)
+        nv = jnp.concatenate([nv, jnp.stack(rem_vs)], axis=0)
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embed else params["lm_head"]
+    logits = (x @ head.astype(cfg.compute_dtype))[:, 0]
+    new_cache = {"k": nk, "v": nv, "pos": pos + 1}
+    return new_cache, logits

@@ -1,0 +1,132 @@
+"""AdamW + schedules + ZeRO-style state sharding (pure-JAX pytrees).
+
+Optimizer state is kept in f32 regardless of (bf16) param dtype; master
+f32 params are part of the state (mixed-precision training).  ``zero_specs``
+derives PartitionSpecs for the state that additionally shard over the data
+axes (ZeRO-1): for each param, the largest dim divisible by the data-axis
+product that is not already model-sharded gets the data axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init_state(params):
+    f32 = lambda x: x.astype(jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params),
+    }
+
+
+def clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def update(cfg: AdamWConfig, params, state, grads, decay_mask=None):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(master, m, v, g, do_decay):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if do_decay:
+            delta = delta + cfg.weight_decay * master
+        return master - lr * delta, m, v
+
+    if decay_mask is None:
+        decay_mask = jax.tree.map(lambda x: x.ndim >= 2, params)
+    flat_p, tree = jax.tree.flatten(state["master"])
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_g = jax.tree.leaves(grads)
+    flat_d = jax.tree.leaves(decay_mask)
+    new_p, new_m, new_v = [], [], []
+    for pp, mm, vv, gg, dd in zip(flat_p, flat_m, flat_v, flat_g, flat_d):
+        a, b, c = upd(pp, mm, vv, gg, dd)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    master = jax.tree.unflatten(tree, new_p)
+    new_state = {
+        "step": step,
+        "master": master,
+        "m": jax.tree.unflatten(tree, new_m),
+        "v": jax.tree.unflatten(tree, new_v),
+    }
+    cast = jax.tree.map(lambda mst, p: mst.astype(p.dtype), master, params)
+    return cast, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharding of the optimizer state
+# ---------------------------------------------------------------------------
+
+def zero_specs(param_specs, params_shape, data_axes=("pod", "data"),
+               data_size: int = 16):
+    """State PartitionSpecs: param spec + data axes on a free divisible dim.
+
+    param_specs / params_shape: pytrees matching params (specs, ShapeDtype).
+    """
+    def one(spec, arr):
+        shape = arr.shape
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (s, dim) in enumerate(zip(entries, shape)):
+            if s is None and dim % data_size == 0 and dim > 0:
+                entries[i] = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+                break
+        return P(*entries)
+
+    st = jax.tree.map(one, param_specs, params_shape,
+                      is_leaf=lambda x: isinstance(x, P))
+    return {
+        "step": P(),
+        "master": st,
+        "m": st,
+        "v": st,
+    }

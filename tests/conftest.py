@@ -1,0 +1,13 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_graph(rng, n, p):
+    mask = rng.random((n, n)) < p
+    iu = np.triu_indices(n, 1)
+    return np.stack(iu, 1)[mask[iu]]

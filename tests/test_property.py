@@ -1,0 +1,92 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as glib
+from repro.core.bottom_up import bottom_up_decompose
+from repro.core.peel import truss_decompose
+from repro.core.serial import alg2_truss
+from repro.core.support import edge_support_np
+from repro.core.top_down import upper_bounds
+
+
+@st.composite
+def graphs(draw, max_n=28):
+    n = draw(st.integers(3, max_n))
+    m_max = n * (n - 1) // 2
+    density = draw(st.floats(0.05, 0.7))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    iu = np.triu_indices(n, 1)
+    keep = rng.random(m_max) < density
+    return n, np.stack(iu, 1)[keep]
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs())
+def test_bulk_equals_serial(g):
+    n, edges = g
+    ce = glib.canonical_edges(edges, n)
+    if len(ce) == 0:
+        return
+    assert (truss_decompose(n, ce) == alg2_truss(n, ce)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(graphs(), st.sampled_from(["sequential", "random"]))
+def test_bottom_up_partition_invariance(g, partitioner):
+    """Result independent of partitioning choice/budget (Theorem 2)."""
+    n, edges = g
+    ce = glib.canonical_edges(edges, n)
+    if len(ce) < 4:
+        return
+    oracle = alg2_truss(n, ce)
+    res = bottom_up_decompose(n, ce, budget=max(6, len(ce) // 3),
+                              partitioner=partitioner)
+    assert (res.phi == oracle).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs())
+def test_classes_partition_edges(g):
+    """Phi_k for 2 <= k <= k_max partitions E (Definition 3)."""
+    n, edges = g
+    ce = glib.canonical_edges(edges, n)
+    if len(ce) == 0:
+        return
+    phi = truss_decompose(n, ce)
+    assert (phi >= 2).all()
+    # trussness of an edge is at most its support + 2
+    sup = edge_support_np(glib.build_graph(n, ce))
+    assert (phi <= sup + 2).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs())
+def test_bound_sandwich(g):
+    """phi(e) <= psi(e) (Lemma 2) for every edge."""
+    n, edges = g
+    ce = glib.canonical_edges(edges, n)
+    if len(ce) == 0:
+        return
+    oracle = alg2_truss(n, ce)
+    sup = edge_support_np(glib.build_graph(n, ce))
+    psi = upper_bounds(n, ce, sup)
+    assert (psi >= oracle).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(graphs(max_n=20), st.integers(0, 5))
+def test_subgraph_monotone(g, drop):
+    """Removing edges never increases trussness (Lemma 1 direction)."""
+    n, edges = g
+    ce = glib.canonical_edges(edges, n)
+    if len(ce) < drop + 2:
+        return
+    phi_full = alg2_truss(n, ce)
+    keep = np.ones(len(ce), bool)
+    keep[:drop] = False
+    sub = ce[keep]
+    phi_sub = alg2_truss(n, sub)
+    assert (phi_sub <= phi_full[keep]).all()

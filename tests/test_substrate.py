@@ -1,0 +1,161 @@
+"""Substrates: optimizer, compression, checkpointing, fault-tolerant loop."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as ckpt
+from repro.optim import adamw, compression
+from repro.runtime import train_loop as TL
+
+
+def test_adamw_converges_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, warmup_steps=5, total_steps=200,
+                            weight_decay=0.0)
+    target = jnp.asarray(np.random.default_rng(0).standard_normal(8), jnp.float32)
+    params = {"w": jnp.zeros(8)}
+    state = adamw.init_state(params)
+    loss = lambda p: jnp.sum(jnp.square(p["w"] - target))
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw.update(cfg, params, state, g)
+    assert float(loss(params)) < 1e-2
+
+
+def test_schedule_shape():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_frac=0.1)
+    lrs = [float(adamw.schedule(cfg, jnp.asarray(s))) for s in
+           [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0 and abs(lrs[2] - 1.0) < 1e-6
+    assert lrs[2] > lrs[3] > lrs[4] >= 0.1 - 1e-6
+
+
+def test_zero_specs_shard_free_dim():
+    from jax.sharding import PartitionSpec as P
+    specs = {"w": P(None, "model")}
+    shapes = {"w": jax.ShapeDtypeStruct((64, 128), jnp.float32)}
+    z = adamw.zero_specs(specs, shapes, data_axes=("data",), data_size=16)
+    assert z["master"]["w"] == P("data", "model")
+
+
+def test_compression_error_feedback_unbiased():
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(1000).astype(np.float32))
+    err = jnp.zeros(1000)
+    acc = jnp.zeros(1000)
+    for i in range(50):
+        q, scale, err = compression.ef_compress(g_true, err)
+        acc = acc + compression.dequantize(q, scale)
+    # error feedback: the running mean converges to the true gradient
+    np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g_true),
+                               atol=2e-3)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones(4, jnp.bfloat16)},
+            "step": jnp.asarray(7, jnp.int32)}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, tree, {"note": "x"})
+    like = jax.tree.map(lambda x: np.zeros(x.shape, x.dtype), tree)
+    out, meta = ckpt.restore(d, like)
+    assert meta["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_keep_k(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in range(5):
+        ckpt.save(d, s, {"x": jnp.zeros(1)}, keep=2)
+    assert ckpt.all_steps(d) == [3, 4]
+
+
+def test_checkpoint_atomic_tmp_ignored(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"x": jnp.zeros(1)})
+    os.makedirs(os.path.join(d, "step_0000000002.tmp"))  # simulated crash
+    assert ckpt.latest_step(d) == 1
+
+
+def test_fault_tolerant_loop(tmp_path):
+    d = str(tmp_path / "loop")
+    target = jnp.asarray([3.0, -2.0])
+    ocfg = adamw.AdamWConfig(lr=0.2, warmup_steps=1, total_steps=100,
+                             weight_decay=0.0)
+
+    def init_fn():
+        p = {"w": jnp.zeros(2)}
+        return {"params": p, "opt": adamw.init_state(p)}
+
+    @jax.jit
+    def step(state, batch):
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.sum(jnp.square(p["w"] - batch["t"])))(state["params"])
+        p, o, _ = adamw.update(ocfg, state["params"], state["opt"], g)
+        return {"params": p, "opt": o}, {"loss": loss}
+
+    armed = {"on": True}
+
+    def fault(s):
+        if s == 13 and armed["on"]:
+            armed["on"] = False
+            raise RuntimeError("injected")
+
+    cfg = TL.LoopConfig(steps=30, ckpt_dir=d, ckpt_every=5, log_every=5)
+    state, rows = TL.run(cfg, init_fn, step,
+                         lambda s: {"t": target}, fault_hook=fault)
+    assert any("restart" in r for r in rows)
+    final = [r["loss"] for r in rows if "loss" in r][-1]
+    assert final < 0.5
+    assert ckpt.latest_step(d) == 30
+
+
+def test_deterministic_data_streams():
+    from repro.data.recsys_stream import RecsysStream
+    from repro.data.tokens import TokenStream
+    ts = TokenStream(101, 16, 8, seed=3)
+    a = ts.batch(5, shard=1, n_shards=2)
+    b = ts.batch(5, shard=1, n_shards=2)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    rs = RecsysStream(1000, 10, 20, 8, seed=3)
+    x = rs.batch(2)
+    y = rs.batch(2)
+    np.testing.assert_array_equal(x["hist_items"], y["hist_items"])
+
+
+def test_sampler_shapes_and_mask():
+    from repro.data import graphgen
+    from repro.models.gnn.sampler import CSR, minibatch
+    n = 50
+    edges = graphgen.erdos_renyi(n, 150, seed=1)
+    csr = CSR.from_edges(n, edges)
+    rng = np.random.default_rng(0)
+    feats = rng.standard_normal((n, 6)).astype(np.float32)
+    labels = rng.integers(0, 4, n).astype(np.int32)
+    mb = minibatch(csr, feats, labels, batch_nodes=8, fanouts=(4, 3), rng=rng)
+    n_sub = 8 * (1 + 4 + 12)
+    assert mb["node_feat"].shape == (n_sub, 6)
+    assert mb["edge_index"].shape == (8 * (4 + 12), 2)
+    assert mb["edge_index"].max() < n_sub
+    assert mb["label_mask"].sum() == 8
+
+
+def test_truss_sparsify_features():
+    from repro.core.sparsify import (clique_upper_bound, sampling_weights,
+                                     truss_filter, trussness_features)
+    from repro.data import graphgen
+    edges = graphgen.planted_cliques(60, 2, 6, 60, seed=0)
+    t6 = truss_filter(60, edges, 6)
+    assert len(t6) >= 2 * 15 - 15  # at least one clique survives
+    _, feats = trussness_features(60, edges)
+    assert feats.min() >= 0 and feats.max() <= 1
+    w = sampling_weights(60, edges)
+    assert abs(w.sum() - 1.0) < 1e-5
+    assert clique_upper_bound(60, edges) >= 6
