@@ -1,6 +1,8 @@
 """Benchmark harness — one function per paper table.
 
-Prints ``name,us_per_call,derived`` CSV rows:
+Prints ``name,us_per_call,derived`` CSV rows (and JSON records with
+``--json``, which also carry structured counters such as the frontier
+engine's round/frontier-size statistics):
 
   table3_*  — in-memory decomposition: Alg 1 (TD-inmem) vs Alg 2
               (TD-inmem+) vs the vectorized bulk peel (ours).  The paper's
@@ -10,12 +12,19 @@ Prints ``name,us_per_call,derived`` CSV rows:
               global-iterate baseline (the MapReduce [16] stand-in).
   table5_*  — top-down top-t vs bottom-up full decomposition.
   table6_*  — k_max-truss vs c_max-core statistics (sizes, clustering).
+  peel_*    — frontier-compacted engine vs the seed dense engine
+              (DESIGN.md §3) and skew-aware vs global-D support (§4).
   kernel_*  — Pallas kernel microbenches (interpret mode, correctness-
               scaled shapes; TPU wall-times come from the roofline).
+
+Usage: ``run.py [--json BENCH_peel.json] [--only PREFIX ...] [--smoke]``.
+``--smoke`` restricts the peel comparison to the smallest dataset (CI).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -26,8 +35,8 @@ import numpy as np
 ROWS = []
 
 
-def emit(name: str, us: float, derived: str = ""):
-    ROWS.append((name, us, derived))
+def emit(name: str, us: float, derived: str = "", **extra):
+    ROWS.append({"name": name, "us_per_call": us, "derived": derived, **extra})
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
@@ -133,6 +142,79 @@ def table6_truss_vs_core():
              f"kmax/cmax={kmax}/{cmax};CCT/CCC={cct:.2f}/{ccc:.2f}")
 
 
+def peel_engines(smoke: bool = False):
+    """Frontier-compacted engine vs the seed dense engine (DESIGN.md §3).
+
+    Same supports, same triangle list, identical phi asserted; the emitted
+    counters show scatter work scaling with the frontier (gathered == 3T)
+    instead of with rounds * 3T.
+    """
+    from benchmarks.datasets import MEDIUM, SMALL, load
+    from repro.core.graph import build_graph
+    from repro.core.peel import (_pick_engine, peel_classes,
+                                 peel_classes_dense)
+    from repro.core.support import (edge_support_jax, list_triangles_np,
+                                    support_from_triangle_list,
+                                    triangle_incidence_np)
+
+    names = ["p2p-like"] if smoke else list(SMALL) + list(MEDIUM)
+    for name in names:
+        n, edges = load(name)
+        g = build_graph(n, edges)
+        tris = list_triangles_np(g)
+        sup = support_from_triangle_list(tris, g.m).astype(np.int32)
+        if len(tris) == 0:
+            tris = np.full((1, 3), g.m, np.int32)
+        supj = jnp.asarray(sup)
+        trisj = jnp.asarray(tris)
+        alivej = jnp.ones(g.m, bool)
+
+        t0 = time.perf_counter()
+        inc = triangle_incidence_np(tris, g.m)
+        inc_us = (time.perf_counter() - t0) * 1e6
+
+        def dense():
+            phi, _ = peel_classes_dense(supj, trisj, alivej)
+            return jax.block_until_ready(phi)
+
+        def frontier():
+            phi, _, st = peel_classes(supj, trisj, alivej, incidence=inc,
+                                      with_stats=True)
+            return jax.block_until_ready(phi), st
+
+        us_d, phi_d = _time(dense, repeats=2)
+        us_f, (phi_f, st) = _time(frontier, repeats=2)
+        assert (np.asarray(phi_f) == np.asarray(phi_d)).all()
+        # what the production entry points would pick
+        auto = _pick_engine("auto", tris, g.m, with_stats=False)
+        emit(f"peel_{name}_dense_seed", us_d,
+             f"m={g.m};T={len(tris)}", m=g.m, triangles=int(len(tris)))
+        emit(f"peel_{name}_frontier", us_f,
+             f"speedup_vs_dense={us_d/us_f:.2f};rounds={st.rounds};"
+             f"gathered={st.gathered};auto_picks={auto}",
+             m=g.m, triangles=int(len(tris)),
+             speedup_vs_dense=us_d / us_f, rounds=st.rounds,
+             removed=st.removed, gathered=st.gathered,
+             max_frontier=st.max_frontier, cap_f=st.cap_f, cap_t=st.cap_t,
+             resumes=st.resumes, incidence_build_us=inc_us,
+             auto_picks=auto)
+
+        # skew-aware support vs the seed global-D wedge scan (§4)
+        def sup_global():
+            return jax.block_until_ready(edge_support_jax(g, bucketed=False))
+
+        def sup_bucketed():
+            return jax.block_until_ready(edge_support_jax(g, bucketed=True))
+
+        us_g, s_g = _time(sup_global, repeats=2)
+        us_b, s_b = _time(sup_bucketed, repeats=2)
+        assert (np.asarray(s_g) == np.asarray(s_b)).all()
+        emit(f"support_{name}_globalD_seed", us_g, f"D={g.max_out_deg}")
+        emit(f"support_{name}_bucketed", us_b,
+             f"speedup_vs_globalD={us_g/us_b:.2f}",
+             speedup_vs_globalD=us_g / us_b)
+
+
 def kernel_micro():
     from repro.core.graph import canonical_edges
     from repro.data import graphgen
@@ -182,14 +264,43 @@ def roofline_summary():
              f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.3f}")
 
 
-def main() -> None:
+TABLES = {
+    "table3": table3_inmemory,
+    "table4": table4_bottom_up,
+    "table5": table5_top_down,
+    "table6": table6_truss_vs_core,
+    "peel": peel_engines,
+    "kernel": kernel_micro,
+    "roofline": roofline_summary,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write records as a JSON array (BENCH_*.json)")
+    ap.add_argument("--only", action="append", default=None, metavar="PREFIX",
+                    help="run only tables whose key starts with PREFIX "
+                         "(repeatable); default: all")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest-dataset smoke run of the peel comparison")
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
-    table3_inmemory()
-    table4_bottom_up()
-    table5_top_down()
-    table6_truss_vs_core()
-    kernel_micro()
-    roofline_summary()
+    if args.smoke and args.only is None:
+        args.only = ["peel"]
+    for key, fn in TABLES.items():
+        if args.only is not None and not any(key.startswith(p)
+                                             for p in args.only):
+            continue
+        if key == "peel":
+            fn(smoke=args.smoke)
+        else:
+            fn()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(ROWS, f, indent=1)
+        print(f"# wrote {len(ROWS)} records to {args.json}", flush=True)
 
 
 if __name__ == "__main__":

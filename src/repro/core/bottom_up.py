@@ -35,7 +35,7 @@ import numpy as np
 from repro.core import graph as glib
 from repro.core import partition as plib
 from repro.core.peel import peel_classes, peel_threshold
-from repro.core.support import edge_support_np, list_triangles_np
+from repro.core.support import list_triangles_np, support_from_triangle_list
 
 
 def _resolve_partitioner(partitioner):
@@ -65,12 +65,16 @@ class LowerBoundResult:
 
 
 def _local_truss(sub_edges: np.ndarray, n: int) -> np.ndarray:
-    """Trussness of every edge of the subgraph (device bulk peel)."""
+    """Trussness of every edge of the subgraph (frontier bulk peel).
+
+    The initial supports come for free from the triangle list (which the peel
+    needs anyway), so each NS(P) costs one wedge enumeration, not two.
+    """
     g = glib.build_graph(n, sub_edges)
     if g.m == 0:
         return np.zeros(0, np.int64)
     tris = list_triangles_np(g)
-    sup = edge_support_np(g).astype(np.int32)
+    sup = support_from_triangle_list(tris, g.m).astype(np.int32)
     if len(tris) == 0:
         tris = np.full((1, 3), g.m, np.int32)
     phi, _ = peel_classes(jnp.asarray(sup), jnp.asarray(tris), jnp.ones(g.m, bool))
@@ -181,7 +185,7 @@ def bottom_up_decompose(
         cand_sizes.append(len(h_ids))
         sub = glib.build_graph(n, edges[h_ids])
         tris = list_triangles_np(sub)
-        sup = edge_support_np(sub).astype(np.int32)
+        sup = support_from_triangle_list(tris, sub.m).astype(np.int32)
         if len(tris) == 0:
             tris = np.full((1, 3), sub.m, np.int32)
         # Map internal mask to subgraph ids (canonical order preserved).

@@ -9,11 +9,14 @@ Three device-parallel pieces (DESIGN.md §2):
    stacked on each device.
 
 2. ``peel_classes_sharded`` — bulk peeling of ONE big graph whose triangle
-   list is sharded across devices: each round every device computes the
-   support decrement induced by its triangle shard and a single psum
-   all-reduce merges them.  Edge-state (alive/sup/phi/k) is replicated, so
-   the per-round communication is exactly one all-reduce of m int32 — the
-   ICI analogue of the paper's "one sequential scan per iteration".
+   list is sharded across devices: each round every device gathers the
+   triangles its shard holds for the (replicated) removal frontier through a
+   per-shard edge→triangle incidence CSR and a single psum all-reduce merges
+   the decrements (frontier engine, DESIGN.md §3).  Edge-state
+   (alive/sup/phi/k) is replicated, so the per-round communication is
+   exactly one all-reduce of m int32 plus a scalar pmin agreeing on the
+   frontier chunk — the ICI analogue of the paper's "one sequential scan per
+   iteration".
 
 3. ``ring_support_dense`` — SUMMA-style dense support counting: adjacency
    row-blocks rotate around the ring (``ppermute``) while each device
@@ -31,9 +34,24 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core.peel import _tri_alive, peel_classes
+from repro.core.peel import (N_STATS, _frontier_round,
+                             peel_classes_fixedcap)
+from repro.core.support import _pow2_ceil, triangle_incidence_np
 
 _BIG = jnp.int32(np.iinfo(np.int32).max // 2)
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions (jax.shard_map moved; check_vma was
+    check_rep).  Trip counts are data-dependent per shard, so both checks
+    are disabled."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 # ---------------------------------------------------------------------------
@@ -42,51 +60,79 @@ _BIG = jnp.int32(np.iinfo(np.int32).max // 2)
 
 def pad_parts(
     parts: Sequence[tuple[np.ndarray, np.ndarray]], n_devices: int
-) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Stack per-part (sup, tris) into device-shardable padded arrays.
 
-    Returns (sup_p, tris_p, alive_p): shapes (P, Em), (P, Tm, 3), (P, Em)
-    with P a multiple of n_devices.  Padding edges are dead; padding
-    triangles point at the per-part drop slot Em.
+    Returns (sup_p, tris_p, alive_p, indptr_p, tids_p): shapes (P, Em),
+    (P, Tm, 3), (P, Em), (P, Em+1), (P, Lm) with P a multiple of n_devices.
+    Padding edges are dead; padding triangles point at the per-part drop
+    slot Em.  (indptr_p, tids_p) is each part's edge→triangle incidence CSR
+    consumed by the frontier peel engine.
     """
     n_parts = len(parts)
     P_total = max(1, -(-n_parts // n_devices) * n_devices)
     Em = max([len(s) for s, _ in parts] + [1])
     Tm = max([len(t) for _, t in parts] + [1])
+    Lm = max(1, 3 * Tm)
     sup_p = np.zeros((P_total, Em), np.int32)
     tris_p = np.full((P_total, Tm, 3), Em, np.int32)
     alive_p = np.zeros((P_total, Em), bool)
+    indptr_p = np.zeros((P_total, Em + 1), np.int32)
+    tids_p = np.zeros((P_total, Lm), np.int32)
     for i, (sup, tris) in enumerate(parts):
         sup_p[i, : len(sup)] = sup
         alive_p[i, : len(sup)] = True
         if len(tris):
             tris_p[i, : len(tris)] = tris
-    return sup_p, tris_p, alive_p
+        indptr, tids = triangle_incidence_np(tris_p[i], Em)
+        indptr_p[i] = indptr
+        tids_p[i, : len(tids)] = tids
+    return sup_p, tris_p, alive_p, indptr_p, tids_p
 
 
-def distributed_local_truss(mesh, sup_p, tris_p, alive_p, axis: str = "data"):
-    """Peel every part locally, parts sharded over ``axis``; returns phi_p."""
+def distributed_local_truss(mesh, sup_p, tris_p, alive_p, indptr_p, tids_p,
+                            axis: str = "data"):
+    """Peel every part locally, parts sharded over ``axis``; returns phi_p.
 
-    def local(sup, tris, alive):
-        phi, _ = jax.vmap(lambda s, t, a: peel_classes(s, t, a))(sup, tris, alive)
+    Runs the frontier-compacted engine per part with capacities pinned to
+    the padded part sizes (static under vmap, so the overflow path can never
+    trigger)."""
+    Em = sup_p.shape[1]
+    cap_f = Em
+    cap_t = max(1, tids_p.shape[1])
+
+    def one(s, t, ip, ti, a):
+        phi0 = jnp.zeros(Em, jnp.int32)
+        st0 = jnp.zeros(N_STATS, jnp.int32)
+        _, _, phi, _, _, _ = peel_classes_fixedcap(
+            s, t, ip, ti, a, phi0, jnp.int32(2), st0,
+            cap_f=cap_f, cap_t=cap_t)
         return phi
 
-    fn = jax.shard_map(
-        local, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis)),
+    def local(sup, tris, indptr, tids, alive):
+        return jax.vmap(one)(sup, tris, indptr, tids, alive)
+
+    fn = _shard_map(
+        local, mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
         out_specs=P(axis),
-        check_vma=False,  # data-dependent trip counts differ per shard
     )
-    return fn(sup_p, tris_p, alive_p)
+    return fn(sup_p, tris_p, indptr_p, tids_p, alive_p)
 
 
 # ---------------------------------------------------------------------------
 # 2. Sharded-triangle bulk peel (one big graph)
 # ---------------------------------------------------------------------------
 
-def _peel_sharded_body(sup0, tris_loc, alive0, axis: str):
-    """Runs on each device: triangle shard local, edge state replicated."""
+def _peel_sharded_body(sup0, tris_loc, indptr_loc, tids_loc, alive0,
+                       axis: str, cap_f: int, cap_t: int):
+    """Runs on each device: triangle shard + its incidence local, edge state
+    replicated.  Every round removes an agreed (pmin) frontier chunk, gathers
+    only the local triangles incident to it, and merges decrements with one
+    psum."""
     m = sup0.shape[0]
+    indptr_loc = indptr_loc.reshape(-1)
+    tids_loc = tids_loc.reshape(-1)
 
     def cond(state):
         alive, sup, phi, k = state
@@ -98,15 +144,11 @@ def _peel_sharded_body(sup0, tris_loc, alive0, axis: str):
         has_rm = jnp.any(rm)
 
         def remove(_):
-            alive2 = alive & ~rm
-            phi2 = jnp.where(rm, k, phi)
-            died = _tri_alive(alive, tris_loc) & ~_tri_alive(alive2, tris_loc)
-            dec = jnp.zeros(m + 1, jnp.int32)
-            for c in range(3):
-                e = tris_loc[:, c]
-                dec = dec.at[e].add((died & alive2[e]).astype(jnp.int32), mode="drop")
-            dec = jax.lax.psum(dec, axis)       # the one all-reduce per round
-            return alive2, sup - dec[:m], phi2, k
+            alive2, sup2, rm_sub, _, _, _, _ = _frontier_round(
+                alive, sup, rm, tris_loc, indptr_loc, tids_loc,
+                cap_f=cap_f, cap_t=cap_t, axis=axis)
+            phi2 = jnp.where(rm_sub, k, phi)
+            return alive2, sup2, phi2, k
 
         def jump(_):
             min_sup = jnp.min(jnp.where(alive, sup, _BIG))
@@ -119,19 +161,55 @@ def _peel_sharded_body(sup0, tris_loc, alive0, axis: str):
     return phi
 
 
-def peel_classes_sharded(mesh, sup0, tris, alive0, axis: str = "data"):
+def shard_incidence(tris: np.ndarray, m: int, n_shards: int):
+    """Per-shard edge→triangle incidence over contiguous triangle shards.
+
+    ``tris`` (T_pad, 3) with T_pad divisible by ``n_shards``; triangle ids in
+    each shard's CSR are LOCAL to the shard (matching the tris rows that
+    shard_map hands each device).  Returns (indptr_s (S, m+1), tids_s (S, L))
+    padded to a common L.
+    """
+    t_loc = len(tris) // n_shards
+    per = [triangle_incidence_np(tris[i * t_loc:(i + 1) * t_loc], m)
+           for i in range(n_shards)]
+    L = max([len(t) for _, t in per] + [1])
+    indptr_s = np.zeros((n_shards, m + 1), np.int32)
+    tids_s = np.zeros((n_shards, L), np.int32)
+    for i, (indptr, tids) in enumerate(per):
+        indptr_s[i] = indptr
+        tids_s[i, : len(tids)] = tids
+    return indptr_s, tids_s
+
+
+def peel_classes_sharded(mesh, sup0, tris, alive0, axis: str = "data",
+                         cap_f=None, cap_t=None):
     """Trussness of one big graph with the triangle list sharded on ``axis``.
 
     ``tris`` (T, 3) must be padded to a multiple of the axis size (padding
-    rows point at edge id m = drop slot).
+    rows point at edge id m = drop slot).  The per-shard incidence CSR is
+    built host-side; capacities default to frontier-sized buffers with
+    ``cap_t`` covering the largest incidence row of any shard (progress is
+    then guaranteed, so no overflow/resume path is needed here).
     """
-    fn = jax.shard_map(
-        partial(_peel_sharded_body, axis=axis), mesh=mesh,
-        in_specs=(P(), P(axis), P()),
+    n_shards = mesh.shape[axis]
+    m = int(sup0.shape[0])
+    tris_np = np.asarray(tris)
+    indptr_s, tids_s = shard_incidence(tris_np, m, n_shards)
+    max_row = int((indptr_s[:, 1:] - indptr_s[:, :-1]).max()) if m else 1
+    n_inc = tids_s.shape[1]
+    if cap_f is None:
+        cap_f = _pow2_ceil(min(max(m, 1), max(256, m // 16)))
+    if cap_t is None:
+        cap_t = _pow2_ceil(min(max(n_inc, 1), max(max_row, 512, n_inc // 16)))
+    cap_t = max(cap_t, _pow2_ceil(max_row))
+    fn = _shard_map(
+        partial(_peel_sharded_body, axis=axis, cap_f=cap_f, cap_t=cap_t),
+        mesh,
+        in_specs=(P(), P(axis), P(axis), P(axis), P()),
         out_specs=P(),
-        check_vma=False,
     )
-    return fn(sup0, tris, alive0)
+    return fn(sup0, jnp.asarray(tris), jnp.asarray(indptr_s),
+              jnp.asarray(tids_s), alive0)
 
 
 def pad_triangles(tris: np.ndarray, m: int, multiple: int) -> np.ndarray:
@@ -172,9 +250,7 @@ def ring_support_dense(mesh, A: jnp.ndarray, axis: str = "data"):
         _, acc = jax.lax.fori_loop(0, p, step, (a_loc, jnp.zeros_like(a_loc)))
         return acc * a_loc
 
-    fn = jax.shard_map(
-        body, mesh=mesh, in_specs=P(axis, None), out_specs=P(axis, None)
-    )
+    fn = _shard_map(body, mesh, in_specs=P(axis, None), out_specs=P(axis, None))
     return fn(A)
 
 
@@ -188,7 +264,5 @@ def allgather_support_dense(mesh, A: jnp.ndarray, axis: str = "data"):
         a_full = jax.lax.all_gather(a_loc, axis, tiled=True)   # (n, n)
         return (a_loc @ a_full) * a_loc
 
-    fn = jax.shard_map(
-        body, mesh=mesh, in_specs=P(axis, None), out_specs=P(axis, None)
-    )
+    fn = _shard_map(body, mesh, in_specs=P(axis, None), out_specs=P(axis, None))
     return fn(A)

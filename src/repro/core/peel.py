@@ -1,17 +1,39 @@
-"""Bulk-synchronous truss peeling (the vectorized adaptation of Algorithm 2).
+"""Bulk-synchronous truss peeling — frontier-compacted engine (DESIGN.md §3).
 
 The paper's Algorithm 2 removes one minimum-support edge at a time.  On
-vector hardware we peel in *rounds*: every round removes ALL alive edges with
-``sup <= k-2`` simultaneously and repairs the supports of surviving edges via
-triangle bookkeeping over a static triangle list (edge-id triples).  Rounds
-iterate at the same k until a fixed point, then k jumps directly to
-``min_alive_support + 2`` (bucket jump).  This computes exactly the same
-k-classes as the serial algorithm: an edge is removed at level k iff its
-support inside the current remaining subgraph is <= k-2, which is precisely
-the definition of the k-class.
+vector hardware we peel in *rounds*: every round removes alive edges with
+``sup <= k-2`` and repairs the supports of surviving edges via triangle
+bookkeeping.  Rounds iterate at the same k until a fixed point, then k jumps
+directly to ``min_alive_support + 2`` (bucket jump).  This computes exactly
+the same k-classes as the serial algorithm.
 
-State is fixed-shape; the whole decomposition is one ``lax.while_loop`` —
-jit-compatible and shard_map-compatible.
+The seed implementation (kept as ``peel_classes_dense`` / an O(T)-per-round
+baseline) rescanned the full (T, 3) triangle list three times per round and
+scattered into all m edge slots even when a round removed a handful of
+edges.  The frontier engine instead:
+
+  (a) compacts the removed-edge frontier into a fixed-capacity buffer via a
+      ``cumsum``-based stream compaction (capacity ``cap_f``);
+  (b) gathers ONLY the triangles incident to frontier edges through a
+      precomputed edge→triangle incidence CSR (``triangle_incidence_np``);
+  (c) applies support decrements with scatters sized to the gathered
+      frontier (capacity ``cap_t``), not to T or m.
+
+Large rounds are *chunked*: when a round's frontier exceeds the capacities,
+only a prefix is removed and the loop re-enters at the same k — peeling is
+confluent (removing any subset of sub-threshold edges and iterating reaches
+the same fixed point), so the result is unchanged.  Over a whole
+decomposition every incidence entry is gathered exactly once, so total
+scatter work is Θ(3T) instead of Θ(rounds · 3T).  If a single edge's
+incidence row overflows ``cap_t`` the kernel reports overflow and the host
+wrapper doubles the capacity and resumes from the returned state (the
+default ``cap_t`` already covers the largest row, so this is a safety
+valve, not a steady-state path).
+
+State is fixed-shape; each kernel invocation is one ``lax.while_loop`` —
+jit-compatible, vmap-compatible (``distributed_local_truss``) and
+shard_map-compatible (``peel_classes_sharded`` adds a ``pmin`` on the chunk
+prefix and a ``psum`` on the decrements).
 
 ``peel_recompute`` is the *global-iterate* baseline standing in for the
 MapReduce algorithm [16]: no incremental bookkeeping — every round recounts
@@ -21,24 +43,249 @@ magnitude in the paper's Table 4).
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import Graph
-from repro.core.support import edge_support_np, list_triangles_np
+from repro.core.support import (_pow2_ceil, list_triangles_np,
+                                support_from_triangle_list,
+                                triangle_incidence_np)
 
 _BIG = jnp.int32(np.iinfo(np.int32).max // 2)
+
+# stats vector layout (int32): sub-rounds, edges removed, incidence slots
+# gathered, max frontier size seen in a single round
+N_STATS = 4
+_S_ROUNDS, _S_REMOVED, _S_GATHERED, _S_MAXF = range(N_STATS)
 
 
 def _tri_alive(alive, tris):
     return alive[tris[:, 0]] & alive[tris[:, 1]] & alive[tris[:, 2]]
 
 
-@partial(jax.jit, static_argnames=("max_k",))
-def peel_classes(sup0, tris, edge_alive0, max_k=None):
+@dataclasses.dataclass
+class PeelStats:
+    """Work counters of one frontier-peel invocation (DESIGN.md §3).
+
+    ``gathered`` is the total number of incidence slots touched by scatter/
+    gather work across all rounds — for a full decomposition it equals the
+    incidence size (3T): each (edge, triangle) pair is processed exactly once,
+    in the round its edge is removed.  The dense engine's equivalent would be
+    ``rounds * 3T``.
+    """
+
+    rounds: int          # sub-rounds executed (incl. frontier chunks)
+    removed: int         # edges removed
+    gathered: int        # incidence slots gathered (frontier-sized work)
+    max_frontier: int    # largest single-round frontier
+    cap_f: int           # frontier buffer capacity used
+    cap_t: int           # triangle gather capacity used
+    resumes: int         # host capacity-doubling fallbacks taken
+
+    @classmethod
+    def from_vec(cls, vec, cap_f, cap_t, resumes):
+        vec = np.asarray(vec)
+        return cls(int(vec[_S_ROUNDS]), int(vec[_S_REMOVED]),
+                   int(vec[_S_GATHERED]), int(vec[_S_MAXF]),
+                   cap_f, cap_t, resumes)
+
+
+# ---------------------------------------------------------------------------
+# the frontier round primitive
+# ---------------------------------------------------------------------------
+
+def _frontier_round(alive, sup, rm, tris, tri_indptr, tri_ids,
+                    *, cap_f: int, cap_t: int, axis: Optional[str] = None):
+    """One compacted removal step: remove a prefix of ``rm``, repair ``sup``.
+
+    Returns (alive2, sup2, rm_sub, nf, j_take, total_t, overflow) where
+    ``rm_sub`` is the subset of ``rm`` actually removed this step (a prefix
+    of the frontier in edge-id order; confluence of peeling makes any subset
+    valid), ``nf`` the full frontier size, ``j_take`` the number of edges
+    taken, ``total_t`` the incidence slots gathered.  ``overflow`` is set
+    when the frontier is non-empty but not even one edge's incidence row
+    fits in ``cap_t``.
+
+    ``axis``: inside shard_map, the mesh axis holding the triangle shards —
+    the taken prefix is agreed via ``pmin`` and decrements merged via
+    ``psum`` so replicated edge state stays consistent.
+    """
+    m = alive.shape[0]
+    rm_i = rm.astype(jnp.int32)
+    nf = jnp.sum(rm_i)
+    idx = jnp.cumsum(rm_i) - 1               # frontier position per edge
+    cand = rm & (idx < cap_f)
+    tgt = jnp.where(cand, idx, cap_f)        # cap_f = dump slot
+    f_ids = jnp.full(cap_f + 1, m, jnp.int32).at[tgt].set(
+        jnp.arange(m, dtype=jnp.int32), mode="drop")[:cap_f]
+    fc = jnp.minimum(f_ids, m - 1)
+    lens = jnp.where(f_ids < m, tri_indptr[fc + 1] - tri_indptr[fc], 0)
+    offs = jnp.cumsum(lens)                  # inclusive prefix sums
+    fits = (offs <= cap_t) & (f_ids < m)     # prefix mask (lens >= 0)
+    j_take = jnp.sum(fits.astype(jnp.int32))
+    if axis is not None:
+        j_take = jax.lax.pmin(j_take, axis)
+    overflow = (nf > 0) & (j_take == 0)
+    total_t = jnp.where(j_take > 0, offs[jnp.maximum(j_take - 1, 0)], 0)
+    rm_sub = rm & (idx < j_take)
+    alive2 = alive & ~rm_sub
+
+    # gather the incident triangles of the taken prefix (ragged -> flat)
+    s = jnp.arange(cap_t, dtype=jnp.int32)
+    j = jnp.searchsorted(offs, s, side="right").astype(jnp.int32)
+    jc = jnp.minimum(j, cap_f - 1)
+    valid = s < total_t
+    pos = s - (offs[jc] - lens[jc])
+    f = f_ids[jc]                            # frontier edge owning this slot
+    fcl = jnp.minimum(f, m - 1)
+    slot = jnp.minimum(tri_indptr[fcl] + pos, max(tri_ids.shape[0] - 1, 0))
+    tid = tri_ids[slot]
+    e0 = jnp.minimum(tris[tid, 0], m - 1)
+    e1 = jnp.minimum(tris[tid, 1], m - 1)
+    e2 = jnp.minimum(tris[tid, 2], m - 1)
+    died = alive[e0] & alive[e1] & alive[e2]
+    # a triangle incident to several removed edges appears once per such
+    # edge; charge it to the minimum removed edge id so it decrements its
+    # survivors exactly once
+    owner = jnp.minimum(
+        jnp.where(rm_sub[e0], e0, _BIG),
+        jnp.minimum(jnp.where(rm_sub[e1], e1, _BIG),
+                    jnp.where(rm_sub[e2], e2, _BIG)))
+    contribute = valid & died & (f == owner)
+    dec = jnp.zeros(m + 1, jnp.int32)
+    for e_c in (e0, e1, e2):
+        tgt_c = jnp.where(contribute & alive2[e_c], e_c, m)
+        dec = dec.at[tgt_c].add(jnp.int32(1), mode="drop")
+    if axis is not None:
+        dec = jax.lax.psum(dec, axis)
+    return alive2, sup - dec[:m], rm_sub, nf, j_take, total_t, overflow
+
+
+def _bump_stats(stats, nf, j_take, total_t):
+    stats = stats.at[_S_ROUNDS].add(1)
+    stats = stats.at[_S_REMOVED].add(j_take)
+    stats = stats.at[_S_GATHERED].add(total_t)
+    return stats.at[_S_MAXF].max(nf)
+
+
+# ---------------------------------------------------------------------------
+# fixed-capacity kernels (jit / vmap / shard_map compatible)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cap_f", "cap_t", "max_k"))
+def peel_classes_fixedcap(sup0, tris, tri_indptr, tri_ids, alive0, phi0, k0,
+                          stats0, *, cap_f, cap_t, max_k=None):
+    """Frontier peel to a fixed point (or overflow) at static capacities.
+
+    Full state in / full state out so the host wrapper can resume after
+    doubling a capacity.  Returns (alive, sup, phi, k, stats, overflow).
+    """
+
+    def cond(state):
+        alive, sup, phi, k, stats, overflow = state
+        ok = jnp.any(alive) & ~overflow
+        if max_k is not None:
+            ok &= k <= max_k
+        return ok
+
+    def body(state):
+        alive, sup, phi, k, stats, overflow = state
+        rm = alive & (sup <= k - 2)
+
+        def do_remove(_):
+            alive2, sup2, rm_sub, nf, j_take, total_t, ovf = _frontier_round(
+                alive, sup, rm, tris, tri_indptr, tri_ids,
+                cap_f=cap_f, cap_t=cap_t)
+            phi2 = jnp.where(rm_sub, k, phi)
+            return (alive2, sup2, phi2, k,
+                    _bump_stats(stats, nf, j_take, total_t), ovf)
+
+        def do_jump(_):
+            min_sup = jnp.min(jnp.where(alive, sup, _BIG))
+            new_k = jnp.maximum(k + 1, min_sup + 2)
+            return alive, sup, phi, new_k, stats, overflow
+
+        return jax.lax.cond(jnp.any(rm), do_remove, do_jump, operand=None)
+
+    state0 = (alive0, sup0, phi0, k0, stats0, jnp.bool_(False))
+    return jax.lax.while_loop(cond, body, state0)
+
+
+@partial(jax.jit, static_argnames=("cap_f", "cap_t"))
+def peel_threshold_fixedcap(sup0, tris, tri_indptr, tri_ids, alive0,
+                            removable, thresh, stats0, *, cap_f, cap_t):
+    """Single-level frontier peel at static capacities.
+
+    Returns (alive, sup, stats, overflow).
+    """
+
+    def cond(state):
+        alive, sup, stats, overflow = state
+        return jnp.any(alive & removable & (sup <= thresh)) & ~overflow
+
+    def body(state):
+        alive, sup, stats, overflow = state
+        rm = alive & removable & (sup <= thresh)
+        alive2, sup2, _, nf, j_take, total_t, ovf = _frontier_round(
+            alive, sup, rm, tris, tri_indptr, tri_ids,
+            cap_f=cap_f, cap_t=cap_t)
+        return alive2, sup2, _bump_stats(stats, nf, j_take, total_t), ovf
+
+    state0 = (alive0, sup0, stats0, jnp.bool_(False))
+    return jax.lax.while_loop(cond, body, state0)
+
+
+# ---------------------------------------------------------------------------
+# host wrappers: incidence construction + capacity doubling fallback
+# ---------------------------------------------------------------------------
+
+def _default_caps(m: int, incidence, cap_f, cap_t):
+    """Capacity heuristic: large rounds are chunked anyway, so capacities
+    trade static per-round gather width against extra sub-rounds.  The
+    m//48 and 3T//96 divisors came out of a sweep on the power-law benchmark
+    graphs (BENCH_peel.json); the floor on ``cap_t`` must cover the largest
+    single incidence row or progress could stall."""
+    indptr, tri_ids = incidence
+    max_row = int((indptr[1:] - indptr[:-1]).max()) if m else 0
+    n_inc = len(tri_ids)
+    if cap_f is None:
+        cap_f = _pow2_ceil(min(max(m, 1), max(256, m // 48)))
+    if cap_t is None:
+        # auto-sizing covers the largest row up front; an explicit (too
+        # small) cap_t is honored and recovered via the overflow fallback
+        cap_t = max(_pow2_ceil(min(max(n_inc, 1), max(1024, n_inc // 96))),
+                    _pow2_ceil(max_row))
+    return cap_f, cap_t
+
+
+def _prep_incidence(tris, m, incidence):
+    if incidence is None:
+        incidence = triangle_incidence_np(np.asarray(tris), m)
+    indptr, tri_ids = incidence
+    if len(tri_ids) == 0:  # keep gather shapes non-empty
+        tri_ids = np.zeros(1, np.int32)
+    return np.asarray(indptr), np.asarray(tri_ids)
+
+
+def _pick_engine(engine: str, tris, m: int, with_stats: bool) -> str:
+    """"auto" routes triangle-rich graphs (3T > m) to the frontier engine;
+    when the incidence is smaller than the edge list the dense engine's
+    O(T)-per-round rescans are already cheaper than any O(m) frontier mask
+    work.  Stats only exist for the frontier engine, so ``with_stats``
+    forces it."""
+    if engine == "auto":
+        if with_stats or 3 * int(np.asarray(tris).shape[0]) > m:
+            return "frontier"
+        return "dense"
+    return engine
+
+
+def peel_classes(sup0, tris, edge_alive0, max_k=None, *, incidence=None,
+                 cap_f=None, cap_t=None, with_stats=False, engine="auto"):
     """Compute trussness phi(e) for every edge.
 
     Args:
@@ -49,12 +296,109 @@ def peel_classes(sup0, tris, edge_alive0, max_k=None):
         are False).
       max_k: optional static cap: stop after classes <= max_k are emitted
         (used by the bottom-up per-k candidate peel).
+      incidence: optional precomputed ``triangle_incidence_np(tris, m)``; pass
+        it when peeling the same triangle list repeatedly.
+      cap_f, cap_t: frontier / triangle-gather capacities (power-of-two
+        recommended to bound recompiles); sized automatically when None.
+      with_stats: also return a :class:`PeelStats` ("auto" then picks the
+        frontier engine; an explicit engine="dense" returns stats=None —
+        the dense baseline has no frontier counters).
+      engine: "auto" (default), "frontier", or "dense" (see ``_pick_engine``).
 
     Returns:
-      phi: (m,) int32 trussness; 0 for edges never alive.  If ``max_k`` is
-        given, edges with trussness > max_k keep phi == 0 and stay alive in
-        the returned mask.
-      alive: (m,) bool — edges still alive (empty unless max_k given).
+      (phi, alive) — or (phi, alive, stats) with ``with_stats=True``.  phi is
+      (m,) int32 trussness, 0 for edges never alive; if ``max_k`` is given,
+      edges with trussness > max_k keep phi == 0 and stay alive in the
+      returned mask.
+    """
+    m = int(sup0.shape[0])
+    if _pick_engine(engine, tris, m, with_stats) == "dense":
+        phi, alive = peel_classes_dense(
+            jnp.asarray(sup0), jnp.asarray(tris), jnp.asarray(edge_alive0),
+            max_k=max_k)
+        # the dense baseline has no frontier counters (explicit engine="dense")
+        return (phi, alive, None) if with_stats else (phi, alive)
+    indptr, tri_ids = _prep_incidence(tris, m, incidence)
+    cap_f, cap_t = _default_caps(m, (indptr, tri_ids), cap_f, cap_t)
+    tris_j = jnp.asarray(tris)
+    indptr_j = jnp.asarray(indptr)
+    tids_j = jnp.asarray(tri_ids)
+    alive = jnp.asarray(edge_alive0)
+    sup = jnp.asarray(sup0)
+    phi = jnp.zeros(m, jnp.int32)
+    k = jnp.int32(2)
+    stats = jnp.zeros(N_STATS, jnp.int32)
+    resumes = 0
+    while True:
+        alive, sup, phi, k, stats, overflow = peel_classes_fixedcap(
+            sup, tris_j, indptr_j, tids_j, alive, phi, k, stats,
+            cap_f=cap_f, cap_t=cap_t, max_k=max_k)
+        if not bool(overflow):
+            break
+        cap_t *= 2          # host fallback: double and resume
+        resumes += 1
+    if with_stats:
+        return phi, alive, PeelStats.from_vec(stats, cap_f, cap_t, resumes)
+    return phi, alive
+
+
+def peel_threshold(sup0, tris, alive0, removable, thresh, *, incidence=None,
+                   cap_f=None, cap_t=None, with_stats=False, engine="auto"):
+    """Single-level peel: repeatedly remove removable alive edges with
+    ``sup <= thresh`` (decrementing surviving supports) until fixed point.
+
+    This is Procedure 5 (thresh = k-2, bottom-up: removed edges are the
+    k-class) and Procedure 8 (thresh = k-3, top-down: SURVIVING internal
+    edges are the k-class) in bulk-synchronous, frontier-compacted form.
+    ``removable`` masks the paper's internal edges — external edges are never
+    deleted.
+
+    Returns (alive, sup, removed_mask) — plus a PeelStats with
+    ``with_stats=True``.
+    """
+    m = int(sup0.shape[0])
+    if _pick_engine(engine, tris, m, with_stats) == "dense":
+        alive, sup, removed = peel_threshold_dense(
+            jnp.asarray(sup0), jnp.asarray(tris), jnp.asarray(alive0),
+            jnp.asarray(removable), jnp.int32(thresh))
+        return (alive, sup, removed, None) if with_stats else \
+            (alive, sup, removed)
+    indptr, tri_ids = _prep_incidence(tris, m, incidence)
+    cap_f, cap_t = _default_caps(m, (indptr, tri_ids), cap_f, cap_t)
+    tris_j = jnp.asarray(tris)
+    indptr_j = jnp.asarray(indptr)
+    tids_j = jnp.asarray(tri_ids)
+    alive0 = jnp.asarray(alive0)
+    alive = alive0
+    sup = jnp.asarray(sup0)
+    removable = jnp.asarray(removable)
+    thresh = jnp.int32(thresh)
+    stats = jnp.zeros(N_STATS, jnp.int32)
+    resumes = 0
+    while True:
+        alive, sup, stats, overflow = peel_threshold_fixedcap(
+            sup, tris_j, indptr_j, tids_j, alive, removable, thresh, stats,
+            cap_f=cap_f, cap_t=cap_t)
+        if not bool(overflow):
+            break
+        cap_t *= 2
+        resumes += 1
+    if with_stats:
+        return alive, sup, alive0 & ~alive, PeelStats.from_vec(
+            stats, cap_f, cap_t, resumes)
+    return alive, sup, alive0 & ~alive
+
+
+# ---------------------------------------------------------------------------
+# dense (seed) engine — O(T) scatter work per round; baseline + oracle
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("max_k",))
+def peel_classes_dense(sup0, tris, edge_alive0, max_k=None):
+    """Seed bulk peel: every round rescans the full triangle list.
+
+    Kept as the before/after benchmark baseline for the frontier engine and
+    as a second independent implementation for cross-checks.
     """
     m = sup0.shape[0]
     phi0 = jnp.zeros(m, jnp.int32)
@@ -95,17 +439,8 @@ def peel_classes(sup0, tris, edge_alive0, max_k=None):
 
 
 @jax.jit
-def peel_threshold(sup0, tris, alive0, removable, thresh):
-    """Single-level peel: repeatedly remove removable alive edges with
-    ``sup <= thresh`` (decrementing surviving supports) until fixed point.
-
-    This is Procedure 5 (thresh = k-2, bottom-up: removed edges are the
-    k-class) and Procedure 8 (thresh = k-3, top-down: SURVIVING internal
-    edges are the k-class) in bulk-synchronous form.  ``removable`` masks the
-    paper's internal edges — external edges are never deleted.
-
-    Returns (alive, sup, removed_mask).
-    """
+def peel_threshold_dense(sup0, tris, alive0, removable, thresh):
+    """Seed single-level peel (full-triangle-list rescans); baseline."""
     m = sup0.shape[0]
 
     def cond(state):
@@ -141,7 +476,11 @@ def support_from_triangles(tris, alive, m):
 @jax.jit
 def peel_recompute(tris, edge_alive0):
     """Global-iterate baseline (MapReduce [16] stand-in): each round recounts
-    every support from scratch, removes all violating edges, repeats."""
+    every support from scratch, removes all violating edges, repeats.
+
+    Deliberately NOT frontier-compacted — its O(T)-every-round recount is the
+    algorithmic property the paper's Table 4 comparison measures.
+    """
     m = edge_alive0.shape[0]
     phi0 = jnp.zeros(m, jnp.int32)
     k0 = jnp.int32(2)
@@ -165,25 +504,33 @@ def peel_recompute(tris, edge_alive0):
     return phi
 
 
-def truss_decompose(n: int, edges: np.ndarray) -> np.ndarray:
+def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
+                    with_stats: bool = False):
     """End-to-end in-memory decomposition (host entry point).
 
-    Preprocess on host (orientation, CSR, triangle list), peel on device.
+    Preprocess on host (orientation, CSR, triangle list + incidence), peel on
+    device.  ``engine``: "auto" (default), "frontier", or "dense" (seed
+    baseline); with ``with_stats``, "auto" picks the frontier engine and an
+    explicit "dense" yields stats=None.
     """
     from repro.core.graph import build_graph
 
     g = build_graph(n, edges)
     if g.m == 0:
-        return np.zeros(0, np.int64)
+        phi = np.zeros(0, np.int64)
+        return (phi, None) if with_stats else phi
     tris = list_triangles_np(g)
-    sup = edge_support_np(g).astype(np.int32)
+    sup = support_from_triangle_list(tris, g.m).astype(np.int32)
     if len(tris) == 0:
-        tris = np.zeros((1, 3), np.int32)  # keep shapes non-empty
-        tris[:] = g.m  # points at the drop slot
-    phi, _ = peel_classes(
-        jnp.asarray(sup), jnp.asarray(tris), jnp.ones(g.m, bool)
-    )
-    return np.asarray(phi).astype(np.int64)
+        tris = np.full((1, 3), g.m, np.int32)  # points at the drop slot
+    args = (jnp.asarray(sup), jnp.asarray(tris), jnp.ones(g.m, bool))
+    if with_stats:
+        phi, _, stats = peel_classes(*args, engine=engine, with_stats=True)
+    else:
+        phi, _ = peel_classes(*args, engine=engine)
+        stats = None
+    phi = np.asarray(phi).astype(np.int64)
+    return (phi, stats) if with_stats else phi
 
 
 def kmax_truss(n: int, edges: np.ndarray) -> tuple[int, np.ndarray]:

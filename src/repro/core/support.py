@@ -12,18 +12,28 @@ The vectorized form keeps the paper's O(m^1.5) bound (Theorem 1):
     credits support to all three edge ids.
 
 Shapes are static: edges are processed in fixed-size chunks of C edges, each
-expanded to (C, D) wedge candidates where D = max oriented out-degree.
-Total work O(m * D) = O(m^1.5); memory O(C * D).
+expanded to (C, D) wedge candidates.  A single global D = max oriented
+out-degree would let one hub vertex in a power-law graph inflate every chunk
+by orders of magnitude, so the device path is *skew-aware*: oriented edges
+are bucketed by the power-of-two out-degree of their source row and each
+bucket runs the wedge enumeration with its own D (DESIGN.md §4).  Total work
+stays O(m^1.5); memory per bucket is O(C_b * D_b) with C_b sized to a fixed
+element budget.
 
-Two implementations share the same logic:
+Three entry points share the same logic:
   * ``edge_support_np``   — numpy, host-side (oracle + preprocessing);
-  * ``edge_support_jax``  — jit'd lax.scan over chunks (device path).
-The dense-tile Pallas kernel (kernels/triangle_count) covers the dense-core
-regime; see DESIGN.md §2.
+  * ``edge_support_jax``  — jit'd lax.scan over bucketed chunks (device path);
+  * ``edge_support_auto`` — dispatch: dense-core partitions go to the
+    dense-tile kernel (kernels/triangle_count), sparse ones to the bucketed
+    wedge path; see DESIGN.md §2.
+
+``triangle_incidence_np`` builds the edge→triangle incidence CSR consumed by
+the frontier-compacted peeling engine (core/peel.py, DESIGN.md §3).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from functools import partial
 
@@ -110,6 +120,51 @@ def list_triangles_np(g: Graph, chunk: int = 1 << 16) -> np.ndarray:
     return np.concatenate(out, axis=0).astype(np.int32)
 
 
+def support_from_triangle_list(tris: np.ndarray, m: int) -> np.ndarray:
+    """sup(e) from a static triangle list (all edges alive).
+
+    Peeling needs the triangle list anyway, so deriving the initial supports
+    from it saves a second full wedge enumeration.
+    """
+    sup = np.zeros(m, dtype=np.int64)
+    if len(tris):
+        flat = np.asarray(tris).reshape(-1)
+        counts = np.bincount(flat[flat < m], minlength=m)
+        sup[: len(counts)] += counts[:m]
+    return sup
+
+
+# ---------------------------------------------------------------------------
+# edge -> triangle incidence CSR (frontier peel preprocessing, DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+def triangle_incidence_np(tris: np.ndarray, m: int) -> tuple[np.ndarray, np.ndarray]:
+    """CSR index from edge id to the ids of triangles containing it.
+
+    Args:
+      tris: (T, 3) edge-id triples; rows may reference the drop slot (id >= m,
+        used for padding) — those entries are excluded.
+      m: number of real edges.
+
+    Returns:
+      (tri_indptr, tri_ids): ``tri_ids[tri_indptr[e]:tri_indptr[e+1]]`` are
+      the triangle row indices containing edge ``e``.  len(tri_ids) == 3T for
+      an unpadded list (each triangle appears in exactly 3 rows).
+    """
+    tris = np.asarray(tris)
+    if len(tris) == 0 or m == 0:
+        return np.zeros(m + 1, np.int32), np.zeros(0, np.int32)
+    flat_e = tris.reshape(-1).astype(np.int64)
+    flat_t = np.repeat(np.arange(len(tris), dtype=np.int64), 3)
+    keep = flat_e < m
+    flat_e, flat_t = flat_e[keep], flat_t[keep]
+    order = np.argsort(flat_e, kind="stable")
+    tri_ids = flat_t[order].astype(np.int32)
+    indptr = np.zeros(m + 1, dtype=np.int64)
+    np.add.at(indptr, flat_e + 1, 1)
+    return np.cumsum(indptr).astype(np.int32), tri_ids
+
+
 # ---------------------------------------------------------------------------
 # JAX path
 # ---------------------------------------------------------------------------
@@ -131,16 +186,25 @@ def _row_lower_bound_jax(nbrs, lo, hi, target, iters):
 
 
 @partial(jax.jit, static_argnames=("D", "iters", "chunk"))
-def _support_scan(src, dst, indptr, nbrs, nbr_eid, m_real, *, D, iters, chunk):
-    """sup(e) for all edges; src/dst padded to a multiple of ``chunk``."""
-    m_pad = src.shape[0]
-    n_chunks = m_pad // chunk
-    sup0 = jnp.zeros(m_pad + 1, jnp.int32)  # +1 slot absorbs padded scatters
+def _support_scan(eids_pad, src, dst, indptr, nbrs, nbr_eid, *, D, iters, chunk):
+    """Partial sup(e) from the wedges of the given oriented edges.
+
+    Args:
+      eids_pad: (E_pad,) edge ids to enumerate, padded with ``m`` sentinels to
+        a multiple of ``chunk``.
+      src, dst: (m + 1,) oriented endpoints with a zero pad slot at index m.
+      D: static wedge-slot bound — max out-degree of the *source rows of this
+        bucket*, not of the whole graph (the skew-aware part, DESIGN.md §4).
+
+    Returns sup over (m + 1) slots; the last slot absorbs masked scatters.
+    """
+    m = src.shape[0] - 1
+    n_chunks = eids_pad.shape[0] // chunk
+    sup0 = jnp.zeros(m + 1, jnp.int32)
 
     def one_chunk(sup, c):
-        e0 = c * chunk
-        eids = e0 + jnp.arange(chunk, dtype=jnp.int32)
-        live = eids < m_real
+        eids = jax.lax.dynamic_slice(eids_pad, (c * chunk,), (chunk,))
+        live = eids < m
         a = src[eids]
         b = dst[eids]
         slot = jnp.arange(D, dtype=jnp.int32)[None, :]
@@ -156,7 +220,7 @@ def _support_scan(src, dst, indptr, nbrs, nbr_eid, m_real, *, D, iters, chunk):
         in_row = p < indptr[b + 1][:, None]
         pc = jnp.minimum(p, max(nbrs.shape[0] - 1, 0))
         hit = valid & in_row & (nbrs[pc] == w)
-        sink = jnp.int32(sup.shape[0] - 1)
+        sink = jnp.int32(m)
         e_ab = jnp.where(hit, eids[:, None], sink)
         e_aw = jnp.where(hit, nbr_eid[pos_aw], sink)
         e_bw = jnp.where(hit, nbr_eid[pc], sink)
@@ -167,21 +231,134 @@ def _support_scan(src, dst, indptr, nbrs, nbr_eid, m_real, *, D, iters, chunk):
         return sup, None
 
     sup, _ = jax.lax.scan(one_chunk, sup0, jnp.arange(n_chunks, dtype=jnp.int32))
-    return sup[:-1]
+    return sup
 
 
-def edge_support_jax(g: Graph, chunk: int = 1 << 14) -> jnp.ndarray:
-    """Device-path support computation (jit'd, static shapes)."""
+def _pow2_ceil(x: int) -> int:
+    return 1 << max(0, math.ceil(math.log2(max(1, x))))
+
+
+@dataclasses.dataclass(frozen=True)
+class WedgeBucket:
+    """One power-of-two out-degree class of oriented edges."""
+
+    eids: np.ndarray      # (E_pad,) edge ids, padded with m sentinels
+    n_real: int           # real (unpadded) edge count
+    D: int                # wedge-slot bound for this bucket (pow2)
+    chunk: int            # scan chunk size
+
+    @property
+    def capacity(self) -> int:
+        """Wedge-tensor elements this bucket materializes in total."""
+        return len(self.eids) * self.D
+
+
+def wedge_bucket_plan(
+    g: Graph, chunk: int = 1 << 14, budget: int = 1 << 18
+) -> list[WedgeBucket]:
+    """Group oriented edges by the pow2 out-degree of their source row.
+
+    Every bucket runs the wedge enumeration with its own D = 2^b covering
+    source rows of length in (2^(b-1), 2^b], so a single hub vertex no longer
+    inflates the wedge tensor of every chunk (the dense blow-up of the
+    global-D path on power-law graphs).  ``budget`` bounds chunk*D elements
+    per scan step, keeping peak memory flat across buckets.
+    """
+    if g.m == 0:
+        return []
+    row_len = (g.indptr[g.src + 1] - g.indptr[g.src]).astype(np.int64)
+    # bucket index: ceil(log2(row_len)), row_len >= 1 always (dst is in src's row)
+    b_idx = np.zeros(g.m, dtype=np.int64)
+    nz = row_len > 1
+    b_idx[nz] = np.ceil(np.log2(row_len[nz])).astype(np.int64)
+    plan: list[WedgeBucket] = []
+    for b in np.unique(b_idx):
+        ids = np.nonzero(b_idx == b)[0].astype(np.int32)
+        D = 1 << int(b)
+        # chunk never exceeds the bucket itself — padding a 2-edge bucket to
+        # a 16k chunk would reintroduce the blow-up bucketing removes
+        c = max(1, min(chunk, budget // D, _pow2_ceil(len(ids))))
+        e_pad = -(-len(ids) // c) * c
+        ids_pad = np.full(e_pad, g.m, np.int32)
+        ids_pad[: len(ids)] = ids
+        plan.append(WedgeBucket(eids=ids_pad, n_real=len(ids), D=D, chunk=c))
+    return plan
+
+
+def edge_support_jax(
+    g: Graph, chunk: int = 1 << 14, *, bucketed: bool = True,
+    budget: int = 1 << 18,
+) -> jnp.ndarray:
+    """Device-path support computation (jit'd, static shapes).
+
+    ``bucketed=True`` (default) runs the skew-aware per-bucket wedge scans;
+    ``bucketed=False`` restores the single global-D scan (the seed behavior,
+    kept for benchmarks and as a fallback).
+    """
     if g.m == 0:
         return jnp.zeros(0, jnp.int32)
-    chunk = min(chunk, max(256, 1 << math.ceil(math.log2(g.m))))
-    m_pad = ((g.m + chunk - 1) // chunk) * chunk
-    pad = m_pad - g.m
-    src = jnp.asarray(np.concatenate([g.src, np.zeros(pad, np.int32)]))
-    dst = jnp.asarray(np.concatenate([g.dst, np.zeros(pad, np.int32)]))
-    sup = _support_scan(
-        src, dst, jnp.asarray(g.indptr), jnp.asarray(g.nbrs),
-        jnp.asarray(g.nbr_eid), jnp.int32(g.m),
-        D=max(g.max_out_deg, 1), iters=_search_iters(g.max_out_deg), chunk=chunk,
-    )
+    src = jnp.asarray(np.concatenate([g.src, np.zeros(1, np.int32)]))
+    dst = jnp.asarray(np.concatenate([g.dst, np.zeros(1, np.int32)]))
+    indptr = jnp.asarray(g.indptr)
+    nbrs = jnp.asarray(g.nbrs)
+    nbr_eid = jnp.asarray(g.nbr_eid)
+    iters = _search_iters(g.max_out_deg)
+    if bucketed:
+        plan = wedge_bucket_plan(g, chunk, budget)
+    else:
+        c = max(8, min(chunk, _pow2_ceil(g.m)))
+        e_pad = -(-g.m // c) * c
+        ids_pad = np.full(e_pad, g.m, np.int32)
+        ids_pad[: g.m] = np.arange(g.m, dtype=np.int32)
+        plan = [WedgeBucket(ids_pad, g.m, max(g.max_out_deg, 1), c)]
+    sup = jnp.zeros(g.m + 1, jnp.int32)
+    for bucket in plan:
+        sup = sup + _support_scan(
+            jnp.asarray(bucket.eids), src, dst, indptr, nbrs, nbr_eid,
+            D=bucket.D, iters=iters, chunk=bucket.chunk,
+        )
     return sup[: g.m]
+
+
+# ---------------------------------------------------------------------------
+# dense/sparse dispatch (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def dense_core_stats(g: Graph) -> tuple[np.ndarray, float]:
+    """(sorted active vertices, edge density over active vertices)."""
+    if g.m == 0:
+        return np.zeros(0, np.int64), 0.0
+    verts = np.unique(g.edges.reshape(-1)).astype(np.int64)
+    n_act = len(verts)
+    density = 2.0 * g.m / (n_act * (n_act - 1)) if n_act > 1 else 0.0
+    return verts, density
+
+
+def edge_support_auto(
+    g: Graph,
+    *,
+    dense_threshold: float = 0.125,
+    dense_max_n: int = 4096,
+) -> np.ndarray:
+    """Support with sparse/dense routing (DESIGN.md §2).
+
+    Dense-core partitions (active-vertex density above ``dense_threshold``
+    and small enough for an adjacency tile set) go to the blocked dense
+    matmul path — the Pallas MXU kernel on TPU, its jnp reference elsewhere.
+    Sparse graphs take the bucketed wedge enumeration.
+    """
+    if g.m == 0:
+        return np.zeros(0, np.int64)
+    verts, density = dense_core_stats(g)
+    n_act = len(verts)
+    if n_act <= dense_max_n and density >= dense_threshold:
+        from repro.kernels.triangle_count.ops import dense_edge_support
+
+        relabel = np.zeros(int(verts.max()) + 1, np.int64)
+        relabel[verts] = np.arange(n_act)
+        compact = relabel[g.edges.astype(np.int64)].astype(np.int32)
+        use_kernel = jax.default_backend() == "tpu"
+        return dense_edge_support(
+            n_act, compact, use_kernel=use_kernel, interpret=not use_kernel
+        )
+    return np.asarray(edge_support_jax(g)).astype(np.int64)

@@ -36,7 +36,8 @@ import numpy as np
 from repro.core import graph as glib
 from repro.core.bottom_up import partitioned_support
 from repro.core.peel import peel_threshold, support_from_triangles
-from repro.core.support import edge_support_np, list_triangles_np
+from repro.core.support import (edge_support_auto, list_triangles_np,
+                                triangle_incidence_np)
 
 
 def upper_bounds(n: int, edges: np.ndarray, sup: np.ndarray) -> np.ndarray:
@@ -105,9 +106,11 @@ def top_down_decompose(
         return TopDownResult(edges, phi, [], 2, [], 0)
 
     # Stage 1 (Alg 3 variant): exact supports; Phi_2 = zero-support edges.
+    # edge_support_auto routes dense cores to the matmul/Pallas path and
+    # sparse graphs to the bucketed wedge scan (DESIGN.md §2).
     if budget is None:
         g = glib.build_graph(n, edges)
-        sup = edge_support_np(g)
+        sup = edge_support_auto(g)
     else:
         sup = partitioned_support(n, edges, budget)
     phi[sup == 0] = 2
@@ -121,6 +124,9 @@ def top_down_decompose(
     if len(tris_l) == 0:
         tris_l = np.full((1, 3), gnew.m, np.int32)
     tris = jnp.asarray(tris_l)
+    # one incidence CSR for the whole top-down run: every per-k candidate
+    # peel reuses it instead of rebuilding a T-sized index
+    incidence = triangle_incidence_np(tris_l, gnew.m)
     # masks below are in G_new-local edge ids
     alive_l = np.ones(gnew.m, dtype=bool)
     classified_l = np.zeros(gnew.m, dtype=bool)
@@ -158,7 +164,7 @@ def top_down_decompose(
         sup0 = support_from_triangles(tris, jnp.asarray(alive0), gnew.m)
         surv, _, _ = peel_threshold(
             sup0, tris, jnp.asarray(alive0), jnp.asarray(tentative),
-            jnp.int32(k - 3),
+            jnp.int32(k - 3), incidence=incidence,
         )
         phi_k = np.asarray(surv) & tentative
         if phi_k.any():

@@ -8,19 +8,50 @@ VMEM scratch accumulator and applies the edge mask A[i,j] once on the last
 k step.  All tile dims should be multiples of 128 to align with the MXU;
 inputs may be bf16 (0/1 values are exact in bf16), accumulation is f32.
 
-VMEM budget per step: bm*bk + bk*bn + 2*bm*bn tiles.  With 256x256x256 f32
-that is 4 * 256KiB = 1 MiB — comfortably inside the ~16 MiB/core VMEM, and
-the k-loop gives the pipeliner double-buffering room.
+VMEM budget per step (see ``kernel_vmem_bytes`` and DESIGN.md §5): the
+pipeliner double-buffers the three input tiles, the accumulator and output
+tile are single instances — ``2*(bm*bk + bk*bn + bm*bn)*in_bytes +
+2*bm*bn*4``.  With 256x256x256 f32 that is ~2 MiB, comfortably inside the
+~16 MiB/core VMEM; bf16 inputs (0/1 adjacency is exact in bf16) halve the
+input-tile traffic and let 512-wide k tiles fit.  ``autotune_tiles`` sweeps
+the budget-feasible (bm, bn, bk) candidates and caches the fastest.
 """
 
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# VMEM the tile working set may claim; real VMEM is ~16 MiB/core but the
+# pipeliner needs headroom for semaphores/regs, so budget conservatively.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+DEFAULT_TILE_CANDIDATES = (
+    (128, 128, 128),
+    (128, 128, 256),
+    (256, 128, 256),
+    (256, 256, 128),
+    (256, 256, 256),
+    (256, 256, 512),
+    (512, 256, 256),
+)
+
+
+def kernel_vmem_bytes(bm: int, bn: int, bk: int, in_dtype=jnp.float32) -> int:
+    """Per-step VMEM working set of the blocked kernel (DESIGN.md §5).
+
+    Double-buffered input tiles A[i,k], A[k,j], A[i,j] plus the f32
+    accumulator scratch and output tile.
+    """
+    in_bytes = jnp.dtype(in_dtype).itemsize
+    tiles_in = (bm * bk + bk * bn + bm * bn) * in_bytes * 2
+    acc_out = bm * bn * 4 * 2
+    return tiles_in + acc_out
 
 
 def _kernel(a_ik, a_kj, a_ij, o_ref, acc_ref):
@@ -47,9 +78,16 @@ def triangle_count_kernel(
     bk: int = 256,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """S = (A @ A) ∘ A.  A: (n, n), n divisible by the tile dims."""
+    """S = (A @ A) ∘ A.  A: (n, n) in f32 or bf16, n divisible by the tiles.
+
+    0/1 adjacency values and their per-tile dot products are exact in bf16
+    up to n = 256 per k-tile step; accumulation across k steps is always f32
+    (the scratch accumulator), so bf16 inputs lose no precision for counts
+    below 2^24 triangles per edge.
+    """
     n = A.shape[0]
     assert A.shape == (n, n)
+    assert A.dtype in (jnp.float32, jnp.bfloat16), A.dtype
     bm, bn, bk = (min(b, n) for b in (bm, bn, bk))
     assert n % bm == 0 and n % bn == 0 and n % bk == 0, (n, bm, bn, bk)
     grid = (n // bm, n // bn, n // bk)
@@ -66,3 +104,66 @@ def triangle_count_kernel(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(A, A, A)
+
+
+# ---------------------------------------------------------------------------
+# tile autotuning (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+_TUNE_CACHE: dict = {}
+
+
+def feasible_tiles(n: int, dtype=jnp.float32, candidates=None,
+                   budget_bytes: int = VMEM_BUDGET_BYTES):
+    """Candidate (bm, bn, bk) triples that divide n and fit the VMEM budget."""
+    out = []
+    for bm, bn, bk in (candidates or DEFAULT_TILE_CANDIDATES):
+        bm, bn, bk = min(bm, n), min(bn, n), min(bk, n)
+        if n % bm or n % bn or n % bk:
+            continue
+        if kernel_vmem_bytes(bm, bn, bk, dtype) > budget_bytes:
+            continue
+        if (bm, bn, bk) not in out:
+            out.append((bm, bn, bk))
+    return out or [(min(128, n),) * 3]
+
+
+def autotune_tiles(
+    n: int,
+    dtype=jnp.float32,
+    *,
+    candidates=None,
+    budget_bytes: int = VMEM_BUDGET_BYTES,
+    interpret: bool = False,
+    repeats: int = 2,
+    seed: int = 0,
+) -> tuple[int, int, int]:
+    """Sweep the feasible tile shapes on a random 0/1 matrix; return the
+    fastest.  Results are cached per (n, dtype, backend, interpret,
+    candidates, budget)."""
+    key = (n, jnp.dtype(dtype).name, jax.default_backend(), interpret,
+           tuple(candidates) if candidates is not None else None,
+           budget_bytes)
+    if key in _TUNE_CACHE:
+        return _TUNE_CACHE[key]
+    rng = jax.random.PRNGKey(seed)
+    A = (jax.random.uniform(rng, (n, n)) < 0.3).astype(dtype)
+    best, best_t = None, float("inf")
+    for tiles in feasible_tiles(n, dtype, candidates, budget_bytes):
+        bm, bn, bk = tiles
+        try:
+            fn = jax.jit(functools.partial(
+                triangle_count_kernel, bm=bm, bn=bn, bk=bk,
+                interpret=interpret))
+            jax.block_until_ready(fn(A))          # compile + warm up
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                jax.block_until_ready(fn(A))
+            t = (time.perf_counter() - t0) / repeats
+        except Exception:                          # infeasible on this backend
+            continue
+        if t < best_t:
+            best, best_t = tiles, t
+    best = best or (min(128, n),) * 3
+    _TUNE_CACHE[key] = best
+    return best

@@ -9,7 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.triangle_count import ref
-from repro.kernels.triangle_count.kernel import triangle_count_kernel
+from repro.kernels.triangle_count.kernel import (autotune_tiles,
+                                                 triangle_count_kernel)
 
 
 def _pad_pow(A: jnp.ndarray, multiple: int) -> jnp.ndarray:
@@ -21,26 +22,46 @@ def _pad_pow(A: jnp.ndarray, multiple: int) -> jnp.ndarray:
     return out.at[:n, :n].set(A)
 
 
+def _resolve_blocks(block, n, dtype, interpret):
+    """``block`` may be an int (cubic tiles), an (bm, bn, bk) tuple, or
+    "auto" (tile sweep via ``autotune_tiles``)."""
+    if block == "auto":
+        return autotune_tiles(n, dtype, interpret=interpret)
+    if isinstance(block, int):
+        return block, block, block
+    bm, bn, bk = block
+    return bm, bn, bk
+
+
 @partial(jax.jit, static_argnames=("block", "interpret", "use_kernel"))
+def _dense_support_jit(A, *, block, interpret, use_kernel):
+    n = A.shape[0]
+    bm, bn, bk = block
+    mult = max(bm, bn, bk)
+    Ap = _pad_pow(A, mult) if n % mult else A
+    if use_kernel:
+        S = triangle_count_kernel(Ap, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    else:
+        S = ref.support_dense(Ap)
+    return S[:n, :n]
+
+
 def dense_support(
     A: jnp.ndarray,
     *,
-    block: int = 256,
+    block=256,
     interpret: bool = True,
     use_kernel: bool = True,
 ) -> jnp.ndarray:
     """Per-edge support matrix for a dense adjacency block.
 
     Pads to a tile multiple, runs the Pallas kernel (or the jnp reference
-    when ``use_kernel=False``), slices back.
+    when ``use_kernel=False``), slices back.  ``block`` accepts an int, an
+    (bm, bn, bk) tuple, or "auto" for the tile sweep.
     """
-    n = A.shape[0]
-    Ap = _pad_pow(A, block) if n % block else A
-    if use_kernel:
-        S = triangle_count_kernel(Ap, bm=block, bn=block, bk=block, interpret=interpret)
-    else:
-        S = ref.support_dense(Ap)
-    return S[:n, :n]
+    blocks = _resolve_blocks(block, A.shape[0], A.dtype, interpret)
+    return _dense_support_jit(
+        A, block=blocks, interpret=interpret, use_kernel=use_kernel)
 
 
 def adjacency_from_edges(n: int, edges: np.ndarray, dtype=np.float32) -> np.ndarray:
@@ -52,9 +73,15 @@ def adjacency_from_edges(n: int, edges: np.ndarray, dtype=np.float32) -> np.ndar
 
 
 def dense_edge_support(
-    n: int, edges: np.ndarray, *, block: int = 256, interpret: bool = True
+    n: int, edges: np.ndarray, *, block=256, interpret: bool = True,
+    use_kernel: bool = True, dtype=np.float32,
 ) -> np.ndarray:
-    """sup(e) per canonical edge via the dense MXU path (for dense cores)."""
-    A = jnp.asarray(adjacency_from_edges(n, edges))
-    S = dense_support(A, block=block, interpret=interpret)
+    """sup(e) per canonical edge via the dense MXU path (for dense cores).
+
+    ``use_kernel=False`` runs the jnp reference matmul — the dispatch uses it
+    off-TPU where interpret-mode Pallas would defeat the point.  ``dtype``
+    may be bf16: 0/1 adjacency is exact and accumulation stays f32.
+    """
+    A = jnp.asarray(adjacency_from_edges(n, edges, np.float32)).astype(dtype)
+    S = dense_support(A, block=block, interpret=interpret, use_kernel=use_kernel)
     return np.asarray(S)[edges[:, 0], edges[:, 1]].astype(np.int64)

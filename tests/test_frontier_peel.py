@@ -1,0 +1,169 @@
+"""Frontier-compacted peel engine + skew-aware support (DESIGN.md §3-§4)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph as glib
+from repro.core.peel import (peel_classes, peel_classes_dense, peel_threshold,
+                             peel_threshold_dense, truss_decompose)
+from repro.core.serial import alg2_truss
+from repro.core.support import (edge_support_jax, edge_support_np,
+                                list_triangles_np, support_from_triangle_list,
+                                triangle_incidence_np, wedge_bucket_plan)
+from tests.conftest import random_graph
+
+
+def _star_plus_clique(hub_deg=2000, q=30):
+    """One hub vertex of degree ``hub_deg`` plus a disjoint q-clique — the
+    skew shape that blows up a global-max-out-degree wedge tensor."""
+    star = np.stack([np.zeros(hub_deg, np.int64),
+                     np.arange(1, hub_deg + 1)], 1)
+    iu = np.triu_indices(q, 1)
+    clique = np.stack(iu, 1) + hub_deg + 1
+    n = hub_deg + 1 + q
+    return n, glib.canonical_edges(np.concatenate([star, clique]), n)
+
+
+def _prep(n, ce):
+    g = glib.build_graph(n, ce)
+    tris = list_triangles_np(g)
+    sup = support_from_triangle_list(tris, g.m).astype(np.int32)
+    if len(tris) == 0:
+        tris = np.full((1, 3), g.m, np.int32)
+    return g, tris, sup
+
+
+class TestSkewAwareSupport:
+    def test_star_plus_clique_matches_np(self):
+        n, ce = _star_plus_clique()
+        g = glib.build_graph(n, ce)
+        assert (edge_support_np(g) == np.asarray(edge_support_jax(g))).all()
+
+    def test_bucketed_capacity_bounded(self):
+        """The wedge-tensor capacity must not track the hub's degree."""
+        n, ce = _star_plus_clique()
+        g = glib.build_graph(n, ce)
+        plan = wedge_bucket_plan(g)
+        cap = sum(b.capacity for b in plan)
+        # global-D capacity pays max_out_deg slots for every edge
+        assert cap * 3 < g.m * g.max_out_deg
+        # each bucket's D covers its own rows: no row longer than D, and D
+        # never more than 2x the longest row it serves
+        row_len = g.indptr[g.src + 1] - g.indptr[g.src]
+        for b in plan:
+            lens = row_len[b.eids[: b.n_real]]
+            assert lens.max() <= b.D
+            assert b.D <= max(2 * int(lens.max()), 1)
+
+    def test_bucketed_equals_global_d(self, rng):
+        e = random_graph(rng, 120, 0.1)
+        g = glib.build_graph(120, glib.canonical_edges(e, 120))
+        a = np.asarray(edge_support_jax(g, bucketed=True))
+        b = np.asarray(edge_support_jax(g, bucketed=False))
+        assert (a == b).all()
+
+    def test_skew_trussness_exact(self):
+        n, ce = _star_plus_clique(hub_deg=300, q=12)
+        assert (truss_decompose(n, ce) == alg2_truss(n, ce)).all()
+
+
+class TestFrontierPeel:
+    @pytest.mark.parametrize("trial", range(8))
+    def test_matches_serial_random(self, rng, trial):
+        for _ in range(trial + 1):
+            n = int(rng.integers(8, 70))
+            p = rng.uniform(0.05, 0.5)
+        e = random_graph(rng, n, p)
+        ce = glib.canonical_edges(e, n)
+        if len(ce) == 0:
+            return
+        oracle = alg2_truss(n, ce)
+        g, tris, sup = _prep(n, ce)
+        for engine in ("frontier", "auto"):
+            phi, alive = peel_classes(
+                jnp.asarray(sup), jnp.asarray(tris), jnp.ones(g.m, bool),
+                engine=engine)
+            assert (np.asarray(phi) == oracle).all()
+            assert not np.asarray(alive).any()
+
+    def test_matches_dense_engine(self, rng):
+        e = random_graph(rng, 60, 0.3)
+        ce = glib.canonical_edges(e, 60)
+        g, tris, sup = _prep(60, ce)
+        args = (jnp.asarray(sup), jnp.asarray(tris), jnp.ones(g.m, bool))
+        phi_f, _ = peel_classes(*args, engine="frontier")
+        phi_d, _ = peel_classes_dense(*args)
+        assert (np.asarray(phi_f) == np.asarray(phi_d)).all()
+
+    def test_max_k_stops_early(self, rng):
+        e = random_graph(rng, 50, 0.4)
+        ce = glib.canonical_edges(e, 50)
+        g, tris, sup = _prep(50, ce)
+        oracle = alg2_truss(50, ce)
+        args = (jnp.asarray(sup), jnp.asarray(tris), jnp.ones(g.m, bool))
+        kcut = int(oracle.max()) - 1
+        if kcut < 2:
+            return
+        phi, alive = peel_classes(*args, max_k=kcut, engine="frontier")
+        phi, alive = np.asarray(phi), np.asarray(alive)
+        assert (phi[oracle <= kcut] == oracle[oracle <= kcut]).all()
+        assert (phi[oracle > kcut] == 0).all()
+        assert (alive == (oracle > kcut)).all()
+
+    def test_threshold_matches_dense(self, rng):
+        e = random_graph(rng, 50, 0.35)
+        ce = glib.canonical_edges(e, 50)
+        g, tris, sup = _prep(50, ce)
+        removable = jnp.asarray(rng.random(g.m) < 0.7)
+        args = (jnp.asarray(sup), jnp.asarray(tris), jnp.ones(g.m, bool),
+                removable, jnp.int32(2))
+        a_f, s_f, r_f = peel_threshold(*args, engine="frontier")
+        a_d, s_d, r_d = peel_threshold_dense(*args)
+        assert (np.asarray(a_f) == np.asarray(a_d)).all()
+        assert (np.asarray(r_f) == np.asarray(r_d)).all()
+        assert (np.asarray(s_f)[np.asarray(a_f)]
+                == np.asarray(s_d)[np.asarray(a_d)]).all()
+
+    def test_scatter_work_scales_with_frontier(self, rng):
+        """Total gathered incidence slots == 3T for a full decomposition —
+        each (edge, triangle) pair is touched exactly once, in the round its
+        edge dies; the dense engine would touch rounds * 3T slots."""
+        e = random_graph(rng, 90, 0.25)
+        ce = glib.canonical_edges(e, 90)
+        g, tris, sup = _prep(90, ce)
+        T = int((tris < g.m).all(axis=1).sum())
+        phi, _, stats = peel_classes(
+            jnp.asarray(sup), jnp.asarray(tris), jnp.ones(g.m, bool),
+            with_stats=True)
+        assert stats.gathered == 3 * T
+        assert stats.removed == g.m
+        assert stats.rounds > 1
+        # the dense engine's scatter work for the same decomposition
+        assert stats.gathered < stats.rounds * 3 * T
+        assert stats.max_frontier <= g.m
+
+    def test_capacity_overflow_resume(self, rng):
+        """Undersized explicit capacities must recover via host doubling."""
+        e = random_graph(rng, 40, 0.5)
+        ce = glib.canonical_edges(e, 40)
+        oracle = alg2_truss(40, ce)
+        g, tris, sup = _prep(40, ce)
+        phi, _, stats = peel_classes(
+            jnp.asarray(sup), jnp.asarray(tris), jnp.ones(g.m, bool),
+            cap_f=4, cap_t=1, with_stats=True)
+        assert (np.asarray(phi) == oracle).all()
+        assert stats.resumes > 0
+
+    def test_incidence_csr_shape(self, rng):
+        e = random_graph(rng, 60, 0.3)
+        ce = glib.canonical_edges(e, 60)
+        g, tris, _ = _prep(60, ce)
+        indptr, tids = triangle_incidence_np(tris, g.m)
+        T = int((tris < g.m).all(axis=1).sum())
+        assert indptr[-1] == 3 * T == len(tids)
+        # row e lists exactly the triangles containing e
+        for eid in rng.integers(0, g.m, 5):
+            row = tids[indptr[eid]:indptr[eid + 1]]
+            assert set(row) == {t for t in range(len(tris))
+                                if eid in tris[t]}

@@ -41,6 +41,50 @@ class TestTriangleCount:
         sup_sparse = edge_support_np(glib.build_graph(90, ce))
         assert (sup_dense == sup_sparse).all()
 
+    def test_rectangular_tiles(self, rng):
+        from repro.kernels.triangle_count.ops import (adjacency_from_edges,
+                                                      dense_support)
+        ce = glib.canonical_edges(random_graph(rng, 128, 0.2), 128)
+        A = jnp.asarray(adjacency_from_edges(128, ce))
+        S_ref = dense_support(A, block=128, interpret=True, use_kernel=False)
+        for block in [(64, 64, 128), (128, 64, 64), (64, 128, 32)]:
+            S = dense_support(A, block=block, interpret=True)
+            np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref))
+
+    def test_bf16_tiles_f32_accum(self, rng):
+        from repro.kernels.triangle_count.ops import dense_edge_support
+        ce = glib.canonical_edges(random_graph(rng, 96, 0.3), 96)
+        sup16 = dense_edge_support(96, ce, block=32, interpret=True,
+                                   dtype=jnp.bfloat16)
+        sup_sparse = edge_support_np(glib.build_graph(96, ce))
+        assert (sup16 == sup_sparse).all()
+
+    def test_vmem_budget_and_feasible_tiles(self):
+        from repro.kernels.triangle_count.kernel import (VMEM_BUDGET_BYTES,
+                                                         feasible_tiles,
+                                                         kernel_vmem_bytes)
+        # bf16 tiles are half the input footprint of f32
+        assert kernel_vmem_bytes(256, 256, 256, jnp.bfloat16) < \
+            kernel_vmem_bytes(256, 256, 256, jnp.float32)
+        for tiles in feasible_tiles(512, jnp.float32):
+            bm, bn, bk = tiles
+            assert 512 % bm == 0 and 512 % bn == 0 and 512 % bk == 0
+            assert kernel_vmem_bytes(bm, bn, bk) <= VMEM_BUDGET_BYTES
+
+    def test_autotune_smoke(self, rng):
+        from repro.kernels.triangle_count.kernel import autotune_tiles
+        from repro.kernels.triangle_count.ops import (adjacency_from_edges,
+                                                      dense_support)
+        tiles = autotune_tiles(64, interpret=True, repeats=1)
+        assert 64 % tiles[0] == 0
+        # cached on second call
+        assert autotune_tiles(64, interpret=True, repeats=1) == tiles
+        ce = glib.canonical_edges(random_graph(rng, 64, 0.3), 64)
+        A = jnp.asarray(adjacency_from_edges(64, ce))
+        S = dense_support(A, block="auto", interpret=True)
+        S_ref = dense_support(A, block=64, interpret=True, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref))
+
 
 class TestFlashAttention:
     @pytest.mark.parametrize("B,Hq,Hkv,S,D,win", [
