@@ -1,63 +1,68 @@
-"""Hillclimb driver: re-lower one cell after a code/config change and diff
-the roofline terms against a recorded baseline.
+"""Hillclimb driver for the truss benchmarks: re-run one benchmark table
+after a code change and diff every row's ``us_per_call`` against a recorded
+baseline JSON (e.g. the committed BENCH_peel.json / BENCH_ooc.json, or a
+previous hillclimb result).
 
 Usage:
-  PYTHONPATH=src python -m benchmarks.hillclimb --arch qwen2.5-14b \
-      --shape decode_32k --tag flat_constraints \
-      [--baseline results/perf/<file>.json]
+  PYTHONPATH=src python -m benchmarks.hillclimb --table peel --tag mychange \
+      [--baseline BENCH_peel.json] [--smoke]
 
-Writes results/perf/<arch>_<shape>_<tag>.json and prints the before/after
-table used in EXPERIMENTS.md §Perf.
+Writes results/perf/<table>_<tag>.json and prints a before/after table —
+the perf-trajectory workflow DESIGN.md §6 describes, applied to any table
+in ``benchmarks.run.TABLES``.
 """
 
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+from __future__ import annotations
 
 import argparse
 import json
+import os
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
-    ap.add_argument("--tag", required=True)
-    ap.add_argument("--baseline", default=None)
-    ap.add_argument("--multi-pod", action="store_true")
-    args = ap.parse_args()
+def main(argv=None) -> None:
+    from benchmarks import run as runlib
 
-    from repro.configs import registry
-    from repro.launch.dryrun import run_cell
-    from repro.launch.mesh import make_production_mesh
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--table", required=True, choices=sorted(runlib.TABLES),
+                    help="benchmark table to re-run")
+    ap.add_argument("--tag", required=True,
+                    help="label for the results/perf/ output file")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON (a BENCH_*.json or a previous "
+                         "hillclimb result) to diff against")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest-dataset variant (peel / table4 only)")
+    args = ap.parse_args(argv)
 
-    mesh = make_production_mesh(multi_pod=args.multi_pod)
-    cell = registry.get_cell(args.arch, args.shape)
-    rec = run_cell(cell, mesh, "2pod16x16" if args.multi_pod else "pod16x16")
-    safe = args.arch.replace(".", "_").replace("-", "_")
-    out = f"results/perf/{safe}_{args.shape}_{args.tag}.json"
-    os.makedirs("results/perf", exist_ok=True)
-    with open(out, "w") as f:
-        json.dump([rec], f, indent=1)
-    print(f"wrote {out}")
-    keys = ("t_compute", "t_memory", "t_collective", "bottleneck",
-            "temp_bytes", "roofline_fraction", "model_flops_ratio")
-    if not rec.get("ok"):
-        print("FAIL:", rec.get("error"))
-        return
-    if args.baseline:
-        with open(args.baseline) as f:
-            base = json.load(f)
-        base = base[0] if isinstance(base, list) else base
-        print(f"{'term':<20}{'baseline':>14}{'now':>14}{'delta':>10}")
-        for k in keys:
-            b, n = base.get(k), rec.get(k)
-            if isinstance(b, float) and isinstance(n, float) and b:
-                print(f"{k:<20}{b:>14.4e}{n:>14.4e}{n/b:>9.2f}x")
-            else:
-                print(f"{k:<20}{str(b):>14}{str(n):>14}")
+    runlib.ROWS.clear()
+    fn = runlib.TABLES[args.table]
+    print("name,us_per_call,derived")
+    if args.table in runlib.SMOKE_TABLES:
+        fn(smoke=args.smoke)
     else:
-        for k in keys:
-            print(f"{k:<20}{rec.get(k)}")
+        fn()
+    rows = list(runlib.ROWS)
+
+    os.makedirs("results/perf", exist_ok=True)
+    out = f"results/perf/{args.table}_{args.tag}.json"
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"# wrote {len(rows)} records to {out}")
+
+    if not args.baseline:
+        return
+    with open(args.baseline) as f:
+        base = {r["name"]: r for r in json.load(f)}
+    print(f"\n{'row':<44}{'baseline_us':>14}{'now_us':>14}{'ratio':>8}")
+    for r in rows:
+        b = base.get(r["name"])
+        if b is None or not b.get("us_per_call"):
+            print(f"{r['name']:<44}{'--':>14}{r['us_per_call']:>14.1f}"
+                  f"{'--':>8}")
+            continue
+        ratio = r["us_per_call"] / b["us_per_call"]
+        print(f"{r['name']:<44}{b['us_per_call']:>14.1f}"
+              f"{r['us_per_call']:>14.1f}{ratio:>7.2f}x")
 
 
 if __name__ == "__main__":

@@ -8,8 +8,10 @@ engine's round/frontier-size statistics):
               (TD-inmem+) vs the vectorized bulk peel (ours).  The paper's
               headline speedup (2.2–73x) is algorithmic; we report the
               same comparison on power-law graphs.
-  table4_*  — out-of-memory regime: bottom-up partitioned vs the
-              global-iterate baseline (the MapReduce [16] stand-in).
+  table4_*  — out-of-memory regime on the rmat graphs: batched OOC engine
+              vs the seed per-part path vs the global-iterate baseline
+              (the MapReduce [16] stand-in); ``--only table4 --json
+              BENCH_ooc.json`` records the OocStats counters.
   table5_*  — top-down top-t vs bottom-up full decomposition.
   table6_*  — k_max-truss vs c_max-core statistics (sizes, clustering).
   peel_*    — frontier-compacted engine vs the seed dense engine
@@ -18,7 +20,8 @@ engine's round/frontier-size statistics):
               scaled shapes; TPU wall-times come from the roofline).
 
 Usage: ``run.py [--json BENCH_peel.json] [--only PREFIX ...] [--smoke]``.
-``--smoke`` restricts the peel comparison to the smallest dataset (CI).
+``--smoke`` restricts the peel and table4 comparisons to their smallest
+dataset (CI).
 """
 
 from __future__ import annotations
@@ -70,18 +73,31 @@ def table3_inmemory():
              f"speedup_vs_alg1={us1/usb:.2f}")
 
 
-def table4_bottom_up():
-    from benchmarks.datasets import MEDIUM, load
+def table4_bottom_up(smoke: bool = False):
+    """Out-of-memory regime: batched OOC engine (DESIGN.md §8) vs the seed
+    per-part path vs the global-iterate baseline (MapReduce [16] stand-in).
+
+    The rmat graphs are the paper's web/social shape; the budget (1/32 of
+    the graph, the deep out-of-core regime) forces hundreds of partitions
+    per round, so the rows measure exactly the regime the batch engine
+    targets: the seed path pays one host subgraph build + one freshly
+    shaped compile per part, the batched engine a handful of pow2 shapes
+    per run.  ``--json BENCH_ooc.json`` captures the OocStats counters
+    (rounds, scans, batches, compiles, padding waste).
+    """
+    from benchmarks.datasets import load
     from repro.core.bottom_up import bottom_up_decompose
     from repro.core.graph import build_graph
     from repro.core.peel import peel_recompute
-    from repro.core.serial import alg2_truss
     from repro.core.support import list_triangles_np
 
-    for name in MEDIUM:
+    names = ["hep-like"] if smoke else ["hep-like", "amazon-like", "wiki-like"]
+    for name in names:
         n, edges = load(name)
-        budget = max(len(edges) // 8, 1024)   # "memory" = 1/8 of the graph
+        budget = max(len(edges) // 32, 1024)  # "memory" = 1/32 of the graph
         usb, res = _time(lambda: bottom_up_decompose(n, edges, budget))
+        usp, res_p = _time(
+            lambda: bottom_up_decompose(n, edges, budget, engine="perpart"))
         # global-iterate baseline (MapReduce stand-in): recompute supports
         # from scratch every round over the whole graph
         g = build_graph(n, edges)
@@ -91,15 +107,28 @@ def table4_bottom_up():
         tj = jnp.asarray(tris)
         usm, phim = _time(
             lambda: np.asarray(peel_recompute(tj, jnp.ones(g.m, bool))))
-        # cross-check the two paths against each other (the serial oracle is
-        # exercised on these sizes in table3 / tests; python-oracle runs on
-        # 300k+ edge graphs would dominate the harness wall time)
-        assert (res.phi == phim).all()
-        emit(f"table4_{name}_TDbottomup", usb,
-             f"m={len(edges)};rounds={res.rounds};scans={res.scans};"
-             f"budget={budget}")
+        # cross-check the three paths against each other (the serial oracle
+        # is exercised on these sizes in table3 / tests; python-oracle runs
+        # on 300k+ edge graphs would dominate the harness wall time)
+        assert (res.phi == phim).all() and (res.phi == res_p.phi).all()
+        st, st_p = res.stats, res_p.stats
+        emit(f"table4_{name}_TDbottomup_batched", usb,
+             f"m={len(edges)};rounds={res.rounds};parts={st.parts};"
+             f"batches={st.batches};compiles={st.compiles};"
+             f"speedup_vs_perpart={usp/usb:.2f};budget={budget}",
+             m=len(edges), budget=budget, rounds=res.rounds,
+             scans=res.scans, parts=st.parts, batches=st.batches,
+             compiles=st.compiles, max_part_edges=st.max_part_edges,
+             padding_waste=st.padding_waste,
+             speedup_vs_perpart=usp / usb)
+        emit(f"table4_{name}_TDbottomup_perpart_seed", usp,
+             f"rounds={res_p.rounds};scans={res_p.scans};"
+             f"parts={st_p.parts};budget={budget}",
+             m=len(edges), budget=budget, rounds=res_p.rounds,
+             scans=res_p.scans, parts=st_p.parts)
         emit(f"table4_{name}_globaliter_MRstandin", usm,
-             f"slowdown_vs_bottomup={usm/usb:.2f}")
+             f"slowdown_vs_batched={usm/usb:.2f}",
+             slowdown_vs_batched=usm / usb)
 
 
 def table5_top_down():
@@ -274,6 +303,9 @@ TABLES = {
     "roofline": roofline_summary,
 }
 
+# tables that accept smoke= (smallest-dataset variant); shared with hillclimb
+SMOKE_TABLES = ("peel", "table4")
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -283,7 +315,8 @@ def main(argv=None) -> None:
                     help="run only tables whose key starts with PREFIX "
                          "(repeatable); default: all")
     ap.add_argument("--smoke", action="store_true",
-                    help="smallest-dataset smoke run of the peel comparison")
+                    help="smallest-dataset smoke run of the peel and "
+                         "table4 (OOC engine) comparisons")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
@@ -293,7 +326,7 @@ def main(argv=None) -> None:
         if args.only is not None and not any(key.startswith(p)
                                              for p in args.only):
             continue
-        if key == "peel":
+        if key in SMOKE_TABLES:
             fn(smoke=args.smoke)
         else:
             fn()

@@ -1,18 +1,34 @@
 """Bottom-up I/O-efficient truss decomposition (paper Section 5, Alg 3-5).
 
-Two stages, adapted to the TPU memory hierarchy (DESIGN.md §2):
+Two stages, adapted to the TPU memory hierarchy (DESIGN.md §2, §8):
 
 Stage 1 — ``lower_bounding`` (Algorithm 3): partition the current graph's
 vertices into parts whose neighborhood subgraphs fit the working-set budget;
-decompose each NS(P) *locally* (bulk peel, device-side); Lemma 1 makes the
-local trussness a global lower bound φ(e).  Internal edges are removed after
-each round and emitted to ``G_new``; the loop repeats on the shrinking
-remainder until no edges are left.
+decompose each NS(P) *locally*; Lemma 1 makes the local trussness a global
+lower bound φ(e).  Internal edges are removed after each round and emitted
+to ``G_new``; the loop repeats on the shrinking remainder until no edges are
+left.
 
-Stage 2 — ``bottom_up_decompose`` (Algorithm 4 + Procedure 5): for k = 2, 3,
-…: extract the candidate subgraph H = NS(U_k), U_k = endpoints of edges with
+Stage 2 — ``bottom_up_decompose`` (Algorithm 4 + Procedure 5): for ascending
+k: extract the candidate subgraph H = NS(U_k), U_k = endpoints of edges with
 φ(e) <= k; peel H at threshold (k-2) — the removed internal edges are exactly
-Φ_k (Theorem 2); delete them from G_new and continue.
+Φ_k (Theorem 2); delete them from G_new and continue.  Empty classes are
+skipped by jumping k straight to ``min lb`` over the remaining edges.
+
+Engines (DESIGN.md §8):
+
+* ``engine="batched"`` (default) — one :class:`partition.PartitionBatch` per
+  round: every NS(P) compacted to local ids, parts grouped into pow4 size
+  classes, lane-packed and padded to static shapes, every bucket decomposed
+  in ONE device call (``peel.peel_classes_batched``, one compile per bucket
+  shape); the
+  working graph shrinks via ``Graph.remove_edges`` incremental maintenance
+  instead of a per-round rebuild.  Stage-2 candidates are compacted and
+  peeled on pow4-padded shapes (``peel.local_threshold_peel``), so
+  consecutive k values share one compiled kernel.
+* ``engine="perpart"`` — the seed path (full ``build_graph`` per round, one
+  host triangle enumeration and one freshly-shaped device peel per part);
+  kept as the before/after benchmark baseline (BENCH_ooc.json).
 
 Deviation from the paper (documented in DESIGN.md §7): Algorithm 3 Step 8
 flags internal zero-support edges as Φ_2 in *every* round, but from round 2
@@ -27,15 +43,17 @@ stage-2 candidate supports are always exact w.r.t. G_new.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List
+from typing import Callable, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graph as glib
 from repro.core import partition as plib
-from repro.core.peel import peel_classes, peel_threshold
-from repro.core.support import list_triangles_np, support_from_triangle_list
+from repro.core.peel import (local_threshold_peel, peel_classes,
+                             peel_classes_batched, peel_threshold)
+from repro.core.support import (list_triangles, list_triangles_np,
+                                support_from_triangle_list)
 
 
 def _resolve_partitioner(partitioner):
@@ -54,6 +72,41 @@ def _resolve_partitioner(partitioner):
 
 
 @dataclasses.dataclass
+class OocStats:
+    """Work counters of one out-of-core run (mirrors ``PeelStats``).
+
+    ``compiles`` counts distinct padded shapes this run traced — the cost
+    the bucket padding exists to bound (the seed per-part path compiled once
+    per part shape).  The jit cache is process-global, so the counter is an
+    upper bound on actual XLA work.  ``padding_waste`` is the fraction of
+    materialized lane slots that held no real edge.
+    """
+
+    rounds: int = 0           # partition rounds (the paper's O(m/M) scans)
+    scans: int = 0            # NS/candidate extractions (I/O-scan analogue)
+    batches: int = 0          # device launches (one per bucket per round)
+    compiles: int = 0         # distinct padded shapes traced this run
+    parts: int = 0            # NS parts processed
+    max_part_edges: int = 0   # largest NS working set seen (budget check)
+    real_edges: int = 0       # Σ real edge slots across all batches
+    padded_slots: int = 0     # Σ materialized lane slots across all batches
+
+    @property
+    def padding_waste(self) -> float:
+        if not self.padded_slots:
+            return 0.0
+        return 1.0 - self.real_edges / self.padded_slots
+
+    def absorb_batch(self, batch: "plib.PartitionBatch") -> None:
+        self.parts += batch.n_parts
+        self.scans += batch.n_parts
+        self.batches += len(batch.buckets)
+        self.real_edges += batch.real_edges
+        self.padded_slots += batch.padded_slots
+        self.max_part_edges = max(self.max_part_edges, batch.max_part_edges)
+
+
+@dataclasses.dataclass
 class LowerBoundResult:
     edges: np.ndarray        # canonical edge list of the original graph
     phi: np.ndarray          # trussness; filled with 2 for the exact Phi_2
@@ -62,13 +115,16 @@ class LowerBoundResult:
     rounds: int              # partition rounds (the paper's O(m/M) iterations)
     scans: int               # NS extractions (I/O-scan analogue)
     max_part_edges: int      # largest NS working set seen (budget check)
+    stats: Optional[OocStats] = None
 
 
 def _local_truss(sub_edges: np.ndarray, n: int) -> np.ndarray:
-    """Trussness of every edge of the subgraph (frontier bulk peel).
+    """Trussness of every edge of the subgraph (seed per-part local peel).
 
-    The initial supports come for free from the triangle list (which the peel
-    needs anyway), so each NS(P) costs one wedge enumeration, not two.
+    One ``build_graph`` over the FULL vertex space, one host triangle
+    enumeration and one dynamically-shaped device peel per call — the
+    per-part cost model the batched engine replaces; kept as the benchmark
+    baseline and as a second implementation for the batch-padding tests.
     """
     g = glib.build_graph(n, sub_edges)
     if g.m == 0:
@@ -86,39 +142,105 @@ def lower_bounding(
     edges: np.ndarray,
     budget: int,
     partitioner: str | Callable = "sequential",
+    engine: str = "batched",
 ) -> LowerBoundResult:
     """Algorithm 3: per-edge lower bounds + exact round-1 Phi_2."""
     part_fn = _resolve_partitioner(partitioner)
     edges = glib.canonical_edges(edges, n)
+    if engine == "perpart":
+        return _lower_bounding_perpart(n, edges, budget, part_fn)
+    if engine != "batched":
+        raise ValueError(f"unknown engine {engine!r}")
+    return _lower_bounding_batched(n, edges, budget, part_fn)
+
+
+def _lower_bounding_batched(n, edges, budget, part_fn) -> LowerBoundResult:
+    m = len(edges)
+    phi = np.zeros(m, dtype=np.int64)
+    lb = np.full(m, 2, dtype=np.int64)
+    in_gnew = np.zeros(m, dtype=bool)
+    stats = OocStats()
+    shape_cache: set = set()
+    g = glib.build_graph(n, edges)
+    cur_ids = np.arange(m, dtype=np.int64)   # current edge id -> original id
+    cur_budget = budget
+
+    while g.m:
+        stats.rounds += 1
+        parts = part_fn(g, cur_budget, stats.rounds)
+        if not parts:
+            break
+        batch = plib.build_partition_batch(g, parts)
+        stats.absorb_batch(batch)
+        removed = np.zeros(g.m, dtype=bool)
+        for bucket in batch.buckets:
+            phi_b, _, new = peel_classes_batched(
+                bucket.sup, bucket.tris, bucket.indptr, bucket.tids,
+                bucket.alive, shape_cache=shape_cache)
+            stats.compiles += int(new)
+            # internal edges live in exactly one part, so flat scatters are
+            # collision-free; lb takes the max anyway (Lemma 1 is a bound)
+            int_mask = bucket.internal
+            ids_int = bucket.edge_ids[int_mask]          # current-graph ids
+            phi_int = phi_b[int_mask].astype(np.int64)
+            glob = cur_ids[ids_int]
+            np.maximum.at(lb, glob, phi_int)
+            if stats.rounds == 1:
+                # Exact Phi_2: internal support == global support in G here.
+                is2 = phi_int == 2
+                phi[glob[is2]] = 2
+                in_gnew[glob[~is2]] = True
+            else:
+                in_gnew[glob] = True
+            removed[ids_int] = True
+        if not removed.any():
+            # Stalled: no crossing edge became internal (can happen with a
+            # deterministic partitioner).  Paper's remedy is the randomized
+            # re-partition; the hard fallback is to grow the working set.
+            cur_budget *= 2
+            continue
+        cur_ids = cur_ids[~removed]
+        g = g.remove_edges(removed)
+
+    return LowerBoundResult(
+        edges=edges, phi=phi, lb=lb, in_gnew=in_gnew, rounds=stats.rounds,
+        scans=stats.scans, max_part_edges=stats.max_part_edges, stats=stats,
+    )
+
+
+def _lower_bounding_perpart(n, edges, budget, part_fn) -> LowerBoundResult:
+    """Seed path: per-round rebuild, per-part NS scan + dynamic-shape peel."""
     m = len(edges)
     phi = np.zeros(m, dtype=np.int64)
     lb = np.full(m, 2, dtype=np.int64)
     alive = np.ones(m, dtype=bool)          # still in the working graph
     in_gnew = np.zeros(m, dtype=bool)       # emitted to G_new
-    rounds = scans = 0
-    max_part = 0
+    stats = OocStats()
     cur_budget = budget
 
     while alive.any():
-        rounds += 1
+        stats.rounds += 1
         cur_ids = np.nonzero(alive)[0]
         g = glib.build_graph(n, edges[cur_ids])
-        parts = part_fn(g, cur_budget, rounds)
+        parts = part_fn(g, cur_budget, stats.rounds)
         if not parts:
             break
         round_removed = np.zeros(len(cur_ids), dtype=bool)
         for P in parts:
-            scans += 1
+            stats.scans += 1
+            stats.parts += 1
+            stats.batches += 1
             sub_ids, sub_edges, internal = glib.neighborhood_subgraph(g, P)
             if len(sub_ids) == 0:
                 continue
-            max_part = max(max_part, len(sub_ids))
+            stats.max_part_edges = max(stats.max_part_edges, len(sub_ids))
+            stats.real_edges += len(sub_ids)
+            stats.padded_slots += len(sub_ids)
             phi_local = _local_truss(sub_edges, n)
             int_ids = sub_ids[internal]               # ids in current graph
             glob_ids = cur_ids[int_ids]               # ids in original graph
             lb[glob_ids] = np.maximum(lb[glob_ids], phi_local[internal])
-            if rounds == 1:
-                # Exact Phi_2: internal support == global support in G here.
+            if stats.rounds == 1:
                 is_phi2 = phi_local[internal] == 2
                 phi[glob_ids[is_phi2]] = 2
                 in_gnew[glob_ids[~is_phi2]] = True
@@ -126,16 +248,13 @@ def lower_bounding(
                 in_gnew[glob_ids] = True
             round_removed[int_ids] = True
         if not round_removed.any():
-            # Stalled: no crossing edge became internal (can happen with a
-            # deterministic partitioner).  Paper's remedy is the randomized
-            # re-partition; the hard fallback is to grow the working set.
             cur_budget *= 2
             continue
         alive[cur_ids[round_removed]] = False
 
     return LowerBoundResult(
-        edges=edges, phi=phi, lb=lb, in_gnew=in_gnew,
-        rounds=rounds, scans=scans, max_part_edges=max_part,
+        edges=edges, phi=phi, lb=lb, in_gnew=in_gnew, rounds=stats.rounds,
+        scans=stats.scans, max_part_edges=stats.max_part_edges, stats=stats,
     )
 
 
@@ -147,6 +266,7 @@ class BottomUpResult:
     rounds: int
     scans: int
     candidate_sizes: List[int]   # |H| per k (I/O + working-set accounting)
+    stats: Optional[OocStats] = None
 
 
 def bottom_up_decompose(
@@ -154,24 +274,27 @@ def bottom_up_decompose(
     edges: np.ndarray,
     budget: int,
     partitioner: str | Callable = "sequential",
+    engine: str = "batched",
 ) -> BottomUpResult:
     """Algorithm 4: full decomposition under a working-set budget."""
-    lbres = lower_bounding(n, edges, budget, partitioner)
+    lbres = lower_bounding(n, edges, budget, partitioner, engine=engine)
     edges = lbres.edges
     phi = lbres.phi.copy()
     lb = lbres.lb
     remaining = lbres.in_gnew.copy()
     cand_sizes: List[int] = []
-    scans = lbres.scans
+    stats = lbres.stats
+    shape_cache: set = set()
 
     k = 2
     while remaining.any():
-        scans += 1
-        # U_k: endpoints of remaining edges whose lower bound admits class k.
+        # Skip empty classes: no remaining edge admits class < min lb, so
+        # jump k straight there instead of probing one k at a time.
+        k = max(k, int(lb[remaining].min()))
+        stats.scans += 1
+        # U_k: endpoints of remaining edges whose lower bound admits class k
+        # (non-empty by the jump above).
         elig = remaining & (lb <= k)
-        if not elig.any():
-            k += 1
-            continue
         u_k = np.zeros(n, dtype=bool)
         eg = edges[elig]
         u_k[eg[:, 0]] = True
@@ -183,18 +306,28 @@ def bottom_up_decompose(
         internal = remaining & u_in & v_in
         h_ids = np.nonzero(in_h)[0]
         cand_sizes.append(len(h_ids))
-        sub = glib.build_graph(n, edges[h_ids])
-        tris = list_triangles_np(sub)
-        sup = support_from_triangle_list(tris, sub.m).astype(np.int32)
-        if len(tris) == 0:
-            tris = np.full((1, 3), sub.m, np.int32)
-        # Map internal mask to subgraph ids (canonical order preserved).
-        removable = jnp.asarray(internal[h_ids])
-        alive, _, removed = peel_threshold(
-            jnp.asarray(sup), jnp.asarray(tris),
-            jnp.ones(sub.m, bool), removable, jnp.int32(k - 2),
-        )
-        removed = np.asarray(removed)
+        if engine == "perpart":
+            sub = glib.build_graph(n, edges[h_ids])
+            tris = list_triangles_np(sub)
+            sup = support_from_triangle_list(tris, sub.m).astype(np.int32)
+            if len(tris) == 0:
+                tris = np.full((1, 3), sub.m, np.int32)
+            # Map internal mask to subgraph ids (canonical order preserved).
+            removable = jnp.asarray(internal[h_ids])
+            _, _, removed = peel_threshold(
+                jnp.asarray(sup), jnp.asarray(tris),
+                jnp.ones(sub.m, bool), removable, jnp.int32(k - 2),
+            )
+            removed = np.asarray(removed)
+        else:
+            local_edges, verts = glib.compact_edge_list(edges[h_ids])
+            sub = glib.build_graph(len(verts), local_edges)
+            tris = list_triangles(sub)
+            sup = support_from_triangle_list(tris, sub.m).astype(np.int32)
+            _, removed, new = local_threshold_peel(
+                sup, tris, internal[h_ids], k - 2, shape_cache=shape_cache)
+            stats.compiles += int(new)
+            stats.batches += 1
         rm_glob = h_ids[removed]
         phi[rm_glob] = k
         remaining[rm_glob] = False
@@ -203,7 +336,7 @@ def bottom_up_decompose(
     kmax = int(phi.max()) if len(phi) else 2
     return BottomUpResult(
         edges=edges, phi=phi, kmax=kmax, rounds=lbres.rounds,
-        scans=scans, candidate_sizes=cand_sizes,
+        scans=stats.scans, candidate_sizes=cand_sizes, stats=stats,
     )
 
 
@@ -212,46 +345,88 @@ def partitioned_support(
     edges: np.ndarray,
     budget: int,
     partitioner: str | Callable = "sequential",
-) -> np.ndarray:
+    engine: str = "batched",
+    with_stats: bool = False,
+):
     """Exact sup(e) w.r.t. the FULL graph, computed under a working-set
     budget (triangle-credit variant of Algorithm 3 used by the top-down
     algorithm; see DESIGN.md §7).
 
     Invariant: every triangle of G is credited exactly once — in the first
     round in which one of its edges becomes internal (all internal edges of a
-    triangle lie in the same part, and a triangle loses an edge from the
+    triangle lie in the same part, two disjoint parts cannot both hold two of
+    a triangle's three vertices, and a triangle loses an edge from the
     working graph the moment it is first credited).
+
+    The batched engine lists each NS(P)'s triangles through the compacted,
+    skew-aware machinery and credits them in one vectorized scatter per
+    bucket; no peeling is involved, so the batch is built without incidence.
     """
     part_fn = _resolve_partitioner(partitioner)
     edges = glib.canonical_edges(edges, n)
     m = len(edges)
     sup = np.zeros(m, dtype=np.int64)
-    alive = np.ones(m, dtype=bool)
-    rounds = 0
+    stats = OocStats()
     cur_budget = budget
 
-    while alive.any():
-        rounds += 1
-        cur_ids = np.nonzero(alive)[0]
-        g = glib.build_graph(n, edges[cur_ids])
-        parts = part_fn(g, cur_budget, rounds)
+    if engine == "perpart":
+        alive = np.ones(m, dtype=bool)
+        while alive.any():
+            stats.rounds += 1
+            cur_ids = np.nonzero(alive)[0]
+            g = glib.build_graph(n, edges[cur_ids])
+            parts = part_fn(g, cur_budget, stats.rounds)
+            if not parts:
+                break
+            round_removed = np.zeros(len(cur_ids), dtype=bool)
+            for P in parts:
+                stats.scans += 1
+                sub_ids, sub_edges, internal = glib.neighborhood_subgraph(g, P)
+                if len(sub_ids) == 0:
+                    continue
+                sub = glib.build_graph(n, sub_edges)
+                tris = list_triangles_np(sub)
+                if len(tris):
+                    # subgraph edge id -> current-graph id -> original id
+                    to_glob = cur_ids[sub_ids]
+                    np.add.at(sup, to_glob[tris.reshape(-1)], 1)
+                round_removed[sub_ids[internal]] = True
+            if not round_removed.any():
+                cur_budget *= 2   # stall fallback (see lower_bounding)
+                continue
+            alive[cur_ids[round_removed]] = False
+        return (sup, stats) if with_stats else sup
+
+    if engine != "batched":
+        raise ValueError(f"unknown engine {engine!r}")
+
+    g = glib.build_graph(n, edges)
+    cur_ids = np.arange(m, dtype=np.int64)
+    while g.m:
+        stats.rounds += 1
+        parts = part_fn(g, cur_budget, stats.rounds)
         if not parts:
             break
-        round_removed = np.zeros(len(cur_ids), dtype=bool)
-        for P in parts:
-            sub_ids, sub_edges, internal = glib.neighborhood_subgraph(g, P)
-            if len(sub_ids) == 0:
-                continue
-            sub = glib.build_graph(n, sub_edges)
-            tris = list_triangles_np(sub)  # every NS triangle has an internal edge
-            if len(tris):
-                # subgraph edge id -> current-graph id -> original id
-                to_glob = cur_ids[sub_ids]
-                np.add.at(sup, to_glob[tris.reshape(-1)], 1)
-            round_removed[sub_ids[internal]] = True
-        if not round_removed.any():
-            cur_budget *= 2   # stall fallback (see lower_bounding)
+        batch = plib.build_partition_batch(g, parts, with_incidence=False)
+        stats.absorb_batch(batch)
+        removed = np.zeros(g.m, dtype=bool)
+        for bucket in batch.buckets:
+            B = bucket.n_lanes
+            # local triangle ids -> parent edge ids, lane-wise; the drop
+            # slot cap_e maps to -1, so padding rows vanish with the mask
+            eid_pad = np.concatenate(
+                [bucket.edge_ids, np.full((B, 1), -1, np.int64)], axis=1)
+            lane = np.arange(B)[:, None, None]
+            parent = eid_pad[lane, bucket.tris]          # (B, cap_t, 3)
+            real = parent[:, :, 0] >= 0
+            trip = parent[real]
+            if len(trip):
+                np.add.at(sup, cur_ids[trip.reshape(-1)], 1)
+            removed[bucket.edge_ids[bucket.internal]] = True
+        if not removed.any():
+            cur_budget *= 2
             continue
-        alive[cur_ids[round_removed]] = False
+        cur_ids = cur_ids[~removed]
+        g = g.remove_edges(removed)
 
-    return sup
+    return (sup, stats) if with_stats else sup

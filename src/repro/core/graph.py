@@ -87,6 +87,54 @@ class Graph:
         """Graph induced by the kept edges (vertex ids preserved)."""
         return build_graph(self.n, self.edges[edge_mask])
 
+    def remove_edges(self, remove_mask: np.ndarray) -> "Graph":
+        """Incremental maintenance: drop the masked edges without a rebuild.
+
+        ``build_graph`` pays a full lexsort (ranks) plus a lexsort of the
+        oriented edge list (CSR) every call; the out-of-core drivers remove
+        a batch of internal edges per round, so this filters instead:
+
+        * ``rank`` is REUSED — it stays a total order, so the orientation of
+          every surviving edge is unchanged and wedge enumeration remains
+          correct (the forward algorithm only needs *some* fixed acyclic
+          orientation).  The O(sqrt(m)) out-degree bound degrades gracefully
+          as ranks go stale w.r.t. the shrunk degrees; correctness does not.
+        * CSR rows are filtered in place — each row stays sorted by neighbor
+          id, so membership binary searches keep working.
+
+        Total cost O(n + m) with no sort.  Edge ids are renumbered densely;
+        old id ``i`` maps to ``cumsum(keep)[i] - 1`` (order preserved, so the
+        canonical lex order of ``edges`` is intact).
+        """
+        remove_mask = np.asarray(remove_mask, dtype=bool)
+        if remove_mask.shape != (self.m,):
+            raise ValueError(f"mask shape {remove_mask.shape} != ({self.m},)")
+        keep = ~remove_mask
+        new_edges = self.edges[keep]
+        # old edge id -> new edge id (valid only where keep)
+        new_id = np.cumsum(keep, dtype=np.int64) - 1
+        deg = self.deg.copy()
+        gone = self.edges[remove_mask]
+        if len(gone):
+            np.subtract.at(deg, gone[:, 0], 1)
+            np.subtract.at(deg, gone[:, 1], 1)
+        # filter CSR entries (row ownership from the old indptr)
+        out_deg_old = (self.indptr[1:] - self.indptr[:-1]).astype(np.int64)
+        rows = np.repeat(np.arange(self.n, dtype=np.int64), out_deg_old)
+        keep_entry = keep[self.nbr_eid]
+        counts = np.zeros(self.n + 1, dtype=np.int64)
+        if keep_entry.any():
+            np.add.at(counts, rows[keep_entry] + 1, 1)
+        indptr = np.cumsum(counts).astype(Int)
+        out_deg = indptr[1:] - indptr[:-1]
+        return Graph(
+            n=self.n, edges=new_edges, deg=deg, rank=self.rank,
+            src=self.src[keep], dst=self.dst[keep], indptr=indptr,
+            nbrs=self.nbrs[keep_entry],
+            nbr_eid=new_id[self.nbr_eid[keep_entry]].astype(Int),
+            max_out_deg=int(out_deg.max()) if self.n and len(new_edges) else 0,
+        )
+
 
 def build_graph(n: int, edges: np.ndarray) -> Graph:
     """Build the oriented CSR package from a canonical edge list."""
@@ -153,6 +201,22 @@ def neighborhood_subgraph(
     edge_ids = np.nonzero(keep)[0].astype(Int)
     internal = (u_in & v_in)[edge_ids]
     return edge_ids, graph.edges[edge_ids], internal
+
+
+def compact_edge_list(edges: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Relabel an edge list's vertices to dense local ids.
+
+    Returns ``(local_edges, verts)`` with ``verts[local_id]`` the original
+    vertex id.  The relabeling is monotone, so a canonical (u < v,
+    lex-sorted) input stays canonical and the row index of every edge is
+    preserved — the property the partition-batch engine relies on to map
+    local edge ids back to parent edge ids.
+    """
+    if len(edges) == 0:
+        return np.zeros((0, 2), Int), np.zeros(0, Int)
+    verts = np.unique(edges.reshape(-1))
+    local = np.searchsorted(verts, edges)
+    return local.astype(Int), verts.astype(Int)
 
 
 def incident_vertices(edges: np.ndarray) -> np.ndarray:

@@ -1,8 +1,9 @@
-"""Vertex partitioners for the I/O-efficient algorithms (paper Section 5.1).
+"""Vertex partitioners + partition batches for the I/O-efficient algorithms.
 
-The paper uses the linear-time partitioners of Chu & Cheng [13], which split
-the current graph into p >= 2|G|/M parts whose *neighborhood subgraphs* fit
-in memory M.  We provide the two practical variants:
+The paper (Section 5.1) uses the linear-time partitioners of Chu & Cheng
+[13], which split the current graph into p >= 2|G|/M parts whose
+*neighborhood subgraphs* fit in memory M.  We provide the two practical
+variants:
 
 * ``sequential_partition`` — contiguous vertex-id blocks sized so that the
   estimated NS working set (sum of incident degrees) stays under budget
@@ -12,15 +13,48 @@ in memory M.  We provide the two practical variants:
 
 ``budget`` is expressed in *edge entries* (the 2012 paper's M measured in
 bytes; on TPU the analogue is per-device working-set entries).
+
+On top of the partitioners this module builds :class:`PartitionBatch` — the
+device-resident form of one partition round (DESIGN.md §8):
+
+* every NS(P) is extracted in one O(m log m) sweep (``ns_edge_lists``) and
+  compacted to local vertex ids;
+* parts are bin-packed into power-of-two-capacity lanes (a lane is a
+  disjoint union of part slices — trussness is per-component, so one peel
+  of a packed lane equals the per-part peels) and padded to a single static
+  shape (edges, triangles, incidence CSR), so the batched local peel
+  (``peel.peel_classes_batched``) runs every lane of a bucket in ONE device
+  call with one compile per pow2 bucket shape;
+* padding lanes are dead (``alive`` False, triangles pointing at the
+  per-lane drop slot), so they can never contribute support.
 """
 
 from __future__ import annotations
 
-from typing import Iterator, List
+import dataclasses
+import warnings
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.graph import Graph
+
+
+class PartitionBudgetWarning(UserWarning):
+    """A single vertex's NS estimate exceeds the partition budget.
+
+    The sequential partitioner must still emit such a vertex as a singleton
+    part, so the part's working set overshoots the budget; the driver's
+    ``max_part_edges`` accounting records the actual overshoot.
+    """
+
+    def __init__(self, n_over: int, budget: int, max_cost: int):
+        self.n_over = n_over
+        self.budget = budget
+        self.max_cost = max_cost
+        super().__init__(
+            f"{n_over} vertex(es) have NS cost above budget={budget} "
+            f"(max cost {max_cost}); emitting over-budget singleton parts")
 
 
 def _ns_cost(g: Graph) -> np.ndarray:
@@ -34,6 +68,12 @@ def sequential_partition(g: Graph, budget: int) -> List[np.ndarray]:
     active = np.nonzero(cost > 0)[0]
     if len(active) == 0:
         return []
+    over = cost[active] > budget
+    if over.any():
+        warnings.warn(
+            PartitionBudgetWarning(int(over.sum()), int(budget),
+                                   int(cost[active][over].max())),
+            stacklevel=2)
     parts: List[np.ndarray] = []
     cur: list[int] = []
     acc = 0
@@ -66,3 +106,264 @@ PARTITIONERS = {
     "sequential": sequential_partition,
     "random": random_partition,
 }
+
+
+# ---------------------------------------------------------------------------
+# Partition batches (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def ns_edge_lists(
+    g: Graph, parts: Sequence[np.ndarray],
+    part_of: np.ndarray | None = None,
+) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """All NS(P_i) edge lists in one sweep: O(m log m) instead of p·O(n+m).
+
+    An edge belongs to NS(P) for the part(s) of its endpoints (at most two),
+    and is *internal* exactly when both endpoints share a part — so one
+    part-assignment array plus one sort yields every per-part
+    ``(edge_ids, internal)`` pair that ``graph.neighborhood_subgraph`` would
+    produce, with edge ids ascending (parent canonical order preserved).
+    Vertices outside every part contribute nothing.  ``part_of`` may be
+    passed when the caller already built the vertex→part array.
+    """
+    if part_of is None:
+        part_of = np.full(g.n, -1, dtype=np.int64)
+        for i, P in enumerate(parts):
+            part_of[np.asarray(P, dtype=np.int64)] = i
+    e = g.edges.astype(np.int64)
+    pu = part_of[e[:, 0]]
+    pv = part_of[e[:, 1]]
+    internal_flag = (pu == pv) & (pu >= 0)
+    eids = np.arange(g.m, dtype=np.int64)
+    dup = (pv != pu) & (pv >= 0)
+    owner = np.concatenate([pu, pv[dup]])
+    owner_e = np.concatenate([eids, eids[dup]])
+    keep = owner >= 0
+    owner, owner_e = owner[keep], owner_e[keep]
+    order = np.lexsort((owner_e, owner))
+    owner, owner_e = owner[order], owner_e[order]
+    bounds = np.searchsorted(owner, np.arange(len(parts) + 1))
+    out: List[Tuple[np.ndarray, np.ndarray]] = []
+    for i in range(len(parts)):
+        ids = owner_e[bounds[i]:bounds[i + 1]].astype(np.int32)
+        out.append((ids, internal_flag[ids]))
+    return out
+
+
+@dataclasses.dataclass
+class PartBucket:
+    """One static shape class of NS parts, packed and stacked lane-wise.
+
+    Every array is (B, ...) with B the (pow2-padded) lane count.  A lane
+    holds one or more parts laid out as disjoint edge-id slices — NS(P)
+    subgraphs are independent subproblems (each slice's triangles reference
+    only its own slots), and trussness is per-connected-component, so one
+    peel of the packed lane equals the per-part peels.  ``part_of`` records
+    the slice ownership.  Local edge id ``cap_e`` is the per-lane drop slot:
+    padding triangles point at it and masked scatters land there, so padded
+    slots never receive support.
+    """
+
+    cap_e: int            # padded local edge capacity per lane (pow2)
+    cap_t: int            # padded triangle capacity per lane (pow2)
+    n_parts: int          # parts packed into this bucket's lanes
+    n_real_lanes: int     # lanes carrying parts (beyond: dead pow2 padding)
+    sup: np.ndarray       # (B, cap_e) int32 initial supports
+    tris: np.ndarray      # (B, cap_t, 3) int32; padding rows -> cap_e
+    alive: np.ndarray     # (B, cap_e) bool; padding slots/lanes False
+    indptr: np.ndarray    # (B, cap_e + 1) int32 edge->triangle incidence CSR
+    tids: np.ndarray      # (B, 3 * cap_t) int32 incidence payload
+    edge_ids: np.ndarray  # (B, cap_e) int64 parent edge ids; -1 on padding
+    internal: np.ndarray  # (B, cap_e) bool: both endpoints in the part
+    part_of: np.ndarray   # (B, cap_e) int32 part index per slot; -1 padding
+    real_edges: int       # total unpadded edges across real lanes
+
+    @property
+    def n_lanes(self) -> int:
+        return self.sup.shape[0]
+
+    @property
+    def shape_key(self) -> tuple[int, int, int]:
+        """The compile-cache key: one jit trace per distinct value."""
+        return (self.n_lanes, self.cap_e, self.cap_t)
+
+    @property
+    def padded_slots(self) -> int:
+        return int(self.sup.size)
+
+
+@dataclasses.dataclass
+class PartitionBatch:
+    """All NS(P) of one partition round, bucketed and padded for the device."""
+
+    buckets: List[PartBucket]
+    n_parts: int
+    real_edges: int       # Σ NS edge counts (the round's scan volume)
+    padded_slots: int     # Σ lane slots actually materialized
+    max_part_edges: int   # largest single NS (budget-accounting check)
+
+
+def assign_triangles(
+    g: Graph, tris: np.ndarray, part_of: np.ndarray
+) -> np.ndarray:
+    """Part index of every triangle; -1 when its vertices span 3 parts.
+
+    A triangle of the working graph lies inside NS(P) exactly when at least
+    two of its three vertices are in P — and two disjoint parts cannot both
+    hold two of three vertices, so the assignment is unique.  This lets one
+    whole-graph triangle enumeration per round replace a wedge enumeration
+    per part.
+    """
+    if len(tris) == 0:
+        return np.zeros(0, np.int64)
+    e = g.edges.astype(np.int64)
+    u = e[tris[:, 0], 0]
+    v = e[tris[:, 0], 1]
+    x = e[tris[:, 1], 0]
+    y = e[tris[:, 1], 1]
+    w = np.where((x == u) | (x == v), y, x)   # the third vertex
+    pu, pv, pw = part_of[u], part_of[v], part_of[w]
+    two = np.where(pu == pv, pu, np.where(pu == pw, pu,
+                   np.where(pv == pw, pv, -1)))
+    return two
+
+
+def build_partition_batch(
+    g: Graph,
+    parts: Sequence[np.ndarray],
+    *,
+    with_incidence: bool = True,
+    pad_lanes_pow2: bool = True,
+    lane_capacity: int | None = None,
+) -> PartitionBatch:
+    """Extract, compact, pack and pad every NS(P) of one round.
+
+    The round's triangles are enumerated ONCE on the working graph and
+    routed to parts (``assign_triangles``); parts are then grouped into
+    pow4 size classes and first-fit-decreasing packed into lanes of the
+    class capacity (each lane a disjoint union of part slices, see
+    :class:`PartBucket`), with the lane count padded to a pow2.  One round
+    therefore compiles at most one shape per occupied size class, and the
+    shape grid across rounds is the fixed pow4/pow2 lattice of
+    (lanes, cap_e, cap_t) — the compile-cache keying that keeps the engine
+    at O(log) distinct compiles per run instead of the seed's one compile
+    per part, while an outlier hub part only widens its own class's lanes.
+
+    ``lane_capacity`` forces every part into one class of that capacity
+    (parts larger than it still get a lane; used to pin shapes externally).
+    ``with_incidence=False`` skips the per-lane incidence CSR and supports
+    (the triangle-credit support counter only needs the triangle lists).
+    """
+    from repro.core.support import (_pow2_ceil, _pow4_ceil, list_triangles,
+                                    support_from_triangle_list,
+                                    triangle_incidence_np)
+
+    # ONE whole-graph skew-aware triangle enumeration per round; each
+    # triangle is then routed to the unique part holding >= 2 of its
+    # vertices (assign_triangles) instead of re-enumerating wedges per part.
+    tris_g = list_triangles(g)
+    part_of = np.full(g.n, -1, dtype=np.int64)
+    for i, P in enumerate(parts):
+        part_of[np.asarray(P, dtype=np.int64)] = i
+    tri_part = assign_triangles(g, tris_g, part_of)
+    order = np.argsort(tri_part, kind="stable")
+    tris_sorted = tris_g[order]
+    bounds = np.searchsorted(tri_part[order],
+                             np.arange(len(parts) + 1))
+
+    per_part = []
+    for i, (ids, internal) in enumerate(ns_edge_lists(g, parts, part_of)):
+        if len(ids) == 0:
+            continue
+        tri_i = tris_sorted[bounds[i]:bounds[i + 1]]
+        # global edge ids -> part-local slots (ids is ascending, and every
+        # edge of an assigned triangle is in NS(P) by construction)
+        local = np.searchsorted(ids, tri_i).astype(np.int32)
+        per_part.append((ids, internal, len(ids), local))
+
+    if not per_part:
+        return PartitionBatch(buckets=[], n_parts=0, real_edges=0,
+                              padded_slots=0, max_part_edges=0)
+
+    # size classes on the pow4 grid: lanes of a class are sized to ITS
+    # largest member, so one outlier hub part (the PartitionBudgetWarning
+    # case) does not inflate every small part's lane; the fixed grid also
+    # lets shapes recur across rounds
+    groups: dict[int, List[int]] = {}
+    for idx, item in enumerate(per_part):
+        if lane_capacity and item[2] <= lane_capacity:
+            key = lane_capacity
+        else:
+            key = _pow4_ceil(item[2])
+        groups.setdefault(key, []).append(idx)
+
+    buckets: List[PartBucket] = []
+    total_real = total_pad = max_part = 0
+    for cap_e in sorted(groups):
+        members = groups[cap_e]
+        # first-fit decreasing: lanes of cap_e edge slots
+        order = sorted(members, key=lambda i: -per_part[i][2])
+        lanes: List[List[int]] = []
+        room: List[int] = []
+        for i in order:
+            m_loc = per_part[i][2]
+            for j in range(len(lanes)):
+                if room[j] >= m_loc:
+                    lanes[j].append(i)
+                    room[j] -= m_loc
+                    break
+            else:
+                lanes.append([i])
+                room.append(cap_e - m_loc)
+
+        lane_T = [sum(len(per_part[i][3]) for i in lane) for lane in lanes]
+        # pow4 triangle capacity: coarser than the edge grid, since
+        # triangle counts vary widely between rounds and padded rows are
+        # memory-only (the frontier gather never visits them)
+        cap_t = _pow4_ceil(max(max(lane_T), 1))
+        n_real_lanes = len(lanes)
+        B = _pow2_ceil(n_real_lanes) if pad_lanes_pow2 else n_real_lanes
+        sup_b = np.zeros((B, cap_e), np.int32)
+        tris_b = np.full((B, cap_t, 3), cap_e, np.int32)
+        alive_b = np.zeros((B, cap_e), bool)
+        indptr_b = np.zeros((B, cap_e + 1), np.int32)
+        tids_b = np.zeros((B, 3 * cap_t), np.int32)
+        eid_b = np.full((B, cap_e), -1, np.int64)
+        int_b = np.zeros((B, cap_e), bool)
+        part_b = np.full((B, cap_e), -1, np.int32)
+        real_edges = 0
+        for lane_idx, lane in enumerate(lanes):
+            off_e = off_t = 0
+            for part_idx in lane:
+                ids, internal, m_loc, tris = per_part[part_idx]
+                sl = slice(off_e, off_e + m_loc)
+                alive_b[lane_idx, sl] = True
+                eid_b[lane_idx, sl] = ids
+                int_b[lane_idx, sl] = internal
+                part_b[lane_idx, sl] = part_idx
+                if len(tris):
+                    tris_b[lane_idx, off_t : off_t + len(tris)] = tris + off_e
+                if with_incidence:
+                    sup_b[lane_idx, sl] = support_from_triangle_list(tris, m_loc)
+                off_e += m_loc
+                off_t += len(tris)
+                max_part = max(max_part, m_loc)
+            real_edges += off_e
+            if with_incidence:
+                indptr, tids = triangle_incidence_np(tris_b[lane_idx], cap_e)
+                indptr_b[lane_idx] = indptr
+                tids_b[lane_idx, : len(tids)] = tids
+
+        buckets.append(PartBucket(
+            cap_e=cap_e, cap_t=cap_t, n_parts=len(members),
+            n_real_lanes=n_real_lanes, sup=sup_b, tris=tris_b,
+            alive=alive_b, indptr=indptr_b, tids=tids_b, edge_ids=eid_b,
+            internal=int_b, part_of=part_b, real_edges=real_edges,
+        ))
+        total_real += real_edges
+        total_pad += buckets[-1].padded_slots
+
+    return PartitionBatch(
+        buckets=buckets, n_parts=len(per_part), real_edges=total_real,
+        padded_slots=total_pad, max_part_edges=max_part,
+    )

@@ -51,7 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.support import (_pow2_ceil, list_triangles_np,
+from repro.core.support import (_pow2_ceil, _pow4_ceil, list_triangles_np,
                                 support_from_triangle_list,
                                 triangle_incidence_np)
 
@@ -390,6 +390,127 @@ def peel_threshold(sup0, tris, alive0, removable, thresh, *, incidence=None,
 
 
 # ---------------------------------------------------------------------------
+# batched local peels (out-of-core engine, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cap_f", "cap_t"))
+def _peel_classes_vmapped(sup_b, tris_b, indptr_b, tids_b, alive_b,
+                          *, cap_f, cap_t):
+    """vmap of the fixed-cap frontier peel over the lanes of one bucket."""
+    Em = sup_b.shape[1]
+
+    def one(s, t, ip, ti, a):
+        phi0 = jnp.zeros(Em, jnp.int32)
+        st0 = jnp.zeros(N_STATS, jnp.int32)
+        _, _, phi, _, st, _ = peel_classes_fixedcap(
+            s, t, ip, ti, a, phi0, jnp.int32(2), st0,
+            cap_f=cap_f, cap_t=cap_t)
+        return phi, st
+
+    return jax.vmap(one)(sup_b, tris_b, indptr_b, tids_b, alive_b)
+
+
+def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
+                         *, shape_cache=None):
+    """Local trussness of every NS lane of one bucket in ONE device call.
+
+    Arrays are the (B, cap_e)-padded stacks a ``partition.PartBucket``
+    carries; capacities are pinned to the padded lane shape (``cap_f`` =
+    cap_e, ``cap_t`` = full incidence width), so the overflow/resume path is
+    statically impossible and the kernel is one compile per bucket shape.
+    Padded lanes start dead and exit the while loop immediately; padded edge
+    slots are dead and every padding triangle points at the drop slot, so
+    neither can contribute support.
+
+    ``shape_cache``: a caller-owned set of shape keys; returns whether this
+    call added a new key (the driver's ``compiles`` counter).  The jit cache
+    itself is process-global, so the counter reports at most the true number
+    of XLA compiles.
+
+    Returns (phi (B, cap_e) int32 ndarray, stats (B, N_STATS) ndarray,
+    newly_compiled bool).
+    """
+    cap_e = int(sup_b.shape[1])
+    n_inc = int(tids_b.shape[1])
+    tris_np = np.asarray(tris_b)
+    if (tris_np[:, :, 0] >= cap_e).all():
+        # triangle-free bucket: every alive edge has support 0 and peels
+        # at k = 2 — no device work needed
+        phi = np.where(np.asarray(alive_b), 2, 0).astype(np.int32)
+        return phi, np.zeros(tris_np.shape[:1] + (N_STATS,), np.int32), False
+    # frontier capacities: local decompositions peel every lane to EMPTY,
+    # so total frontier throughput matters more than per-round width — the
+    # divisors are a sweep over the rmat benchmark rounds (wider than the
+    # _default_caps tuning for sparse single-graph peels).  cap_t covering
+    # the largest incidence row of any lane makes overflow statically
+    # impossible (no resume path under vmap).
+    max_row = int(np.max(indptr_b[:, 1:] - indptr_b[:, :-1])) if cap_e else 0
+    cap_f = _pow2_ceil(min(cap_e, max(512, cap_e // 8)))
+    cap_t = max(_pow2_ceil(min(max(n_inc, 1), max(2048, n_inc // 16))),
+                _pow2_ceil(max(max_row, 1)))
+    key = (sup_b.shape, tris_b.shape, cap_f, cap_t)
+    new = shape_cache is not None and key not in shape_cache
+    if shape_cache is not None:
+        shape_cache.add(key)
+    phi, st = _peel_classes_vmapped(
+        jnp.asarray(sup_b), jnp.asarray(tris_b), jnp.asarray(indptr_b),
+        jnp.asarray(tids_b), jnp.asarray(alive_b),
+        cap_f=cap_f, cap_t=cap_t)
+    return np.asarray(phi), np.asarray(st), new
+
+
+def local_threshold_peel(sup0, tris, removable, thresh, *, shape_cache=None):
+    """Single-level peel of a COMPACTED candidate subgraph on padded shapes.
+
+    The out-of-core k-class extraction (bottom-up Procedure 5, top-down
+    Procedure 8) peels one candidate subgraph per k.  Peeling it at its
+    natural (dynamic) shape would recompile every k; this pads edges and
+    triangles to pow4 capacities (at most 4x pad, far fewer shapes) so
+    consecutive k values reuse the same compiled kernel (``thresh`` is
+    traced, not static).  All ``m`` real edges start alive; ``removable``
+    marks the internal/tentative ones.
+
+    Returns (alive_mask (m,), removed_mask (m,), newly_compiled bool).
+    """
+    m = int(len(sup0))
+    T = int(len(tris))
+    if T == 0:
+        # no triangles: removals cascade nothing, one sweep is the fixpoint
+        removed = np.asarray(removable, bool) & (np.asarray(sup0) <= thresh)
+        return ~removed, removed, False
+    # pow4 capacities: consecutive k levels shrink the candidate slowly, so
+    # the coarser grid makes most of a run's peels share one compiled shape
+    cap_e = _pow4_ceil(max(m, 1))
+    cap_tri = _pow4_ceil(max(T, 1))
+    tris_p = np.full((cap_tri, 3), cap_e, np.int32)
+    if T:
+        tris_p[:T] = tris
+    indptr, tids = triangle_incidence_np(tris_p, cap_e)
+    tids_p = np.zeros(3 * cap_tri, np.int32)
+    tids_p[: len(tids)] = tids
+    sup_p = np.zeros(cap_e, np.int32)
+    sup_p[:m] = sup0
+    alive_p = np.zeros(cap_e, bool)
+    alive_p[:m] = True
+    rem_p = np.zeros(cap_e, bool)
+    rem_p[:m] = removable
+    cap_f, cap_t = _default_caps(cap_e, (indptr, tids_p), None, None)
+    key = (cap_e, cap_tri, cap_f, cap_t)
+    new = shape_cache is not None and key not in shape_cache
+    if shape_cache is not None:
+        shape_cache.add(key)
+    st0 = jnp.zeros(N_STATS, jnp.int32)
+    # _default_caps covers the largest incidence row, so overflow is
+    # impossible and no resume loop is needed
+    alive, _, _, _ = peel_threshold_fixedcap(
+        jnp.asarray(sup_p), jnp.asarray(tris_p), jnp.asarray(indptr),
+        jnp.asarray(tids_p), jnp.asarray(alive_p), jnp.asarray(rem_p),
+        jnp.int32(thresh), st0, cap_f=cap_f, cap_t=cap_t)
+    alive = np.asarray(alive)[:m]
+    return alive, ~alive, new
+
+
+# ---------------------------------------------------------------------------
 # dense (seed) engine — O(T) scatter work per round; baseline + oracle
 # ---------------------------------------------------------------------------
 
@@ -504,14 +625,35 @@ def peel_recompute(tris, edge_alive0):
     return phi
 
 
-def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
-                    with_stats: bool = False):
-    """End-to-end in-memory decomposition (host entry point).
+def estimate_working_set(g) -> int:
+    """In-memory peel working set, in int32 entries (dispatch heuristic).
 
-    Preprocess on host (orientation, CSR, triangle list + incidence), peel on
-    device.  ``engine``: "auto" (default), "frontier", or "dense" (seed
-    baseline); with ``with_stats``, "auto" picks the frontier engine and an
-    explicit "dense" yields stats=None.
+    Edge state (alive/sup/phi/frontier ≈ 4m) plus triangle list + incidence
+    (6T), with T bounded by the oriented wedge count Σ_a deg⁺(a)² — the
+    quantity the enumeration actually materializes.  An upper bound: real
+    triangle counts are usually far lower, so ``memory_budget`` should be
+    read as "route to out-of-core once even the wedge bound doesn't fit".
+    """
+    out_deg = (g.indptr[1:] - g.indptr[:-1]).astype(np.int64)
+    return 4 * g.m + 6 * int((out_deg * out_deg).sum())
+
+
+def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
+                    memory_budget=None, partitioner: str = "sequential",
+                    with_stats: bool = False):
+    """End-to-end decomposition — the unified host entry point.
+
+    ``engine``:
+      * "auto" (default) — in-memory frontier/dense dispatch; when
+        ``memory_budget`` is given and ``estimate_working_set`` exceeds it,
+        routes to the batched out-of-core bottom-up engine instead.
+      * "frontier" / "dense" — force the in-memory engines (DESIGN.md §3).
+      * "bottom-up" / "top-down" — force the batched out-of-core engines
+        (DESIGN.md §8); the per-part NS budget is ``memory_budget`` edge
+        entries (default m // 8).
+
+    With ``with_stats`` the second return value is a :class:`PeelStats`
+    (in-memory frontier), ``None`` (dense), or an ``OocStats`` (out-of-core).
     """
     from repro.core.graph import build_graph
 
@@ -519,6 +661,31 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
     if g.m == 0:
         phi = np.zeros(0, np.int64)
         return (phi, None) if with_stats else phi
+    est = estimate_working_set(g)
+    if engine == "auto" and memory_budget is not None and est > memory_budget:
+        engine = "bottom-up"
+    if engine in ("bottom-up", "top-down"):
+        if memory_budget:
+            # memory_budget is in working-set ENTRIES; the partitioners'
+            # budget is in NS edge cost (sum of incident degrees, 2m
+            # total).  Scale by the graph's entries-per-edge density so a
+            # part's estimated working set fits the budget — without this
+            # any budget above 2m would yield one whole-graph "partition".
+            part_budget = max(64, (2 * g.m * memory_budget) // max(est, 1))
+        else:
+            part_budget = max(64, g.m // 8)
+        if engine == "bottom-up":
+            from repro.core.bottom_up import bottom_up_decompose
+
+            res = bottom_up_decompose(n, edges, part_budget,
+                                      partitioner=partitioner)
+        else:
+            from repro.core.top_down import top_down_decompose
+
+            res = top_down_decompose(n, edges, budget=part_budget,
+                                     partitioner=partitioner)
+        phi = np.asarray(res.phi).astype(np.int64)
+        return (phi, res.stats) if with_stats else phi
     tris = list_triangles_np(g)
     sup = support_from_triangle_list(tris, g.m).astype(np.int32)
     if len(tris) == 0:

@@ -67,10 +67,20 @@ def _row_lower_bound_np(nbrs, lo, hi, target, iters):
 
 def _wedge_hits_np(g: Graph, e_lo: int, e_hi: int):
     """For edge ids [e_lo, e_hi): returns (eid, e_aw, e_bw, hit) flat arrays."""
-    a = g.src[e_lo:e_hi].astype(np.int64)
-    b = g.dst[e_lo:e_hi].astype(np.int64)
+    eids = np.arange(e_lo, e_hi, dtype=np.int64)
+    return _wedge_hits_ids_np(g, eids, g.max_out_deg)
+
+
+def _wedge_hits_ids_np(g: Graph, eids: np.ndarray, D: int):
+    """Wedge enumeration for an explicit edge-id set with wedge width ``D``.
+
+    ``D`` must cover the out-degree of every source row of ``eids`` — the
+    skew-aware callers pass a per-bucket ``D`` (DESIGN.md §4) instead of the
+    global ``max_out_deg``.
+    """
+    a = g.src[eids].astype(np.int64)
+    b = g.dst[eids].astype(np.int64)
     C = len(a)
-    D = g.max_out_deg
     if C == 0 or D == 0:
         z = np.zeros(0, np.int64)
         return z, z, z, np.zeros(0, bool)
@@ -89,7 +99,7 @@ def _wedge_hits_np(g: Graph, e_lo: int, e_hi: int):
     in_row = p < g.indptr[b + 1].astype(np.int64)[:, None]
     pc = np.minimum(p, max(len(g.nbrs) - 1, 0))
     hit = valid & in_row & (g.nbrs[pc] == w)
-    eid = np.broadcast_to(np.arange(e_lo, e_hi, dtype=np.int64)[:, None], (C, D))
+    eid = np.broadcast_to(eids[:, None], (C, D))
     e_aw = g.nbr_eid[pos_aw].astype(np.int64)
     e_bw = g.nbr_eid[pc].astype(np.int64)
     f = hit.reshape(-1)
@@ -115,6 +125,32 @@ def list_triangles_np(g: Graph, chunk: int = 1 << 16) -> np.ndarray:
         e_hi = min(e_lo + chunk, g.m)
         e_ab, e_aw, e_bw, _ = _wedge_hits_np(g, e_lo, e_hi)
         out.append(np.stack([e_ab, e_aw, e_bw], axis=1))
+    if not out:
+        return np.zeros((0, 3), np.int32)
+    return np.concatenate(out, axis=0).astype(np.int32)
+
+
+def list_triangles(
+    g: Graph, chunk: int = 1 << 14, budget: int = 1 << 18
+) -> np.ndarray:
+    """Skew-aware triangle listing (host path of DESIGN.md §4).
+
+    ``list_triangles_np`` materializes a (chunk, max_out_deg) wedge tensor,
+    so one hub row inflates every chunk on power-law graphs.  This variant
+    reuses ``wedge_bucket_plan``: oriented edges are grouped by the pow2
+    out-degree of their source row and each bucket enumerates with its own
+    ``D``, keeping the materialized wedge area at Σ_b C_b·D_b instead of
+    m·D_max.  Same triangles (each exactly once), different row order.
+    """
+    plan = wedge_bucket_plan(g, chunk, budget)
+    out = []
+    for bucket in plan:
+        ids = bucket.eids[: bucket.n_real].astype(np.int64)
+        for lo in range(0, len(ids), bucket.chunk):
+            e_ab, e_aw, e_bw, _ = _wedge_hits_ids_np(
+                g, ids[lo : lo + bucket.chunk], bucket.D)
+            if len(e_ab):
+                out.append(np.stack([e_ab, e_aw, e_bw], axis=1))
     if not out:
         return np.zeros((0, 3), np.int32)
     return np.concatenate(out, axis=0).astype(np.int32)
@@ -236,6 +272,12 @@ def _support_scan(eids_pad, src, dst, indptr, nbrs, nbr_eid, *, D, iters, chunk)
 
 def _pow2_ceil(x: int) -> int:
     return 1 << max(0, math.ceil(math.log2(max(1, x))))
+
+
+def _pow4_ceil(x: int) -> int:
+    """Next power of four — the coarse padding grid of the OOC batch engine
+    (DESIGN.md §8): fewer distinct static shapes than pow2, at most 4x pad."""
+    return 1 << (2 * max(0, math.ceil(math.log2(max(1, x)) / 2)))
 
 
 @dataclasses.dataclass(frozen=True)

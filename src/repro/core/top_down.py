@@ -13,6 +13,15 @@ internal unclassified edges are Phi_k.  Classified edges that no longer share
 any triangle with an undecided edge are pruned from the working graph
 (Algorithm 7 Steps 7-9).
 
+The per-k candidate peel runs on the batch-engine machinery (DESIGN.md §8):
+H is compacted to candidate-local edge ids, its triangle list filtered from
+the one static G_new list, and the peel executes on pow4-padded shapes
+(``peel.local_threshold_peel``) so consecutive k values reuse one compiled
+kernel — the seed path instead recomputed an m-wide support scatter and ran
+an m-sized peel per k.  With a ``budget``, stage-1 supports come from the
+batched ``partitioned_support``.  ``TopDownResult.stats`` carries the
+``OocStats`` counters of both stages.
+
 Deviation from the paper (DESIGN.md §7): Procedure 8 counts support
 contributed by *external unclassified* edges of H — edges whose own upper
 bound rules them out of T_k (psi < k at every vertex outside U_k) — which can
@@ -30,14 +39,13 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graph as glib
-from repro.core.bottom_up import partitioned_support
-from repro.core.peel import peel_threshold, support_from_triangles
-from repro.core.support import (edge_support_auto, list_triangles_np,
-                                triangle_incidence_np)
+from repro.core.bottom_up import OocStats, partitioned_support
+from repro.core.peel import local_threshold_peel
+from repro.core.support import (edge_support_auto, list_triangles,
+                                support_from_triangle_list)
 
 
 def upper_bounds(n: int, edges: np.ndarray, sup: np.ndarray) -> np.ndarray:
@@ -89,6 +97,7 @@ class TopDownResult:
     kmax: int
     candidate_sizes: List[int]
     pruned: int              # edges pruned by Steps 7-9
+    stats: Optional[OocStats] = None
 
 
 def top_down_decompose(
@@ -96,37 +105,38 @@ def top_down_decompose(
     edges: np.ndarray,
     t: Optional[int] = None,
     budget: Optional[int] = None,
+    partitioner: str = "sequential",
     faithful_proc8: bool = False,
 ) -> TopDownResult:
     """Algorithm 7: top-t k-classes (all classes if t is None)."""
     edges = glib.canonical_edges(edges, n)
     m = len(edges)
     phi = np.zeros(m, dtype=np.int64)
+    stats = OocStats()
     if m == 0:
-        return TopDownResult(edges, phi, [], 2, [], 0)
+        return TopDownResult(edges, phi, [], 2, [], 0, stats)
 
     # Stage 1 (Alg 3 variant): exact supports; Phi_2 = zero-support edges.
     # edge_support_auto routes dense cores to the matmul/Pallas path and
-    # sparse graphs to the bucketed wedge scan (DESIGN.md §2).
+    # sparse graphs to the bucketed wedge scan (DESIGN.md §2); with a budget
+    # the batched triangle-credit counter runs under the working-set cap.
     if budget is None:
         g = glib.build_graph(n, edges)
         sup = edge_support_auto(g)
     else:
-        sup = partitioned_support(n, edges, budget)
+        sup, stats = partitioned_support(n, edges, budget,
+                                         partitioner=partitioner,
+                                         with_stats=True)
     phi[sup == 0] = 2
     alive = sup > 0                      # G_new
     psi = upper_bounds(n, edges, sup)
 
-    # Static triangle list over G_new; supports maintained against masks.
+    # One static triangle list over G_new (skew-aware enumeration); every
+    # per-k candidate filters it instead of re-enumerating wedges.
     gnew = glib.build_graph(n, edges[alive])
     gnew_ids = np.nonzero(alive)[0]
-    tris_l = list_triangles_np(gnew)
-    if len(tris_l) == 0:
-        tris_l = np.full((1, 3), gnew.m, np.int32)
-    tris = jnp.asarray(tris_l)
-    # one incidence CSR for the whole top-down run: every per-k candidate
-    # peel reuses it instead of rebuilding a T-sized index
-    incidence = triangle_incidence_np(tris_l, gnew.m)
+    tris_l = np.asarray(list_triangles(gnew), dtype=np.int64).reshape(-1, 3)
+    shape_cache: set = set()
     # masks below are in G_new-local edge ids
     alive_l = np.ones(gnew.m, dtype=bool)
     classified_l = np.zeros(gnew.m, dtype=bool)
@@ -156,35 +166,40 @@ def top_down_decompose(
         internal = alive_l & u_in & v_in
         tentative = internal & ~classified_l
         cand_sizes.append(int(in_h.sum()))
+        stats.scans += 1
         if faithful_proc8:
             alive0 = in_h
         else:
             # exclude external unclassified support (see module docstring)
             alive0 = tentative | (classified_l & in_h)
-        sup0 = support_from_triangles(tris, jnp.asarray(alive0), gnew.m)
-        surv, _, _ = peel_threshold(
-            sup0, tris, jnp.asarray(alive0), jnp.asarray(tentative),
-            jnp.int32(k - 3), incidence=incidence,
-        )
-        phi_k = np.asarray(surv) & tentative
+        # Compact the candidate to local edge ids and peel on padded shapes.
+        h_l = np.nonzero(alive0)[0]
+        local_id = np.full(gnew.m, -1, dtype=np.int64)
+        local_id[h_l] = np.arange(len(h_l))
+        tmask = (alive0[tris_l[:, 0]] & alive0[tris_l[:, 1]]
+                 & alive0[tris_l[:, 2]])
+        tris_loc = local_id[tris_l[tmask]].astype(np.int32)
+        sup0 = support_from_triangle_list(tris_loc, len(h_l)).astype(np.int32)
+        surv_l, _, new = local_threshold_peel(
+            sup0, tris_loc, tentative[h_l], k - 3, shape_cache=shape_cache)
+        stats.compiles += int(new)
+        stats.batches += 1
+        phi_k = np.zeros(gnew.m, dtype=bool)
+        phi_k[h_l[surv_l]] = True
+        phi_k &= tentative
         if phi_k.any():
             classes.append(k)
             classified_l |= phi_k
             phi[gnew_ids[phi_k]] = k
             # Steps 7-9: prune classified edges with no undecided triangle.
-            und = jnp.asarray(alive_l & ~classified_l)
-            ta = (
-                jnp.asarray(alive_l)[tris[:, 0]]
-                & jnp.asarray(alive_l)[tris[:, 1]]
-                & jnp.asarray(alive_l)[tris[:, 2]]
-            )
-            needs = np.zeros(gnew.m + 1, dtype=np.int64)
-            tri_needs = np.asarray(
-                ta & (und[tris[:, 0]] | und[tris[:, 1]] | und[tris[:, 2]])
-            )
-            np.add.at(needs, np.asarray(tris).reshape(-1),
-                      np.repeat(tri_needs, 3))
-            prunable = alive_l & classified_l & (needs[:gnew.m] == 0)
+            und = alive_l & ~classified_l
+            ta = (alive_l[tris_l[:, 0]] & alive_l[tris_l[:, 1]]
+                  & alive_l[tris_l[:, 2]])
+            tri_needs = ta & (und[tris_l[:, 0]] | und[tris_l[:, 1]]
+                              | und[tris_l[:, 2]])
+            needs = np.zeros(gnew.m, dtype=np.int64)
+            np.add.at(needs, tris_l.reshape(-1), np.repeat(tri_needs, 3))
+            prunable = alive_l & classified_l & (needs == 0)
             pruned_total += int(prunable.sum())
             alive_l &= ~prunable
         k -= 1
@@ -192,5 +207,5 @@ def top_down_decompose(
     kmax = classes[0] if classes else 2
     return TopDownResult(
         edges=edges, phi=phi, classes=classes, kmax=kmax,
-        candidate_sizes=cand_sizes, pruned=pruned_total,
+        candidate_sizes=cand_sizes, pruned=pruned_total, stats=stats,
     )

@@ -1,0 +1,70 @@
+"""Hypothesis property sweep for the batched out-of-core engines:
+``bottom_up_decompose`` and ``top_down_decompose`` vs the ``alg2_truss``
+oracle across random graphs × partitioners × budget fractions
+(DESIGN.md §8).  The deterministic subset runs in test_ooc_batch.py."""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as glib
+from repro.core.bottom_up import bottom_up_decompose, partitioned_support
+from repro.core.serial import alg2_truss
+from repro.core.support import edge_support_np
+from repro.core.top_down import top_down_decompose
+
+
+@st.composite
+def graphs(draw, max_n=26):
+    n = draw(st.integers(4, max_n))
+    density = draw(st.floats(0.1, 0.6))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    iu = np.triu_indices(n, 1)
+    keep = rng.random(len(iu[0])) < density
+    return n, np.stack(iu, 1)[keep]
+
+
+@settings(max_examples=12, deadline=None)
+@given(graphs(), st.sampled_from(["sequential", "random"]),
+       st.sampled_from([0.15, 0.35, 0.6]))
+def test_bottom_up_batched_matches_oracle(g, partitioner, budget_frac):
+    n, edges = g
+    ce = glib.canonical_edges(edges, n)
+    if len(ce) < 3:
+        return
+    oracle = alg2_truss(n, ce)
+    budget = max(4, int(len(ce) * budget_frac))
+    res = bottom_up_decompose(n, ce, budget, partitioner=partitioner)
+    assert (res.phi == oracle).all()
+    assert res.stats is not None and res.stats.parts >= 1
+
+
+@settings(max_examples=12, deadline=None)
+@given(graphs(), st.sampled_from(["sequential", "random"]),
+       st.sampled_from([0.15, 0.35, 0.6]))
+def test_top_down_batched_matches_oracle(g, partitioner, budget_frac):
+    n, edges = g
+    ce = glib.canonical_edges(edges, n)
+    if len(ce) < 3:
+        return
+    oracle = alg2_truss(n, ce)
+    budget = max(4, int(len(ce) * budget_frac))
+    td = top_down_decompose(n, ce, budget=budget, partitioner=partitioner)
+    assert (td.phi == oracle).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(graphs(), st.sampled_from([0.2, 0.5]))
+def test_partitioned_support_batched_exact(g, budget_frac):
+    n, edges = g
+    ce = glib.canonical_edges(edges, n)
+    if len(ce) < 3:
+        return
+    sup = edge_support_np(glib.build_graph(n, ce))
+    budget = max(4, int(len(ce) * budget_frac))
+    ps, stats = partitioned_support(n, ce, budget, with_stats=True)
+    assert (ps == sup).all()
+    assert stats.rounds >= 1

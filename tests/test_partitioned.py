@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import graph as glib
+from repro.core import partition as plib
 from repro.core.bottom_up import (bottom_up_decompose, lower_bounding,
                                   partitioned_support)
 from repro.core.serial import alg2_truss
@@ -16,13 +17,15 @@ def _graph(rng, n=40, p=0.3):
     return glib.canonical_edges(random_graph(rng, n, p), n), n
 
 
+@pytest.mark.parametrize("engine", ["batched", "perpart"])
 @pytest.mark.parametrize("partitioner", ["sequential", "random"])
 @pytest.mark.parametrize("budget_frac", [0.2, 0.5])
-def test_bottom_up_exact(rng, partitioner, budget_frac):
+def test_bottom_up_exact(rng, partitioner, budget_frac, engine):
     ce, n = _graph(rng)
     oracle = alg2_truss(n, ce)
     budget = max(8, int(len(ce) * budget_frac))
-    res = bottom_up_decompose(n, ce, budget, partitioner=partitioner)
+    res = bottom_up_decompose(n, ce, budget, partitioner=partitioner,
+                              engine=engine)
     assert (res.phi == oracle).all()
     assert res.kmax == oracle.max()
 
@@ -102,3 +105,34 @@ def test_budget_respected(rng):
     # sequential partitioner keeps each NS within ~budget plus one vertex
     assert res.max_part_edges <= 2 * budget + int(
         glib.degrees(n, ce).max())
+    # OocStats mirrors the legacy accounting fields
+    assert res.stats is not None
+    assert res.stats.max_part_edges == res.max_part_edges
+    assert res.stats.rounds == res.rounds
+    assert res.stats.scans == res.scans
+    assert res.stats.parts >= 1
+    assert 0.0 <= res.stats.padding_waste < 1.0
+
+
+def test_sequential_partition_over_budget_warns(rng):
+    """A hub vertex whose NS exceeds the budget must be reported, and the
+    driver's max_part_edges accounting must record the actual overshoot."""
+    from repro.core.partition import PartitionBudgetWarning
+
+    n = 30
+    hub = np.stack([np.zeros(n - 1, np.int64), np.arange(1, n)], axis=1)
+    ce = glib.canonical_edges(hub, n)         # star: deg(0) = n - 1
+    budget = 5
+    g = glib.build_graph(n, ce)
+    with pytest.warns(PartitionBudgetWarning) as rec:
+        parts = plib.sequential_partition(g, budget)
+    w = rec[0].message
+    assert w.n_over == 1 and w.budget == budget
+    assert w.max_cost == n - 1
+    # every vertex still lands in exactly one part
+    assert sum(len(P) for P in parts) == n
+    with pytest.warns(PartitionBudgetWarning):
+        res = lower_bounding(n, ce, budget)
+    # the hub's NS is the whole star: accounting must reflect the overshoot
+    assert res.max_part_edges == n - 1
+    assert res.max_part_edges > budget
