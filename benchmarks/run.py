@@ -11,7 +11,11 @@ engine's round/frontier-size statistics):
   table4_*  — out-of-memory regime on the rmat graphs: batched OOC engine
               vs the seed per-part path vs the global-iterate baseline
               (the MapReduce [16] stand-in); ``--only table4 --json
-              BENCH_ooc.json`` records the OocStats counters.
+              BENCH_ooc.json`` records the OocStats counters.  The
+              ``table4_*_partitioner_*`` rows compare sequential vs
+              random vs locality-aware partitioning by counters (rounds,
+              scans, batches, compiles, triangle locality) — wall-clock
+              is too noisy on shared CPU to compare across runs.
   table5_*  — top-down top-t vs bottom-up full decomposition.
   table6_*  — k_max-truss vs c_max-core statistics (sizes, clustering).
   peel_*    — frontier-compacted engine vs the seed dense engine
@@ -129,6 +133,48 @@ def table4_bottom_up(smoke: bool = False):
         emit(f"table4_{name}_globaliter_MRstandin", usm,
              f"slowdown_vs_batched={usm/usb:.2f}",
              slowdown_vs_batched=usm / usb)
+
+
+def table4_partitioners(smoke: bool = False):
+    """Partitioner comparison at memory = m/32 (DESIGN.md §9): sequential
+    vs rebalanced-random vs locality-aware on the rmat graphs.
+
+    Wall-clock on this box is too noisy to compare runs, so the rows
+    record the OocStats *counters* — partition rounds, NS/candidate
+    scans, device batches, distinct compiles, triangle locality — which
+    are deterministic per (graph, partitioner, budget).  phi is asserted
+    identical across partitioners (Lemma 1 holds for any partition).
+    """
+    from benchmarks.datasets import load
+    from repro.core.bottom_up import bottom_up_decompose
+
+    names = ["hep-like"] if smoke else ["hep-like", "amazon-like", "wiki-like"]
+    for name in names:
+        n, edges = load(name)
+        budget = max(len(edges) // 32, 1024)
+        phi_ref = None
+        for part in ("sequential", "random", "locality"):
+            us, res = _time(lambda: bottom_up_decompose(
+                n, edges, budget, partitioner=part))
+            if phi_ref is None:
+                phi_ref = res.phi
+            else:
+                assert (res.phi == phi_ref).all(), part
+            st = res.stats
+            emit(f"table4_{name}_partitioner_{part}", us,
+                 f"rounds={res.rounds};ns_sweeps={st.ns_sweeps};"
+                 f"tri_routes={st.tri_routes};scans={res.scans};"
+                 f"batches={st.batches};compiles={st.compiles};"
+                 f"tri_locality={st.tri_locality:.3f};"
+                 f"overlapped={st.overlapped};budget={budget}",
+                 m=len(edges), budget=budget, rounds=res.rounds,
+                 ns_sweeps=st.ns_sweeps, tri_routes=st.tri_routes,
+                 scans=res.scans, parts=st.parts, batches=st.batches,
+                 compiles=st.compiles, tri_total=st.tri_total,
+                 tri_assigned=st.tri_assigned,
+                 tri_locality=st.tri_locality, overlapped=st.overlapped,
+                 max_part_edges=st.max_part_edges,
+                 padding_waste=st.padding_waste)
 
 
 def table5_top_down():
@@ -296,6 +342,7 @@ def roofline_summary():
 TABLES = {
     "table3": table3_inmemory,
     "table4": table4_bottom_up,
+    "table4part": table4_partitioners,
     "table5": table5_top_down,
     "table6": table6_truss_vs_core,
     "peel": peel_engines,
@@ -304,7 +351,7 @@ TABLES = {
 }
 
 # tables that accept smoke= (smallest-dataset variant); shared with hillclimb
-SMOKE_TABLES = ("peel", "table4")
+SMOKE_TABLES = ("peel", "table4", "table4part")
 
 
 def main(argv=None) -> None:

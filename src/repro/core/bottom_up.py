@@ -23,9 +23,14 @@ Engines (DESIGN.md §8):
   in ONE device call (``peel.peel_classes_batched``, one compile per bucket
   shape); the
   working graph shrinks via ``Graph.remove_edges`` incremental maintenance
-  instead of a per-round rebuild.  Stage-2 candidates are compacted and
-  peeled on pow4-padded shapes (``peel.local_threshold_peel``), so
-  consecutive k values share one compiled kernel.
+  instead of a per-round rebuild.  Rounds are **double-buffered**
+  (DESIGN.md §9): a round's internal-edge removal is known at batch-build
+  time, so the ``_partition_rounds`` producer advances the working graph
+  and builds round r + 1 on the host while the device still peels round r
+  (non-blocking dispatch, results consumed one round late).  Stage-2
+  candidates are compacted and peeled on pow4-padded shapes
+  (``peel.local_threshold_peel``), so consecutive k values share one
+  compiled kernel.
 * ``engine="perpart"`` — the seed path (full ``build_graph`` per round, one
   host triangle enumeration and one freshly-shaped device peel per part);
   kept as the before/after benchmark baseline (BENCH_ooc.json).
@@ -43,7 +48,8 @@ stage-2 candidate supports are always exact w.r.t. G_new.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+import inspect
+from typing import Callable, Iterator, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -56,14 +62,41 @@ from repro.core.support import (list_triangles, list_triangles_np,
                                 support_from_triangle_list)
 
 
+def _accepts_round(fn) -> bool:
+    """Whether a user partitioner asks for (graph, budget, round_idx).
+
+    Only a third *required* positional parameter (or ``*args``) opts in:
+    a defaulted third parameter (``def p(g, b, strict=True)``) keeps the
+    legacy 2-arg call so pre-existing config kwargs are never hijacked by
+    the round index.
+    """
+    try:
+        params = list(inspect.signature(fn).parameters.values())
+    except (TypeError, ValueError):      # no introspectable signature
+        return False
+    required = sum(
+        p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+        and p.default is p.empty
+        for p in params)
+    return (required >= 3
+            or any(p.kind == p.VAR_POSITIONAL for p in params))
+
+
 def _resolve_partitioner(partitioner):
     """Normalize to fn(graph, budget, round_idx) -> parts.
 
     The randomized partitioner is re-seeded every round (Chu–Cheng's
     guarantee that crossing edges eventually co-locate holds w.h.p. only
     under re-randomization); deterministic ones ignore the round index.
+    User callables with a third required positional parameter (or
+    ``*args``) receive the round index too, so custom partitioners can
+    vary per round the way the built-in "random" reseed does; 2-arg
+    callables — including ones with defaulted config parameters — keep
+    the legacy (graph, budget) call.
     """
     if callable(partitioner):
+        if _accepts_round(partitioner):
+            return lambda g, b, r: partitioner(g, b, r)
         return lambda g, b, r: partitioner(g, b)
     fn = plib.PARTITIONERS[partitioner]
     if partitioner == "random":
@@ -90,12 +123,30 @@ class OocStats:
     max_part_edges: int = 0   # largest NS working set seen (budget check)
     real_edges: int = 0       # Σ real edge slots across all batches
     padded_slots: int = 0     # Σ materialized lane slots across all batches
+    tri_total: int = 0        # triangles enumerated across partition rounds
+    tri_assigned: int = 0     # of those, captured inside some part
+    ns_sweeps: int = 0        # whole-graph NS edge-list sweeps (1 per batch)
+    overlapped: int = 0       # rounds whose device peel overlapped the
+    #                           host build of the NEXT round (pipeline depth)
+
+    @property
+    def tri_routes(self) -> int:
+        """Whole-graph triangle enumerations routed to parts — an alias:
+        ``build_partition_batch`` does exactly one triangle routing per NS
+        sweep, so the two whole-graph scan counters move in lockstep."""
+        return self.ns_sweeps
 
     @property
     def padding_waste(self) -> float:
         if not self.padded_slots:
             return 0.0
         return 1.0 - self.real_edges / self.padded_slots
+
+    @property
+    def tri_locality(self) -> float:
+        """Fraction of enumerated triangles captured inside a part — the
+        objective the locality-aware partitioner maximizes (DESIGN.md §9)."""
+        return self.tri_assigned / self.tri_total if self.tri_total else 1.0
 
     def absorb_batch(self, batch: "plib.PartitionBatch") -> None:
         self.parts += batch.n_parts
@@ -104,6 +155,10 @@ class OocStats:
         self.real_edges += batch.real_edges
         self.padded_slots += batch.padded_slots
         self.max_part_edges = max(self.max_part_edges, batch.max_part_edges)
+        self.tri_total += batch.tri_total
+        self.tri_assigned += batch.tri_assigned
+        self.ns_sweeps += 1        # build_partition_batch does exactly one
+        #                            whole-graph NS sweep + triangle routing
 
 
 @dataclasses.dataclass
@@ -154,6 +209,51 @@ def lower_bounding(
     return _lower_bounding_batched(n, edges, budget, part_fn)
 
 
+def _partition_rounds(
+    n: int, edges: np.ndarray, budget: int, part_fn, stats: OocStats,
+    *, with_incidence: bool = True,
+) -> Iterator[Tuple[int, "plib.PartitionBatch", np.ndarray]]:
+    """Producer side of the double-buffered round pipeline (DESIGN.md §9).
+
+    Yields ``(round_idx, batch, cur_ids)`` per partition round, with
+    ``cur_ids`` mapping the batch's current-graph edge ids to original edge
+    ids.  Which edges a round removes is known at batch-build time (a
+    round's internal edges leave the working graph regardless of their peel
+    results), so the generator applies ``Graph.remove_edges`` and
+    repartitions immediately — the consumer can keep the device busy with
+    round r while this code builds round r + 1 on the host.
+
+    A round in which no edge became internal (a deterministic-partitioner
+    stall; the paper's remedy is the randomized re-partition) doubles the
+    working-set budget and yields nothing: with no internal edges a peel
+    could not contribute any bound.
+    """
+    g = glib.build_graph(n, edges)
+    cur_ids = np.arange(g.m, dtype=np.int64)  # current edge id -> original id
+    cur_budget = budget
+    while g.m:
+        stats.rounds += 1
+        parts = part_fn(g, cur_budget, stats.rounds)
+        if not parts:
+            break
+        batch = plib.build_partition_batch(g, parts,
+                                           with_incidence=with_incidence)
+        stats.absorb_batch(batch)
+        removed = np.zeros(g.m, dtype=bool)
+        for bucket in batch.buckets:
+            removed[bucket.edge_ids[bucket.internal]] = True
+        if not removed.any():
+            # the batch is discarded un-launched; keep ``batches`` meaning
+            # "device launches"
+            stats.batches -= len(batch.buckets)
+            cur_budget *= 2
+            continue
+        ids_snapshot = cur_ids
+        cur_ids = cur_ids[~removed]
+        g = g.remove_edges(removed)
+        yield stats.rounds, batch, ids_snapshot
+
+
 def _lower_bounding_batched(n, edges, budget, part_fn) -> LowerBoundResult:
     m = len(edges)
     phi = np.zeros(m, dtype=np.int64)
@@ -161,46 +261,45 @@ def _lower_bounding_batched(n, edges, budget, part_fn) -> LowerBoundResult:
     in_gnew = np.zeros(m, dtype=bool)
     stats = OocStats()
     shape_cache: set = set()
-    g = glib.build_graph(n, edges)
-    cur_ids = np.arange(m, dtype=np.int64)   # current edge id -> original id
-    cur_budget = budget
 
-    while g.m:
-        stats.rounds += 1
-        parts = part_fn(g, cur_budget, stats.rounds)
-        if not parts:
-            break
-        batch = plib.build_partition_batch(g, parts)
-        stats.absorb_batch(batch)
-        removed = np.zeros(g.m, dtype=bool)
-        for bucket in batch.buckets:
-            phi_b, _, new = peel_classes_batched(
-                bucket.sup, bucket.tris, bucket.indptr, bucket.tids,
-                bucket.alive, shape_cache=shape_cache)
-            stats.compiles += int(new)
+    def consume(round_idx, batch, ids, handles):
+        """Blocking half: fold one round's peel results into lb/phi."""
+        for bucket, handle in zip(batch.buckets, handles):
+            phi_b, _ = handle.result()
             # internal edges live in exactly one part, so flat scatters are
             # collision-free; lb takes the max anyway (Lemma 1 is a bound)
             int_mask = bucket.internal
             ids_int = bucket.edge_ids[int_mask]          # current-graph ids
             phi_int = phi_b[int_mask].astype(np.int64)
-            glob = cur_ids[ids_int]
+            glob = ids[ids_int]
             np.maximum.at(lb, glob, phi_int)
-            if stats.rounds == 1:
+            if round_idx == 1:
                 # Exact Phi_2: internal support == global support in G here.
                 is2 = phi_int == 2
                 phi[glob[is2]] = 2
                 in_gnew[glob[~is2]] = True
             else:
                 in_gnew[glob] = True
-            removed[ids_int] = True
-        if not removed.any():
-            # Stalled: no crossing edge became internal (can happen with a
-            # deterministic partitioner).  Paper's remedy is the randomized
-            # re-partition; the hard fallback is to grow the working set.
-            cur_budget *= 2
-            continue
-        cur_ids = cur_ids[~removed]
-        g = g.remove_edges(removed)
+
+    # Double-buffered rounds: dispatch round r non-blocking, then let the
+    # generator build round r + 1 (NS sweep, triangle routing, lane packing)
+    # while the device peels r; consume r's results one round late.
+    pending = None
+    for round_idx, batch, ids in _partition_rounds(
+            n, edges, budget, part_fn, stats):
+        handles = []
+        for bucket in batch.buckets:
+            h = peel_classes_batched(
+                bucket.sup, bucket.tris, bucket.indptr, bucket.tids,
+                bucket.alive, shape_cache=shape_cache, blocking=False)
+            stats.compiles += int(h.new_compile)
+            handles.append(h)
+        if pending is not None:
+            stats.overlapped += 1
+            consume(*pending)
+        pending = (round_idx, batch, ids, handles)
+    if pending is not None:
+        consume(*pending)
 
     return LowerBoundResult(
         edges=edges, phi=phi, lb=lb, in_gnew=in_gnew, rounds=stats.rounds,
@@ -400,16 +499,11 @@ def partitioned_support(
     if engine != "batched":
         raise ValueError(f"unknown engine {engine!r}")
 
-    g = glib.build_graph(n, edges)
-    cur_ids = np.arange(m, dtype=np.int64)
-    while g.m:
-        stats.rounds += 1
-        parts = part_fn(g, cur_budget, stats.rounds)
-        if not parts:
-            break
-        batch = plib.build_partition_batch(g, parts, with_incidence=False)
-        stats.absorb_batch(batch)
-        removed = np.zeros(g.m, dtype=bool)
+    # The triangle-credit counter is all host-side scatters (no device
+    # peel), so the shared round generator is consumed directly — same
+    # incremental maintenance and stall fallback as the peeling driver.
+    for _round_idx, batch, ids in _partition_rounds(
+            n, edges, cur_budget, part_fn, stats, with_incidence=False):
         for bucket in batch.buckets:
             B = bucket.n_lanes
             # local triangle ids -> parent edge ids, lane-wise; the drop
@@ -421,12 +515,6 @@ def partitioned_support(
             real = parent[:, :, 0] >= 0
             trip = parent[real]
             if len(trip):
-                np.add.at(sup, cur_ids[trip.reshape(-1)], 1)
-            removed[bucket.edge_ids[bucket.internal]] = True
-        if not removed.any():
-            cur_budget *= 2
-            continue
-        cur_ids = cur_ids[~removed]
-        g = g.remove_edges(removed)
+                np.add.at(sup, ids[trip.reshape(-1)], 1)
 
     return (sup, stats) if with_stats else sup

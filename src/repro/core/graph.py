@@ -203,6 +203,39 @@ def neighborhood_subgraph(
     return edge_ids, graph.edges[edge_ids], internal
 
 
+def undirected_csr(graph: Graph) -> tuple[np.ndarray, np.ndarray]:
+    """CSR of the full (undirected) adjacency: (indptr, nbrs).
+
+    The packed :class:`Graph` stores only the oriented out-adjacency; BFS
+    growth (the locality-aware partitioner) needs both directions.  Each
+    edge contributes two entries.  Built once per partition round, so the
+    grouping uses a single stable argsort on the row key — neighbor order
+    within a row is unspecified (no caller relies on it).
+    """
+    n, m = graph.n, graph.m
+    if m == 0:
+        return np.zeros(n + 1, Int), np.zeros(0, Int)
+    e = graph.edges
+    rows = np.concatenate([e[:, 0], e[:, 1]])
+    cols = np.concatenate([e[:, 1], e[:, 0]])
+    cols = cols[np.argsort(rows, kind="stable")]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    indptr[1:] = np.cumsum(np.bincount(rows, minlength=n))
+    return indptr, cols.astype(Int)
+
+
+def compact_index(sorted_ids: np.ndarray, values: np.ndarray) -> np.ndarray:
+    """Map global ids to part-local slots: position of ``values`` in the
+    ascending ``sorted_ids``.
+
+    Shared by the partition-batch triangle routing and the top-down
+    candidate compaction — every value must be present in ``sorted_ids``
+    (NS(P) contains every edge of a triangle assigned to P; a candidate
+    contains every edge of a kept triangle).
+    """
+    return np.searchsorted(sorted_ids, values).astype(Int)
+
+
 def compact_edge_list(edges: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     """Relabel an edge list's vertices to dense local ids.
 

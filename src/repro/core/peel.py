@@ -390,12 +390,11 @@ def peel_threshold(sup0, tris, alive0, removable, thresh, *, incidence=None,
 
 
 # ---------------------------------------------------------------------------
-# batched local peels (out-of-core engine, DESIGN.md §8)
+# batched local peels (out-of-core engine, DESIGN.md §8, §9)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cap_f", "cap_t"))
-def _peel_classes_vmapped(sup_b, tris_b, indptr_b, tids_b, alive_b,
-                          *, cap_f, cap_t):
+def _peel_classes_vmapped_impl(sup_b, tris_b, indptr_b, tids_b, alive_b,
+                               *, cap_f, cap_t):
     """vmap of the fixed-cap frontier peel over the lanes of one bucket."""
     Em = sup_b.shape[1]
 
@@ -410,8 +409,41 @@ def _peel_classes_vmapped(sup_b, tris_b, indptr_b, tids_b, alive_b,
     return jax.vmap(one)(sup_b, tris_b, indptr_b, tids_b, alive_b)
 
 
+# The support buffer is donated: it is rebuilt from scratch by the host
+# every round and its (B, cap_e) int32 layout is exactly what the phi
+# output needs, so XLA reuses it in place.  (alive is NOT donated — no
+# bool output exists to absorb it, so donating it only triggers the
+# unused-donation warning.)
+_peel_classes_vmapped = jax.jit(
+    _peel_classes_vmapped_impl, static_argnames=("cap_f", "cap_t"),
+    donate_argnums=(0,))
+
+
+class PendingPeel:
+    """Handle to one asynchronously dispatched device peel (DESIGN.md §9).
+
+    JAX dispatch is asynchronous: the device arrays behind this handle are
+    futures, so host work done between dispatch and :meth:`result` overlaps
+    the device peel — the consumer half of the drivers' double-buffered
+    rounds.  ``result()`` blocks, converts to numpy, applies the host-side
+    epilogue and caches the answer.  ``new_compile`` is known at dispatch
+    time (shape-cache lookup), so stats never wait on the device.
+    """
+
+    def __init__(self, finalize, new_compile: bool):
+        self._finalize = finalize
+        self.new_compile = bool(new_compile)
+        self._out = None
+
+    def result(self):
+        if self._finalize is not None:
+            self._out = self._finalize()
+            self._finalize = None
+        return self._out
+
+
 def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
-                         *, shape_cache=None):
+                         *, shape_cache=None, blocking=True):
     """Local trussness of every NS lane of one bucket in ONE device call.
 
     Arrays are the (B, cap_e)-padded stacks a ``partition.PartBucket``
@@ -420,15 +452,22 @@ def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
     statically impossible and the kernel is one compile per bucket shape.
     Padded lanes start dead and exit the while loop immediately; padded edge
     slots are dead and every padding triangle points at the drop slot, so
-    neither can contribute support.
+    neither can contribute support.  The support buffer is donated to the
+    kernel (the host rebuilds it from scratch every round; its layout is
+    reused in place for phi — alive is not donated, no output matches it).
 
     ``shape_cache``: a caller-owned set of shape keys; returns whether this
     call added a new key (the driver's ``compiles`` counter).  The jit cache
     itself is process-global, so the counter reports at most the true number
     of XLA compiles.
 
+    With ``blocking=False`` the call returns a :class:`PendingPeel`
+    immediately after (asynchronous) dispatch; ``handle.result()`` yields
+    ``(phi, stats)`` and ``handle.new_compile`` is available at once — the
+    producer half of the double-buffered rounds (DESIGN.md §9).
+
     Returns (phi (B, cap_e) int32 ndarray, stats (B, N_STATS) ndarray,
-    newly_compiled bool).
+    newly_compiled bool) when blocking.
     """
     cap_e = int(sup_b.shape[1])
     n_inc = int(tids_b.shape[1])
@@ -437,7 +476,10 @@ def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
         # triangle-free bucket: every alive edge has support 0 and peels
         # at k = 2 — no device work needed
         phi = np.where(np.asarray(alive_b), 2, 0).astype(np.int32)
-        return phi, np.zeros(tris_np.shape[:1] + (N_STATS,), np.int32), False
+        st = np.zeros(tris_np.shape[:1] + (N_STATS,), np.int32)
+        if not blocking:
+            return PendingPeel(lambda: (phi, st), False)
+        return phi, st, False
     # frontier capacities: local decompositions peel every lane to EMPTY,
     # so total frontier throughput matters more than per-round width — the
     # divisors are a sweep over the rmat benchmark rounds (wider than the
@@ -456,10 +498,13 @@ def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
         jnp.asarray(sup_b), jnp.asarray(tris_b), jnp.asarray(indptr_b),
         jnp.asarray(tids_b), jnp.asarray(alive_b),
         cap_f=cap_f, cap_t=cap_t)
+    if not blocking:
+        return PendingPeel(lambda: (np.asarray(phi), np.asarray(st)), new)
     return np.asarray(phi), np.asarray(st), new
 
 
-def local_threshold_peel(sup0, tris, removable, thresh, *, shape_cache=None):
+def local_threshold_peel(sup0, tris, removable, thresh, *, shape_cache=None,
+                         blocking=True):
     """Single-level peel of a COMPACTED candidate subgraph on padded shapes.
 
     The out-of-core k-class extraction (bottom-up Procedure 5, top-down
@@ -470,13 +515,20 @@ def local_threshold_peel(sup0, tris, removable, thresh, *, shape_cache=None):
     traced, not static).  All ``m`` real edges start alive; ``removable``
     marks the internal/tentative ones.
 
-    Returns (alive_mask (m,), removed_mask (m,), newly_compiled bool).
+    With ``blocking=False`` returns a :class:`PendingPeel` right after
+    dispatch (``handle.result()`` -> (alive_mask, removed_mask)), so the
+    caller's host work overlaps the device peel (DESIGN.md §9).
+
+    Returns (alive_mask (m,), removed_mask (m,), newly_compiled bool)
+    when blocking.
     """
     m = int(len(sup0))
     T = int(len(tris))
     if T == 0:
         # no triangles: removals cascade nothing, one sweep is the fixpoint
         removed = np.asarray(removable, bool) & (np.asarray(sup0) <= thresh)
+        if not blocking:
+            return PendingPeel(lambda: (~removed, removed), False)
         return ~removed, removed, False
     # pow4 capacities: consecutive k levels shrink the candidate slowly, so
     # the coarser grid makes most of a run's peels share one compiled shape
@@ -502,12 +554,19 @@ def local_threshold_peel(sup0, tris, removable, thresh, *, shape_cache=None):
     st0 = jnp.zeros(N_STATS, jnp.int32)
     # _default_caps covers the largest incidence row, so overflow is
     # impossible and no resume loop is needed
-    alive, _, _, _ = peel_threshold_fixedcap(
+    alive_dev, _, _, _ = peel_threshold_fixedcap(
         jnp.asarray(sup_p), jnp.asarray(tris_p), jnp.asarray(indptr),
         jnp.asarray(tids_p), jnp.asarray(alive_p), jnp.asarray(rem_p),
         jnp.int32(thresh), st0, cap_f=cap_f, cap_t=cap_t)
-    alive = np.asarray(alive)[:m]
-    return alive, ~alive, new
+
+    def _finish():
+        alive = np.asarray(alive_dev)[:m]
+        return alive, ~alive
+
+    if not blocking:
+        return PendingPeel(_finish, new)
+    alive, removed = _finish()
+    return alive, removed, new
 
 
 # ---------------------------------------------------------------------------
@@ -650,13 +709,21 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
       * "frontier" / "dense" — force the in-memory engines (DESIGN.md §3).
       * "bottom-up" / "top-down" — force the batched out-of-core engines
         (DESIGN.md §8); the per-part NS budget is ``memory_budget`` edge
-        entries (default m // 8).
+        entries (default m // 8).  ``partitioner`` picks the round splitter
+        ("sequential", "random", or the locality-aware "locality" —
+        DESIGN.md §9).  A non-positive ``memory_budget`` raises.
 
     With ``with_stats`` the second return value is a :class:`PeelStats`
     (in-memory frontier), ``None`` (dense), or an ``OocStats`` (out-of-core).
     """
     from repro.core.graph import build_graph
 
+    if memory_budget is not None and memory_budget <= 0:
+        # a falsy budget must be rejected, not silently replaced by the
+        # m // 8 default (a budget of 0 entries can never be honored)
+        raise ValueError(
+            f"memory_budget must be a positive number of working-set "
+            f"entries, got {memory_budget!r}")
     g = build_graph(n, edges)
     if g.m == 0:
         phi = np.zeros(0, np.int64)
@@ -665,7 +732,7 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
     if engine == "auto" and memory_budget is not None and est > memory_budget:
         engine = "bottom-up"
     if engine in ("bottom-up", "top-down"):
-        if memory_budget:
+        if memory_budget is not None:
             # memory_budget is in working-set ENTRIES; the partitioners'
             # budget is in NS edge cost (sum of incident degrees, 2m
             # total).  Scale by the graph's entries-per-edge density so a

@@ -18,9 +18,12 @@ H is compacted to candidate-local edge ids, its triangle list filtered from
 the one static G_new list, and the peel executes on pow4-padded shapes
 (``peel.local_threshold_peel``) so consecutive k values reuse one compiled
 kernel — the seed path instead recomputed an m-wide support scatter and ran
-an m-sized peel per k.  With a ``budget``, stage-1 supports come from the
-batched ``partitioned_support``.  ``TopDownResult.stats`` carries the
-``OocStats`` counters of both stages.
+an m-sized peel per k.  The peel is dispatched non-blocking (DESIGN.md §9):
+while the device works, the host runs the O(T) alive-triangle sweep the
+Steps-7-9 pruning needs.  With a ``budget``, stage-1 supports come from the
+batched ``partitioned_support`` (whose partition rounds share the
+double-buffered producer of ``bottom_up._partition_rounds``).
+``TopDownResult.stats`` carries the ``OocStats`` counters of both stages.
 
 Deviation from the paper (DESIGN.md §7): Procedure 8 counts support
 contributed by *external unclassified* edges of H — edges whose own upper
@@ -172,18 +175,25 @@ def top_down_decompose(
         else:
             # exclude external unclassified support (see module docstring)
             alive0 = tentative | (classified_l & in_h)
-        # Compact the candidate to local edge ids and peel on padded shapes.
+        # Compact the candidate to local edge ids and peel on padded shapes
+        # (part-local compaction shared with the partition-batch engine).
         h_l = np.nonzero(alive0)[0]
-        local_id = np.full(gnew.m, -1, dtype=np.int64)
-        local_id[h_l] = np.arange(len(h_l))
         tmask = (alive0[tris_l[:, 0]] & alive0[tris_l[:, 1]]
                  & alive0[tris_l[:, 2]])
-        tris_loc = local_id[tris_l[tmask]].astype(np.int32)
+        tris_loc = glib.compact_index(h_l, tris_l[tmask])
         sup0 = support_from_triangle_list(tris_loc, len(h_l)).astype(np.int32)
-        surv_l, _, new = local_threshold_peel(
-            sup0, tris_loc, tentative[h_l], k - 3, shape_cache=shape_cache)
-        stats.compiles += int(new)
+        # Double-buffered candidate peel (DESIGN.md §9): dispatch without
+        # blocking, then do the O(T) alive-triangle sweep the prune step
+        # needs while the device peels — it depends only on alive_l, which
+        # the peel result cannot change before pruning.
+        handle = local_threshold_peel(
+            sup0, tris_loc, tentative[h_l], k - 3, shape_cache=shape_cache,
+            blocking=False)
+        stats.compiles += int(handle.new_compile)
         stats.batches += 1
+        ta = (alive_l[tris_l[:, 0]] & alive_l[tris_l[:, 1]]
+              & alive_l[tris_l[:, 2]])
+        surv_l, _ = handle.result()
         phi_k = np.zeros(gnew.m, dtype=bool)
         phi_k[h_l[surv_l]] = True
         phi_k &= tentative
@@ -193,8 +203,6 @@ def top_down_decompose(
             phi[gnew_ids[phi_k]] = k
             # Steps 7-9: prune classified edges with no undecided triangle.
             und = alive_l & ~classified_l
-            ta = (alive_l[tris_l[:, 0]] & alive_l[tris_l[:, 1]]
-                  & alive_l[tris_l[:, 2]])
             tri_needs = ta & (und[tris_l[:, 0]] | und[tris_l[:, 1]]
                               | und[tris_l[:, 2]])
             needs = np.zeros(gnew.m, dtype=np.int64)

@@ -1,0 +1,214 @@
+"""Locality-aware partitioner + double-buffered OOC rounds (DESIGN.md §9):
+partition validity, triangle-locality scoring, round reduction on a
+clustered graph, and the non-blocking peel dispatch path."""
+
+import numpy as np
+import pytest
+
+from repro.core import graph as glib
+from repro.core.bottom_up import (bottom_up_decompose, lower_bounding,
+                                  partitioned_support)
+from repro.core.partition import (PartitionBudgetWarning,
+                                  build_partition_batch, locality_partition,
+                                  sequential_partition)
+from repro.core.peel import (PendingPeel, local_threshold_peel,
+                             peel_classes_batched)
+from repro.core.serial import alg2_truss
+from repro.core.support import (edge_support_np, list_triangles_np,
+                                support_from_triangle_list)
+from tests.conftest import random_graph
+
+
+def _clustered_graph(n_cliques=6, size=8, seed=7):
+    """Disjoint cliques bridged into one component, vertex ids shuffled —
+    contiguous-id blocks split every clique, BFS growth recovers them."""
+    n = n_cliques * size
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    blocks = []
+    for c in range(n_cliques):
+        iu = np.triu_indices(size, 1)
+        blocks.append(np.stack(iu, 1) + c * size)
+    bridges = np.stack([np.arange(0, n - size, size),
+                        np.arange(size, n, size)], axis=1)
+    edges = perm[np.concatenate(blocks + [bridges])]
+    return n, glib.canonical_edges(edges, n)
+
+
+# ---------------------------------------------------------------------------
+# partitioner properties
+# ---------------------------------------------------------------------------
+
+def test_locality_partition_is_valid_partition(rng):
+    n = 50
+    ce = glib.canonical_edges(random_graph(rng, n, 0.25), n)
+    g = glib.build_graph(n, ce)
+    budget = max(8, len(ce) // 5)
+    parts = locality_partition(g, budget)
+    allv = np.concatenate(parts)
+    assert len(allv) == len(np.unique(allv))          # disjoint
+    assert set(allv.tolist()) == set(np.nonzero(g.deg > 0)[0].tolist())
+    cost = g.deg.astype(np.int64)
+    for P in parts:
+        # budget respected, except the warned over-budget singleton case
+        assert int(cost[P].sum()) <= budget or len(P) == 1
+
+
+def test_locality_partition_warns_on_hub():
+    n = 30
+    hub = np.stack([np.zeros(n - 1, np.int64), np.arange(1, n)], axis=1)
+    ce = glib.canonical_edges(hub, n)
+    g = glib.build_graph(n, ce)
+    with pytest.warns(PartitionBudgetWarning) as rec:
+        parts = locality_partition(g, budget=5)
+    assert rec[0].message.max_cost == n - 1
+    assert sum(len(P) for P in parts) == n
+
+
+def test_locality_partition_is_compact(rng):
+    """Bin-packed growth regions: the part count stays near the
+    ceil(total_cost / budget) lower bound (first-fit-decreasing is within
+    a constant factor), instead of one part per periphery fragment."""
+    n = 60
+    ce = glib.canonical_edges(random_graph(rng, n, 0.2), n)
+    g = glib.build_graph(n, ce)
+    cost = g.deg.astype(np.int64)
+    for budget in (16, 40, 100):
+        parts = locality_partition(g, budget)
+        n_over = int((cost > budget).sum())
+        lower = int(np.ceil(cost.sum() / budget))
+        assert len(parts) <= 2 * lower + n_over + 1
+
+
+def test_locality_beats_sequential_on_clustered_graph():
+    """The tentpole claim in miniature: on a shuffled clique graph the
+    locality-aware partitioner captures more triangles per part and
+    settles the decomposition in no more rounds than contiguous-id
+    blocks, with identical phi (Lemma 1 holds for any partition)."""
+    n, ce = _clustered_graph()
+    oracle = alg2_truss(n, ce)
+    budget = 2 * 8 * 7 + 16        # ~ one clique's NS cost
+    res = {}
+    for p in ("sequential", "locality"):
+        res[p] = bottom_up_decompose(n, ce, budget, partitioner=p)
+        assert (res[p].phi == oracle).all()
+    st_seq, st_loc = res["sequential"].stats, res["locality"].stats
+    assert st_loc.tri_locality > st_seq.tri_locality
+    assert res["locality"].rounds <= res["sequential"].rounds
+    assert st_loc.ns_sweeps <= st_seq.ns_sweeps
+    assert st_loc.tri_routes <= st_seq.tri_routes
+    assert 0.0 <= st_loc.tri_locality <= 1.0
+
+
+def test_partition_batch_tri_locality_counters(rng):
+    n = 40
+    ce = glib.canonical_edges(random_graph(rng, n, 0.3), n)
+    g = glib.build_graph(n, ce)
+    batch = build_partition_batch(
+        g, sequential_partition(g, max(8, len(ce) // 4)))
+    assert batch.tri_total == len(list_triangles_np(g))
+    assert 0 <= batch.tri_assigned <= batch.tri_total
+    assert batch.tri_locality == pytest.approx(
+        batch.tri_assigned / batch.tri_total if batch.tri_total else 1.0)
+    # one part captures everything
+    whole = build_partition_batch(g, [np.nonzero(g.deg > 0)[0].astype(np.int32)])
+    assert whole.tri_locality == 1.0
+
+
+@pytest.mark.parametrize("budget_frac", [0.15, 0.4])
+def test_locality_engines_match_oracle(rng, budget_frac):
+    for trial in range(3):
+        n = 22 + 7 * trial
+        ce = glib.canonical_edges(random_graph(rng, n, 0.3), n)
+        if len(ce) < 3:
+            continue
+        oracle = alg2_truss(n, ce)
+        budget = max(4, int(len(ce) * budget_frac))
+        res = bottom_up_decompose(n, ce, budget, partitioner="locality")
+        assert (res.phi == oracle).all()
+        sup = edge_support_np(glib.build_graph(n, ce))
+        ps = partitioned_support(n, ce, budget, partitioner="locality")
+        assert (ps == sup).all()
+        from repro.core.top_down import top_down_decompose
+        td = top_down_decompose(n, ce, budget=budget, partitioner="locality")
+        assert (td.phi == oracle).all()
+
+
+# ---------------------------------------------------------------------------
+# double-buffered rounds: non-blocking dispatch path
+# ---------------------------------------------------------------------------
+
+def test_peel_classes_batched_nonblocking_matches_blocking(rng):
+    n = 40
+    ce = glib.canonical_edges(random_graph(rng, n, 0.3), n)
+    g = glib.build_graph(n, ce)
+    batch = build_partition_batch(
+        g, sequential_partition(g, max(8, len(ce) // 4)))
+    for bucket in batch.buckets:
+        phi_b, st_b, _ = peel_classes_batched(
+            bucket.sup, bucket.tris, bucket.indptr, bucket.tids, bucket.alive)
+        handle = peel_classes_batched(
+            bucket.sup, bucket.tris, bucket.indptr, bucket.tids, bucket.alive,
+            blocking=False)
+        assert isinstance(handle, PendingPeel)
+        phi_nb, st_nb = handle.result()
+        assert (phi_nb == phi_b).all()
+        assert (st_nb == st_b).all()
+        # result() is cached, not re-dispatched
+        assert handle.result() is handle.result()
+
+
+def test_local_threshold_peel_nonblocking_matches_blocking(rng):
+    n = 24
+    ce = glib.canonical_edges(random_graph(rng, n, 0.4), n)
+    g = glib.build_graph(n, ce)
+    tris = list_triangles_np(g)
+    sup = support_from_triangle_list(tris, g.m).astype(np.int32)
+    removable = rng.random(g.m) < 0.7
+    for thresh in (0, 2, 5):
+        alive_b, removed_b, _ = local_threshold_peel(
+            sup, tris, removable, thresh)
+        handle = local_threshold_peel(
+            sup, tris, removable, thresh, blocking=False)
+        alive_nb, removed_nb = handle.result()
+        assert (alive_nb == alive_b).all()
+        assert (removed_nb == removed_b).all()
+    # triangle-free short-circuit honors the contract too
+    h = local_threshold_peel(np.zeros(4, np.int32),
+                             np.zeros((0, 3), np.int32),
+                             np.ones(4, bool), 0, blocking=False)
+    alive_nb, removed_nb = h.result()
+    assert removed_nb.all() and not alive_nb.any()
+
+
+def test_shape_cache_compile_counter_nonblocking(rng):
+    n = 30
+    ce = glib.canonical_edges(random_graph(rng, n, 0.35), n)
+    g = glib.build_graph(n, ce)
+    batch = build_partition_batch(
+        g, sequential_partition(g, max(8, len(ce) // 3)))
+    cache: set = set()
+    bucket = batch.buckets[0]
+    h1 = peel_classes_batched(bucket.sup, bucket.tris, bucket.indptr,
+                              bucket.tids, bucket.alive,
+                              shape_cache=cache, blocking=False)
+    h2 = peel_classes_batched(bucket.sup, bucket.tris, bucket.indptr,
+                              bucket.tids, bucket.alive,
+                              shape_cache=cache, blocking=False)
+    # new_compile is known at dispatch, before any result() blocks
+    assert h2.new_compile is False
+    assert (h1.result()[0] == h2.result()[0]).all()
+
+
+def test_pipeline_overlap_counter(rng):
+    """Multi-round runs consume each round one round late: all but the
+    final consumed round overlapped the next round's host build."""
+    n = 45
+    ce = glib.canonical_edges(random_graph(rng, n, 0.25), n)
+    res = lower_bounding(n, ce, budget=max(8, len(ce) // 6))
+    st = res.stats
+    assert st.overlapped >= 0
+    if st.rounds > 1:
+        # every yielded round except the last was consumed after the
+        # following round had been built and dispatched
+        assert st.overlapped >= 1

@@ -28,7 +28,7 @@ def graphs(draw, max_n=26):
 
 
 @settings(max_examples=12, deadline=None)
-@given(graphs(), st.sampled_from(["sequential", "random"]),
+@given(graphs(), st.sampled_from(["sequential", "random", "locality"]),
        st.sampled_from([0.15, 0.35, 0.6]))
 def test_bottom_up_batched_matches_oracle(g, partitioner, budget_frac):
     n, edges = g
@@ -43,7 +43,7 @@ def test_bottom_up_batched_matches_oracle(g, partitioner, budget_frac):
 
 
 @settings(max_examples=12, deadline=None)
-@given(graphs(), st.sampled_from(["sequential", "random"]),
+@given(graphs(), st.sampled_from(["sequential", "random", "locality"]),
        st.sampled_from([0.15, 0.35, 0.6]))
 def test_top_down_batched_matches_oracle(g, partitioner, budget_frac):
     n, edges = g
@@ -68,3 +68,24 @@ def test_partitioned_support_batched_exact(g, budget_frac):
     ps, stats = partitioned_support(n, ce, budget, with_stats=True)
     assert (ps == sup).all()
     assert stats.rounds >= 1
+
+
+@settings(max_examples=12, deadline=None)
+@given(graphs(), st.sampled_from([0.15, 0.35, 0.6]))
+def test_partitioner_equivalence(g, budget_frac):
+    """Lemma 1 holds for ANY valid partition: sequential, (rebalanced)
+    random and locality-aware rounds must all produce identical phi."""
+    n, edges = g
+    ce = glib.canonical_edges(edges, n)
+    if len(ce) < 3:
+        return
+    budget = max(4, int(len(ce) * budget_frac))
+    results = {
+        p: bottom_up_decompose(n, ce, budget, partitioner=p)
+        for p in ("sequential", "random", "locality")
+    }
+    phi_ref = results["sequential"].phi
+    assert (phi_ref == alg2_truss(n, ce)).all()
+    for p, res in results.items():
+        assert (res.phi == phi_ref).all(), p
+        assert 0.0 <= res.stats.tri_locality <= 1.0

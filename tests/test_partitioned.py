@@ -18,7 +18,7 @@ def _graph(rng, n=40, p=0.3):
 
 
 @pytest.mark.parametrize("engine", ["batched", "perpart"])
-@pytest.mark.parametrize("partitioner", ["sequential", "random"])
+@pytest.mark.parametrize("partitioner", ["sequential", "random", "locality"])
 @pytest.mark.parametrize("budget_frac", [0.2, 0.5])
 def test_bottom_up_exact(rng, partitioner, budget_frac, engine):
     ce, n = _graph(rng)

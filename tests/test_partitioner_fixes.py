@@ -1,0 +1,196 @@
+"""Regression tests for the partitioner-dispatch bugfixes (ISSUE 3):
+
+* ``truss_decompose(memory_budget=0)`` silently fell back to the ``m // 8``
+  default instead of being rejected;
+* ``random_partition`` hashed vertices into bins ignoring per-vertex NS
+  cost, so a bin's summed cost could exceed the budget by large factors
+  with no warning;
+* ``_resolve_partitioner`` wrapped user callables as 2-arg, silently
+  discarding the round index, so custom partitioners could never vary per
+  round the way the built-in "random" reseed does.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import graph as glib
+from repro.core.bottom_up import (_resolve_partitioner, bottom_up_decompose,
+                                  lower_bounding)
+from repro.core.partition import (PartitionBudgetWarning, random_partition,
+                                  sequential_partition)
+from repro.core.peel import truss_decompose
+from repro.core.serial import alg2_truss
+from tests.conftest import random_graph
+
+
+# ---------------------------------------------------------------------------
+# truss_decompose: memory_budget=0 must be rejected, not defaulted
+# ---------------------------------------------------------------------------
+
+def _small(rng, n=24, p=0.35):
+    return glib.canonical_edges(random_graph(rng, n, p), n), n
+
+
+@pytest.mark.parametrize("engine", ["auto", "bottom-up", "top-down"])
+@pytest.mark.parametrize("bad", [0, -1, -100])
+def test_nonpositive_memory_budget_rejected(rng, engine, bad):
+    ce, n = _small(rng)
+    with pytest.raises(ValueError, match="memory_budget must be a positive"):
+        truss_decompose(n, ce, engine=engine, memory_budget=bad)
+
+
+def test_memory_budget_none_still_defaults(rng):
+    """Only *explicit* non-positive budgets are errors; None keeps the
+    m // 8 default for the forced out-of-core engines."""
+    ce, n = _small(rng)
+    oracle = alg2_truss(n, ce)
+    for engine in ("bottom-up", "top-down"):
+        phi = truss_decompose(n, ce, engine=engine, memory_budget=None)
+        assert (phi == oracle).all()
+
+
+def test_explicit_budget_honored(rng):
+    """An explicit budget must steer the partitioning: a tiny working set
+    forces strictly deeper partitioning than a roomy one."""
+    from repro.core.peel import estimate_working_set
+
+    ce, n = _small(rng, n=40, p=0.3)
+    oracle = alg2_truss(n, ce)
+    est = estimate_working_set(glib.build_graph(n, ce))
+    phi_small, st_small = truss_decompose(
+        n, ce, engine="bottom-up", memory_budget=64, with_stats=True)
+    phi_large, st_large = truss_decompose(
+        n, ce, engine="bottom-up", memory_budget=est // 2, with_stats=True)
+    assert (phi_small == oracle).all() and (phi_large == oracle).all()
+    assert st_small.parts > st_large.parts
+
+
+# ---------------------------------------------------------------------------
+# random_partition: cost-aware bins
+# ---------------------------------------------------------------------------
+
+def _skewed_graph(n=64, hub_deg=40):
+    """A hub star plus a sparse tail: per-vertex NS costs are wildly
+    uneven, the regime where cost-blind hashing overflows bins."""
+    hub = np.stack([np.zeros(hub_deg, np.int64),
+                    np.arange(1, hub_deg + 1)], axis=1)
+    tail = np.stack([np.arange(hub_deg + 1, n - 1),
+                     np.arange(hub_deg + 2, n)], axis=1)
+    return glib.canonical_edges(np.concatenate([hub, tail]), n)
+
+
+def test_random_partition_respects_budget():
+    """Pre-fix, hashing ~64 vertices into a handful of bins exceeded the
+    budget by several x with no warning; post-fix every emitted part's
+    summed NS cost fits (no single vertex is over budget here, so no
+    over-budget singleton is allowed either)."""
+    n = 64
+    ce = _skewed_graph(n)
+    g = glib.build_graph(n, ce)
+    cost = g.deg.astype(np.int64)
+    budget = int(cost.max()) + 4          # every vertex fits on its own
+    for seed in range(5):
+        parts = random_partition(g, budget, seed=seed)
+        # a partition: every active vertex exactly once
+        allv = np.concatenate(parts)
+        assert len(allv) == len(np.unique(allv))
+        assert set(allv.tolist()) == set(np.nonzero(g.deg > 0)[0].tolist())
+        for P in parts:
+            assert int(cost[P].sum()) <= budget, (seed, P)
+
+
+def test_random_partition_warns_on_over_budget_vertex():
+    """A single vertex above the budget must warn — consistently with
+    sequential_partition — and still be emitted as a singleton part."""
+    n = 30
+    hub = np.stack([np.zeros(n - 1, np.int64), np.arange(1, n)], axis=1)
+    ce = glib.canonical_edges(hub, n)
+    budget = 5
+    g = glib.build_graph(n, ce)
+    with pytest.warns(PartitionBudgetWarning) as rec:
+        parts = random_partition(g, budget, seed=0)
+    assert rec[0].message.max_cost == n - 1
+    cost = g.deg.astype(np.int64)
+    for P in parts:
+        assert int(cost[P].sum()) <= budget or len(P) == 1
+    # the decomposition built on top stays exact
+    oracle = alg2_truss(n, ce)
+    with pytest.warns(PartitionBudgetWarning):
+        res = bottom_up_decompose(n, ce, budget, partitioner="random")
+    assert (res.phi == oracle).all()
+
+
+def test_random_partition_deterministic_per_seed():
+    ce = _skewed_graph()
+    g = glib.build_graph(64, ce)
+    a = random_partition(g, budget=30, seed=3)
+    b = random_partition(g, budget=30, seed=3)
+    assert len(a) == len(b)
+    for pa, pb in zip(a, b):
+        assert (pa == pb).all()
+
+
+# ---------------------------------------------------------------------------
+# _resolve_partitioner: 3-arg user callables get the round index
+# ---------------------------------------------------------------------------
+
+def test_custom_partitioner_receives_round_index(rng):
+    ce, n = _small(rng, n=30)
+    seen: list = []
+
+    def by_round(g, budget, round_idx):
+        seen.append(round_idx)
+        return sequential_partition(g, budget)
+
+    res = lower_bounding(n, ce, budget=max(8, len(ce) // 4),
+                         partitioner=by_round)
+    assert seen == list(range(1, res.rounds + 1))
+
+
+def test_custom_partitioner_two_arg_still_works(rng):
+    ce, n = _small(rng, n=30)
+    calls: list = []
+
+    def plain(g, budget):
+        calls.append(budget)
+        return sequential_partition(g, budget)
+
+    oracle = alg2_truss(n, ce)
+    res = bottom_up_decompose(n, ce, max(8, len(ce) // 4),
+                              partitioner=plain)
+    assert (res.phi == oracle).all()
+    assert len(calls) >= 1
+
+
+def test_defaulted_third_param_keeps_two_arg_call(rng):
+    """A defaulted third parameter is a config kwarg, not a round slot:
+    the legacy 2-arg call must be kept so the round index never hijacks
+    it."""
+    ce, n = _small(rng, n=24)
+    seen: list = []
+
+    def with_config(g, budget, strict=True):
+        seen.append(strict)
+        return sequential_partition(g, budget)
+
+    lower_bounding(n, ce, budget=max(8, len(ce) // 3),
+                   partitioner=with_config)
+    assert all(s is True for s in seen)
+
+
+def test_resolve_partitioner_varargs_and_builtin():
+    recorded: list = []
+
+    def star(*args):
+        recorded.append(args)
+        return []
+
+    fn = _resolve_partitioner(star)
+    fn("g", 7, 3)
+    assert recorded == [("g", 7, 3)]
+    # the built-in "random" reseed path still threads the round through
+    g = glib.build_graph(6, np.array([[0, 1], [1, 2], [0, 2]]))
+    fn_r = _resolve_partitioner("random")
+    p1 = fn_r(g, 100, 1)
+    p2 = fn_r(g, 100, 1)
+    assert all((a == b).all() for a, b in zip(p1, p2))
