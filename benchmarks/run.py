@@ -15,7 +15,11 @@ engine's round/frontier-size statistics):
               ``table4_*_partitioner_*`` rows compare sequential vs
               random vs locality-aware partitioning by counters (rounds,
               scans, batches, compiles, triangle locality) — wall-clock
-              is too noisy on shared CPU to compare across runs.
+              is too noisy on shared CPU to compare across runs.  The
+              ``table4shard_*`` rows route each round's bucket lanes
+              through shard_map over every local device (DESIGN.md §10)
+              and record devices / sharded_rounds / padding_waste against
+              the single-device batched engine.
   table5_*  — top-down top-t vs bottom-up full decomposition.
   table6_*  — k_max-truss vs c_max-core statistics (sizes, clustering).
   peel_*    — frontier-compacted engine vs the seed dense engine
@@ -175,6 +179,49 @@ def table4_partitioners(smoke: bool = False):
                  tri_locality=st.tri_locality, overlapped=st.overlapped,
                  max_part_edges=st.max_part_edges,
                  padding_waste=st.padding_waste)
+
+
+def table4_sharded(smoke: bool = False):
+    """Pod-spanning OOC rounds (DESIGN.md §10): the batched bottom-up
+    engine with bucket lanes routed through shard_map over every local
+    device vs the single-device batched engine.
+
+    On CPU the shards are virtual (forced host devices in CI), so the rows
+    record the sharding *counters* — devices spanned, sharded rounds,
+    padding waste from the lane-multiple rule — and assert identical phi;
+    wall-clock speedups only mean something on a real mesh.
+    """
+    from benchmarks.datasets import load
+    from repro.core.bottom_up import bottom_up_decompose
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    names = ["hep-like"] if smoke else ["hep-like", "amazon-like",
+                                        "wiki-like"]
+    for name in names:
+        n, edges = load(name)
+        budget = max(len(edges) // 32, 1024)
+        uss, res_s = _time(lambda: bottom_up_decompose(
+            n, edges, budget, mesh=mesh))
+        usb, res_b = _time(lambda: bottom_up_decompose(n, edges, budget))
+        assert (res_s.phi == res_b.phi).all()
+        st = res_s.stats
+        emit(f"table4shard_{name}_TDbottomup_sharded", uss,
+             f"devices={st.devices};sharded_rounds={st.sharded_rounds};"
+             f"rounds={res_s.rounds};batches={st.batches};"
+             f"compiles={st.compiles};padding_waste={st.padding_waste:.3f};"
+             f"speedup_vs_1dev={usb/uss:.2f};budget={budget}",
+             m=len(edges), budget=budget, devices=st.devices,
+             sharded_rounds=st.sharded_rounds, rounds=res_s.rounds,
+             scans=res_s.scans, batches=st.batches, compiles=st.compiles,
+             overlapped=st.overlapped, padding_waste=st.padding_waste,
+             speedup_vs_1dev=usb / uss)
+        emit(f"table4shard_{name}_TDbottomup_1dev", usb,
+             f"rounds={res_b.rounds};"
+             f"padding_waste={res_b.stats.padding_waste:.3f}",
+             m=len(edges), budget=budget, rounds=res_b.rounds,
+             compiles=res_b.stats.compiles,
+             padding_waste=res_b.stats.padding_waste)
 
 
 def table5_top_down():
@@ -343,6 +390,7 @@ TABLES = {
     "table3": table3_inmemory,
     "table4": table4_bottom_up,
     "table4part": table4_partitioners,
+    "table4shard": table4_sharded,
     "table5": table5_top_down,
     "table6": table6_truss_vs_core,
     "peel": peel_engines,
@@ -351,7 +399,7 @@ TABLES = {
 }
 
 # tables that accept smoke= (smallest-dataset variant); shared with hillclimb
-SMOKE_TABLES = ("peel", "table4", "table4part")
+SMOKE_TABLES = ("peel", "table4", "table4part", "table4shard")
 
 
 def main(argv=None) -> None:

@@ -82,17 +82,19 @@ def _accepts_round(fn) -> bool:
             or any(p.kind == p.VAR_POSITIONAL for p in params))
 
 
-def _resolve_partitioner(partitioner):
+def _resolve_partitioner(partitioner, seed: int = 0):
     """Normalize to fn(graph, budget, round_idx) -> parts.
 
     The randomized partitioner is re-seeded every round (Chu–Cheng's
     guarantee that crossing edges eventually co-locate holds w.h.p. only
-    under re-randomization); deterministic ones ignore the round index.
-    User callables with a third required positional parameter (or
-    ``*args``) receive the round index too, so custom partitioners can
-    vary per round the way the built-in "random" reseed does; 2-arg
-    callables — including ones with defaulted config parameters — keep
-    the legacy (graph, budget) call.
+    under re-randomization); ``seed`` offsets the per-round reseed so the
+    drivers' ``partitioner_seed=`` reaches ``random_partition`` (with the
+    default 0 the schedule is the historical ``seed=round_idx`` one).
+    Deterministic partitioners ignore both.  User callables with a third
+    required positional parameter (or ``*args``) receive the round index
+    too, so custom partitioners can vary per round the way the built-in
+    "random" reseed does; 2-arg callables — including ones with defaulted
+    config parameters — keep the legacy (graph, budget) call.
     """
     if callable(partitioner):
         if _accepts_round(partitioner):
@@ -100,7 +102,7 @@ def _resolve_partitioner(partitioner):
         return lambda g, b, r: partitioner(g, b)
     fn = plib.PARTITIONERS[partitioner]
     if partitioner == "random":
-        return lambda g, b, r: fn(g, b, seed=r)
+        return lambda g, b, r: fn(g, b, seed=seed + r)
     return lambda g, b, r: fn(g, b)
 
 
@@ -128,6 +130,10 @@ class OocStats:
     ns_sweeps: int = 0        # whole-graph NS edge-list sweeps (1 per batch)
     overlapped: int = 0       # rounds whose device peel overlapped the
     #                           host build of the NEXT round (pipeline depth)
+    devices: int = 1          # mesh devices the sharded dispatch spans
+    sharded_rounds: int = 0   # device dispatches (stage-1 partition rounds
+    #                           + per-k candidate peels) routed through
+    #                           shard_map across the mesh (DESIGN.md §10)
 
     @property
     def tri_routes(self) -> int:
@@ -198,20 +204,31 @@ def lower_bounding(
     budget: int,
     partitioner: str | Callable = "sequential",
     engine: str = "batched",
+    *,
+    partitioner_seed: int = 0,
+    mesh=None,
+    mesh_axis: str = "data",
 ) -> LowerBoundResult:
-    """Algorithm 3: per-edge lower bounds + exact round-1 Phi_2."""
-    part_fn = _resolve_partitioner(partitioner)
+    """Algorithm 3: per-edge lower bounds + exact round-1 Phi_2.
+
+    With a ``mesh``, every round's bucket peels span the mesh axis
+    (DESIGN.md §10); requires the batched engine.
+    """
+    part_fn = _resolve_partitioner(partitioner, seed=partitioner_seed)
     edges = glib.canonical_edges(edges, n)
     if engine == "perpart":
+        if mesh is not None:
+            raise ValueError("mesh= requires the batched engine")
         return _lower_bounding_perpart(n, edges, budget, part_fn)
     if engine != "batched":
         raise ValueError(f"unknown engine {engine!r}")
-    return _lower_bounding_batched(n, edges, budget, part_fn)
+    return _lower_bounding_batched(n, edges, budget, part_fn,
+                                   mesh=mesh, mesh_axis=mesh_axis)
 
 
 def _partition_rounds(
     n: int, edges: np.ndarray, budget: int, part_fn, stats: OocStats,
-    *, with_incidence: bool = True,
+    *, with_incidence: bool = True, lane_multiple: int = 1,
 ) -> Iterator[Tuple[int, "plib.PartitionBatch", np.ndarray]]:
     """Producer side of the double-buffered round pipeline (DESIGN.md §9).
 
@@ -237,7 +254,8 @@ def _partition_rounds(
         if not parts:
             break
         batch = plib.build_partition_batch(g, parts,
-                                           with_incidence=with_incidence)
+                                           with_incidence=with_incidence,
+                                           lane_multiple=lane_multiple)
         stats.absorb_batch(batch)
         removed = np.zeros(g.m, dtype=bool)
         for bucket in batch.buckets:
@@ -254,12 +272,15 @@ def _partition_rounds(
         yield stats.rounds, batch, ids_snapshot
 
 
-def _lower_bounding_batched(n, edges, budget, part_fn) -> LowerBoundResult:
+def _lower_bounding_batched(n, edges, budget, part_fn, mesh=None,
+                            mesh_axis: str = "data") -> LowerBoundResult:
     m = len(edges)
     phi = np.zeros(m, dtype=np.int64)
     lb = np.full(m, 2, dtype=np.int64)
     in_gnew = np.zeros(m, dtype=bool)
     stats = OocStats()
+    n_dev = int(mesh.shape[mesh_axis]) if mesh is not None else 1
+    stats.devices = n_dev
     shape_cache: set = set()
 
     def consume(round_idx, batch, ids, handles):
@@ -283,17 +304,21 @@ def _lower_bounding_batched(n, edges, budget, part_fn) -> LowerBoundResult:
 
     # Double-buffered rounds: dispatch round r non-blocking, then let the
     # generator build round r + 1 (NS sweep, triangle routing, lane packing)
-    # while the device peels r; consume r's results one round late.
+    # while the device peels r; consume r's results one round late.  With a
+    # mesh the same pipeline holds pod-wide: the handles are shard_map
+    # dispatches whose lanes span the mesh axis (DESIGN.md §10).
     pending = None
     for round_idx, batch, ids in _partition_rounds(
-            n, edges, budget, part_fn, stats):
+            n, edges, budget, part_fn, stats, lane_multiple=n_dev):
         handles = []
         for bucket in batch.buckets:
             h = peel_classes_batched(
                 bucket.sup, bucket.tris, bucket.indptr, bucket.tids,
-                bucket.alive, shape_cache=shape_cache, blocking=False)
+                bucket.alive, shape_cache=shape_cache, blocking=False,
+                mesh=mesh, mesh_axis=mesh_axis)
             stats.compiles += int(h.new_compile)
             handles.append(h)
+        stats.sharded_rounds += int(any(h.sharded for h in handles))
         if pending is not None:
             stats.overlapped += 1
             consume(*pending)
@@ -374,9 +399,23 @@ def bottom_up_decompose(
     budget: int,
     partitioner: str | Callable = "sequential",
     engine: str = "batched",
+    *,
+    partitioner_seed: int = 0,
+    mesh=None,
+    mesh_axis: str = "data",
 ) -> BottomUpResult:
-    """Algorithm 4: full decomposition under a working-set budget."""
-    lbres = lower_bounding(n, edges, budget, partitioner, engine=engine)
+    """Algorithm 4: full decomposition under a working-set budget.
+
+    With a ``mesh`` (batched engine only), stage-1 rounds split their
+    bucket lanes over ``mesh_axis`` and stage-2 candidate peels run
+    triangle-sharded — one partition round spans the pod (DESIGN.md §10);
+    ``OocStats.devices`` / ``sharded_rounds`` record the routing.
+    ``partitioner_seed`` offsets the randomized partitioner's per-round
+    reseed (ignored by the deterministic splitters).
+    """
+    lbres = lower_bounding(n, edges, budget, partitioner, engine=engine,
+                           partitioner_seed=partitioner_seed,
+                           mesh=mesh, mesh_axis=mesh_axis)
     edges = lbres.edges
     phi = lbres.phi.copy()
     lb = lbres.lb
@@ -423,10 +462,13 @@ def bottom_up_decompose(
             sub = glib.build_graph(len(verts), local_edges)
             tris = list_triangles(sub)
             sup = support_from_triangle_list(tris, sub.m).astype(np.int32)
-            _, removed, new = local_threshold_peel(
-                sup, tris, internal[h_ids], k - 2, shape_cache=shape_cache)
-            stats.compiles += int(new)
+            handle = local_threshold_peel(
+                sup, tris, internal[h_ids], k - 2, shape_cache=shape_cache,
+                blocking=False, mesh=mesh, mesh_axis=mesh_axis)
+            stats.compiles += int(handle.new_compile)
             stats.batches += 1
+            stats.sharded_rounds += int(handle.sharded)
+            _, removed = handle.result()
         rm_glob = h_ids[removed]
         phi[rm_glob] = k
         remaining[rm_glob] = False
@@ -446,6 +488,10 @@ def partitioned_support(
     partitioner: str | Callable = "sequential",
     engine: str = "batched",
     with_stats: bool = False,
+    *,
+    partitioner_seed: int = 0,
+    mesh=None,
+    mesh_axis: str = "data",
 ):
     """Exact sup(e) w.r.t. the FULL graph, computed under a working-set
     budget (triangle-credit variant of Algorithm 3 used by the top-down
@@ -459,13 +505,20 @@ def partitioned_support(
 
     The batched engine lists each NS(P)'s triangles through the compacted,
     skew-aware machinery and credits them in one vectorized scatter per
-    bucket; no peeling is involved, so the batch is built without incidence.
+    bucket; no peeling is involved, so the batch is built without incidence
+    and a ``mesh`` only records ``OocStats.devices`` for the caller
+    (top-down threads it here so one stats object describes both stages —
+    the credit scatters themselves are host-side and never span the mesh).
     """
-    part_fn = _resolve_partitioner(partitioner)
+    part_fn = _resolve_partitioner(partitioner, seed=partitioner_seed)
     edges = glib.canonical_edges(edges, n)
     m = len(edges)
     sup = np.zeros(m, dtype=np.int64)
     stats = OocStats()
+    if mesh is not None:
+        if engine == "perpart":
+            raise ValueError("mesh= requires the batched engine")
+        stats.devices = int(mesh.shape[mesh_axis])
     cur_budget = budget
 
     if engine == "perpart":

@@ -1,6 +1,6 @@
 """Distributed truss decomposition (shard_map over the production mesh).
 
-Three device-parallel pieces (DESIGN.md §2):
+Four device-parallel pieces (DESIGN.md §2, §10):
 
 1. ``distributed_local_truss`` — the LowerBounding stage (Algorithm 3) at pod
    scale: every device owns one (padded) neighborhood subgraph NS(P_i) and
@@ -22,11 +22,22 @@ Three device-parallel pieces (DESIGN.md §2):
    row-blocks rotate around the ring (``ppermute``) while each device
    accumulates A_i @ A into its block of (A @ A) ∘ A.  Sequential-neighbor
    traffic instead of all-to-all: the scan(N) discipline applied to ICI.
+
+4. ``peel_classes_batched_sharded`` / ``local_threshold_peel_sharded`` —
+   the pod-spanning form of the batched out-of-core engine (DESIGN.md §10):
+   one partition round's ``partition.PartBucket`` lanes are split over a
+   mesh axis (lanes are independent subproblems, so the per-lane peels need
+   no communication), and the per-k candidate peel of both drivers runs
+   with its triangle list sharded (pmin on the frontier prefix, psum on the
+   decrements — the discipline of piece 2 at a single threshold level).
+   ``peel.peel_classes_batched`` / ``peel.local_threshold_peel`` dispatch
+   here when a ``mesh=`` is supplied, keeping the drivers' double-buffered
+   non-blocking rounds intact across the mesh.
 """
 
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 from typing import List, Sequence
 
 import jax
@@ -34,7 +45,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core.partition import round_up_to_multiple
 from repro.core.peel import (N_STATS, _frontier_round,
+                             _peel_classes_vmapped_impl,
                              peel_classes_fixedcap)
 from repro.core.support import _pow2_ceil, triangle_incidence_np
 
@@ -161,6 +174,23 @@ def _peel_sharded_body(sup0, tris_loc, indptr_loc, tids_loc, alive0,
     return phi
 
 
+def _sharded_caps(m: int, indptr_s: np.ndarray, tids_s: np.ndarray,
+                  cap_f=None, cap_t=None) -> tuple[int, int]:
+    """Frontier capacities for a triangle-sharded peel: ``cap_t`` is clamped
+    to cover the largest per-shard incidence row (even when caller-provided),
+    so every shard fits at least one edge's row and the pmin-agreed prefix
+    is never empty — progress is guaranteed without an overflow/resume
+    path.  Shared by ``peel_classes_sharded`` and
+    ``local_threshold_peel_sharded``."""
+    max_row = int((indptr_s[:, 1:] - indptr_s[:, :-1]).max()) if m else 1
+    n_inc = tids_s.shape[1]
+    if cap_f is None:
+        cap_f = _pow2_ceil(min(max(m, 1), max(256, m // 16)))
+    if cap_t is None:
+        cap_t = _pow2_ceil(min(max(n_inc, 1), max(max_row, 512, n_inc // 16)))
+    return cap_f, max(cap_t, _pow2_ceil(max_row))
+
+
 def shard_incidence(tris: np.ndarray, m: int, n_shards: int):
     """Per-shard edge→triangle incidence over contiguous triangle shards.
 
@@ -195,13 +225,7 @@ def peel_classes_sharded(mesh, sup0, tris, alive0, axis: str = "data",
     m = int(sup0.shape[0])
     tris_np = np.asarray(tris)
     indptr_s, tids_s = shard_incidence(tris_np, m, n_shards)
-    max_row = int((indptr_s[:, 1:] - indptr_s[:, :-1]).max()) if m else 1
-    n_inc = tids_s.shape[1]
-    if cap_f is None:
-        cap_f = _pow2_ceil(min(max(m, 1), max(256, m // 16)))
-    if cap_t is None:
-        cap_t = _pow2_ceil(min(max(n_inc, 1), max(max_row, 512, n_inc // 16)))
-    cap_t = max(cap_t, _pow2_ceil(max_row))
+    cap_f, cap_t = _sharded_caps(m, indptr_s, tids_s, cap_f, cap_t)
     fn = _shard_map(
         partial(_peel_sharded_body, axis=axis, cap_f=cap_f, cap_t=cap_t),
         mesh,
@@ -266,3 +290,133 @@ def allgather_support_dense(mesh, A: jnp.ndarray, axis: str = "data"):
 
     fn = _shard_map(body, mesh, in_specs=P(axis, None), out_specs=P(axis, None))
     return fn(A)
+
+
+# ---------------------------------------------------------------------------
+# 4. Pod-spanning batched OOC rounds (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def pad_bucket_lanes(sup_b, tris_b, indptr_b, tids_b, alive_b, n_lanes: int):
+    """``pad_parts``-style padding of a bucket's lane dimension to
+    ``n_lanes``: appended lanes are dead (alive False, sup 0, every triangle
+    row on the per-lane drop slot cap_e, empty incidence), so they exit the
+    peel's while loop immediately and can never contribute support."""
+    B, cap_e = sup_b.shape
+    if n_lanes == B:
+        return sup_b, tris_b, indptr_b, tids_b, alive_b
+    pad = n_lanes - B
+    return (
+        np.concatenate([sup_b, np.zeros((pad, cap_e), np.int32)]),
+        np.concatenate(
+            [tris_b, np.full((pad,) + tris_b.shape[1:], cap_e, np.int32)]),
+        np.concatenate([indptr_b, np.zeros((pad, cap_e + 1), np.int32)]),
+        np.concatenate([tids_b, np.zeros((pad, tids_b.shape[1]), np.int32)]),
+        np.concatenate([alive_b, np.zeros((pad, cap_e), bool)]),
+    )
+
+
+@lru_cache(maxsize=None)
+def _batched_sharded_fn(mesh, axis: str, cap_f: int, cap_t: int):
+    """jit(shard_map(·)) of ``peel._peel_classes_vmapped_impl`` — each
+    device runs the SAME per-lane vmapped kernel as the single-device path
+    on its lane slice; cached per (mesh, caps) so the compile cache stays
+    keyed on the pow2/pow4 bucket-shape lattice."""
+    fn = _shard_map(
+        partial(_peel_classes_vmapped_impl, cap_f=cap_f, cap_t=cap_t),
+        mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis)),
+    )
+    # sup is donated exactly like the single-device path: rebuilt from
+    # scratch by the host every round, layout matching the phi output
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def peel_classes_batched_sharded(mesh, sup_b, tris_b, indptr_b, tids_b,
+                                 alive_b, *, cap_f: int, cap_t: int,
+                                 axis: str = "data"):
+    """One bucket's NS lanes peeled across the mesh (DESIGN.md §10).
+
+    The lane dimension of the (B, ...) ``partition.PartBucket`` stacks is
+    split over ``axis``; lanes are disjoint subproblems, so each device
+    peels its slice to its own fixed point with NO communication — the
+    pod-wide form of ``peel.peel_classes_batched``'s vmapped kernel.  The
+    lane count is first padded to a multiple of the axis size with dead
+    lanes (:func:`pad_bucket_lanes`); ``partition.build_partition_batch``'s
+    ``lane_multiple`` pre-pads batches so this is normally a no-op, with
+    the waste visible in ``OocStats.padding_waste``.
+
+    Returns DEVICE arrays ``(phi, stats)`` over the PADDED lane count —
+    still futures at return time, so the caller's host work overlaps the
+    pod-wide peel; slice back to the original B when materializing.
+    """
+    n_dev = int(mesh.shape[axis])
+    arrs = pad_bucket_lanes(
+        sup_b, tris_b, indptr_b, tids_b, alive_b,
+        round_up_to_multiple(sup_b.shape[0], n_dev))
+    fn = _batched_sharded_fn(mesh, axis, int(cap_f), int(cap_t))
+    return fn(*(jnp.asarray(a) for a in arrs))
+
+
+@lru_cache(maxsize=None)
+def _threshold_sharded_fn(mesh, axis: str, cap_f: int, cap_t: int):
+    """jit(shard_map) of the single-level peel: edge state replicated,
+    triangles + incidence sharded, pmin/psum per round (see
+    ``_peel_sharded_body`` for the multi-level analogue)."""
+
+    def local(sup0, tris_loc, indptr_loc, tids_loc, alive0, removable,
+              thresh):
+        indptr_loc = indptr_loc.reshape(-1)
+        tids_loc = tids_loc.reshape(-1)
+
+        def cond(state):
+            alive, sup = state
+            return jnp.any(alive & removable & (sup <= thresh))
+
+        def body(state):
+            alive, sup = state
+            rm = alive & removable & (sup <= thresh)
+            alive2, sup2, _, _, _, _, _ = _frontier_round(
+                alive, sup, rm, tris_loc, indptr_loc, tids_loc,
+                cap_f=cap_f, cap_t=cap_t, axis=axis)
+            return alive2, sup2
+
+        alive, _ = jax.lax.while_loop(cond, body, (alive0, sup0))
+        return alive
+
+    fn = _shard_map(
+        local, mesh,
+        in_specs=(P(), P(axis), P(axis), P(axis), P(), P(), P()),
+        out_specs=P(),
+    )
+    return jax.jit(fn)
+
+
+def local_threshold_peel_sharded(mesh, sup0, tris, alive0, removable, thresh,
+                                 *, axis: str = "data"):
+    """Single-level candidate peel with the triangle list sharded on ``axis``.
+
+    The mesh form of ``peel.local_threshold_peel``'s kernel (the per-k
+    candidate peel of BOTH out-of-core drivers): sup/alive/removable are
+    replicated, ``tris`` (T, 3; T a multiple of the axis size, padding rows
+    on the drop slot m) is sharded along with its per-shard incidence CSR.
+    Every round the devices agree on the removal prefix via ``pmin`` and
+    merge support decrements with one ``psum``, so replicated edge state
+    stays in lockstep.  ``cap_t`` covers the largest per-shard incidence
+    row, so each shard always fits at least one edge's row and the agreed
+    prefix is non-empty — no overflow/resume path.
+
+    Returns ``(alive_device_array, cap_f, cap_t)``; the caps feed the
+    caller's compile-shape cache key.
+    """
+    n_shards = int(mesh.shape[axis])
+    m = int(sup0.shape[0])
+    tris_np = np.asarray(tris)
+    indptr_s, tids_s = shard_incidence(tris_np, m, n_shards)
+    cap_f, cap_t = _sharded_caps(m, indptr_s, tids_s)
+    fn = _threshold_sharded_fn(mesh, axis, int(cap_f), int(cap_t))
+    alive = fn(jnp.asarray(sup0), jnp.asarray(tris_np),
+               jnp.asarray(indptr_s), jnp.asarray(tids_s),
+               jnp.asarray(alive0), jnp.asarray(removable),
+               jnp.int32(thresh))
+    return alive, cap_f, cap_t

@@ -102,6 +102,14 @@ def _pack_cost_bounded(vertices, cost: np.ndarray,
     return parts
 
 
+def round_up_to_multiple(count: int, multiple: int) -> int:
+    """Smallest positive count >= ``count`` divisible by ``multiple`` — the
+    lane/row padding rule shared by the device-count-aware lane packing
+    below and every sharded entry point (``distributed.pad_bucket_lanes``,
+    the candidate-peel triangle rows; DESIGN.md §10)."""
+    return max(1, -(-count // multiple)) * multiple
+
+
 def _first_fit_decreasing(sizes: Sequence[int],
                           capacity: int) -> List[List[int]]:
     """Pack item indices into bins of ``capacity``, first-fit-decreasing
@@ -397,6 +405,7 @@ def build_partition_batch(
     with_incidence: bool = True,
     pad_lanes_pow2: bool = True,
     lane_capacity: int | None = None,
+    lane_multiple: int = 1,
 ) -> PartitionBatch:
     """Extract, compact, pack and pad every NS(P) of one round.
 
@@ -415,6 +424,11 @@ def build_partition_batch(
     (parts larger than it still get a lane; used to pin shapes externally).
     ``with_incidence=False`` skips the per-lane incidence CSR and supports
     (the triangle-credit support counter only needs the triangle lists).
+    ``lane_multiple`` additionally rounds every bucket's lane count up to a
+    multiple (the mesh device count for the sharded dispatch, DESIGN.md
+    §10, so every shard receives the same number of lanes); the extra dead
+    lanes are counted in ``padded_slots`` and hence in
+    ``OocStats.padding_waste``.
     """
     from repro.core.support import (_pow2_ceil, _pow4_ceil, list_triangles,
                                     support_from_triangle_list,
@@ -478,6 +492,9 @@ def build_partition_batch(
         cap_t = _pow4_ceil(max(max(lane_T), 1))
         n_real_lanes = len(lanes)
         B = _pow2_ceil(n_real_lanes) if pad_lanes_pow2 else n_real_lanes
+        if lane_multiple > 1:
+            # equal lanes per shard when the bucket spans a mesh axis
+            B = round_up_to_multiple(B, lane_multiple)
         sup_b = np.zeros((B, cap_e), np.int32)
         tris_b = np.full((B, cap_t, 3), cap_e, np.int32)
         alive_b = np.zeros((B, cap_e), bool)

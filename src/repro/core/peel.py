@@ -427,23 +427,42 @@ class PendingPeel:
     the device peel — the consumer half of the drivers' double-buffered
     rounds.  ``result()`` blocks, converts to numpy, applies the host-side
     epilogue and caches the answer.  ``new_compile`` is known at dispatch
-    time (shape-cache lookup), so stats never wait on the device.
+    time (shape-cache lookup), so stats never wait on the device;
+    ``sharded`` records whether the dispatch spanned a mesh (DESIGN.md §10).
+
+    The finalize handle is consumed (cleared) BEFORE it runs: the dispatch
+    donated its support buffers, so a failed finalize must never be
+    re-invoked — the kernel would read donated (dead) memory.  A failing
+    :meth:`result` raises the original error once and poisons the handle;
+    later calls raise a ``RuntimeError`` chained to that error.
     """
 
-    def __init__(self, finalize, new_compile: bool):
+    def __init__(self, finalize, new_compile: bool, sharded: bool = False):
         self._finalize = finalize
         self.new_compile = bool(new_compile)
+        self.sharded = bool(sharded)
         self._out = None
+        self._error = None
 
     def result(self):
+        if self._error is not None:
+            raise RuntimeError(
+                "PendingPeel finalize failed previously; the dispatch's "
+                "donated buffers are gone, so it cannot be retried"
+            ) from self._error
         if self._finalize is not None:
-            self._out = self._finalize()
-            self._finalize = None
+            finalize, self._finalize = self._finalize, None
+            try:
+                self._out = finalize()
+            except BaseException as e:
+                self._error = e
+                raise
         return self._out
 
 
 def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
-                         *, shape_cache=None, blocking=True):
+                         *, shape_cache=None, blocking=True,
+                         mesh=None, mesh_axis: str = "data"):
     """Local trussness of every NS lane of one bucket in ONE device call.
 
     Arrays are the (B, cap_e)-padded stacks a ``partition.PartBucket``
@@ -465,6 +484,13 @@ def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
     immediately after (asynchronous) dispatch; ``handle.result()`` yields
     ``(phi, stats)`` and ``handle.new_compile`` is available at once — the
     producer half of the double-buffered rounds (DESIGN.md §9).
+
+    With a ``mesh``, the bucket's lane dimension is split over ``mesh_axis``
+    and the peel spans the pod (``distributed.peel_classes_batched_sharded``,
+    DESIGN.md §10): the lane count is padded to a multiple of the axis size
+    with dead lanes, the dispatch stays asynchronous, and the handle's
+    ``sharded`` flag records the routing.  Triangle-free buckets still
+    short-circuit on host (nothing to shard).
 
     Returns (phi (B, cap_e) int32 ndarray, stats (B, N_STATS) ndarray,
     newly_compiled bool) when blocking.
@@ -490,6 +516,34 @@ def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
     cap_f = _pow2_ceil(min(cap_e, max(512, cap_e // 8)))
     cap_t = max(_pow2_ceil(min(max(n_inc, 1), max(2048, n_inc // 16))),
                 _pow2_ceil(max(max_row, 1)))
+    if mesh is not None:
+        from repro.core.distributed import peel_classes_batched_sharded
+        from repro.core.partition import round_up_to_multiple
+
+        n_dev = int(mesh.shape[mesh_axis])
+        B = int(sup_b.shape[0])
+        # key on the PADDED lane count — that is the shape jit compiles
+        # (the counter must stay <= the true number of XLA compiles)
+        B_pad = round_up_to_multiple(B, n_dev)
+        key = ((B_pad,) + tuple(sup_b.shape[1:]),
+               (B_pad,) + tuple(tris_b.shape[1:]),
+               cap_f, cap_t, ("mesh", n_dev))
+        new = shape_cache is not None and key not in shape_cache
+        if shape_cache is not None:
+            shape_cache.add(key)
+        phi_d, st_d = peel_classes_batched_sharded(
+            mesh, np.asarray(sup_b), tris_np, np.asarray(indptr_b),
+            np.asarray(tids_b), np.asarray(alive_b),
+            cap_f=cap_f, cap_t=cap_t, axis=mesh_axis)
+
+        def _finish():
+            # drop the lanes pad_bucket_lanes appended for the mesh split
+            return np.asarray(phi_d)[:B], np.asarray(st_d)[:B]
+
+        if not blocking:
+            return PendingPeel(_finish, new, sharded=True)
+        phi, st = _finish()
+        return phi, st, new
     key = (sup_b.shape, tris_b.shape, cap_f, cap_t)
     new = shape_cache is not None and key not in shape_cache
     if shape_cache is not None:
@@ -504,7 +558,7 @@ def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
 
 
 def local_threshold_peel(sup0, tris, removable, thresh, *, shape_cache=None,
-                         blocking=True):
+                         blocking=True, mesh=None, mesh_axis: str = "data"):
     """Single-level peel of a COMPACTED candidate subgraph on padded shapes.
 
     The out-of-core k-class extraction (bottom-up Procedure 5, top-down
@@ -518,6 +572,12 @@ def local_threshold_peel(sup0, tris, removable, thresh, *, shape_cache=None,
     With ``blocking=False`` returns a :class:`PendingPeel` right after
     dispatch (``handle.result()`` -> (alive_mask, removed_mask)), so the
     caller's host work overlaps the device peel (DESIGN.md §9).
+
+    With a ``mesh``, the padded triangle list (rows rounded up to a multiple
+    of the axis size) and its per-shard incidence are sharded over
+    ``mesh_axis`` and the peel runs pod-wide with replicated edge state
+    (``distributed.local_threshold_peel_sharded``, DESIGN.md §10); the
+    handle's ``sharded`` flag records the routing.
 
     Returns (alive_mask (m,), removed_mask (m,), newly_compiled bool)
     when blocking.
@@ -534,18 +594,41 @@ def local_threshold_peel(sup0, tris, removable, thresh, *, shape_cache=None,
     # the coarser grid makes most of a run's peels share one compiled shape
     cap_e = _pow4_ceil(max(m, 1))
     cap_tri = _pow4_ceil(max(T, 1))
+    if mesh is not None:
+        from repro.core.distributed import local_threshold_peel_sharded
+        from repro.core.partition import round_up_to_multiple
+
+        n_dev = int(mesh.shape[mesh_axis])
+        # contiguous triangle shards need equal row counts per device
+        cap_tri = round_up_to_multiple(cap_tri, n_dev)
     tris_p = np.full((cap_tri, 3), cap_e, np.int32)
     if T:
         tris_p[:T] = tris
-    indptr, tids = triangle_incidence_np(tris_p, cap_e)
-    tids_p = np.zeros(3 * cap_tri, np.int32)
-    tids_p[: len(tids)] = tids
     sup_p = np.zeros(cap_e, np.int32)
     sup_p[:m] = sup0
     alive_p = np.zeros(cap_e, bool)
     alive_p[:m] = True
     rem_p = np.zeros(cap_e, bool)
     rem_p[:m] = removable
+    if mesh is not None:
+        alive_dev, cap_f, cap_t = local_threshold_peel_sharded(
+            mesh, sup_p, tris_p, alive_p, rem_p, thresh, axis=mesh_axis)
+        key = (cap_e, cap_tri, cap_f, cap_t, ("mesh", n_dev))
+        new = shape_cache is not None and key not in shape_cache
+        if shape_cache is not None:
+            shape_cache.add(key)
+
+        def _finish_sharded():
+            alive = np.asarray(alive_dev)[:m]
+            return alive, ~alive
+
+        if not blocking:
+            return PendingPeel(_finish_sharded, new, sharded=True)
+        alive, removed = _finish_sharded()
+        return alive, removed, new
+    indptr, tids = triangle_incidence_np(tris_p, cap_e)
+    tids_p = np.zeros(3 * cap_tri, np.int32)
+    tids_p[: len(tids)] = tids
     cap_f, cap_t = _default_caps(cap_e, (indptr, tids_p), None, None)
     key = (cap_e, cap_tri, cap_f, cap_t)
     new = shape_cache is not None and key not in shape_cache
@@ -699,7 +782,8 @@ def estimate_working_set(g) -> int:
 
 def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
                     memory_budget=None, partitioner: str = "sequential",
-                    with_stats: bool = False):
+                    partitioner_seed: int = 0, mesh=None,
+                    mesh_axis: str = "data", with_stats: bool = False):
     """End-to-end decomposition — the unified host entry point.
 
     ``engine``:
@@ -711,7 +795,14 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
         (DESIGN.md §8); the per-part NS budget is ``memory_budget`` edge
         entries (default m // 8).  ``partitioner`` picks the round splitter
         ("sequential", "random", or the locality-aware "locality" —
-        DESIGN.md §9).  A non-positive ``memory_budget`` raises.
+        DESIGN.md §9) and ``partitioner_seed`` offsets the randomized
+        partitioner's per-round reseed.  A non-positive ``memory_budget``
+        raises.
+
+    ``mesh``: span each out-of-core partition round across the mesh
+    (DESIGN.md §10) — bucket lanes split over ``mesh_axis``, per-k candidate
+    peels triangle-sharded.  The in-memory engines are single-program and
+    ignore it (``distributed.peel_classes_sharded`` is their mesh form).
 
     With ``with_stats`` the second return value is a :class:`PeelStats`
     (in-memory frontier), ``None`` (dense), or an ``OocStats`` (out-of-core).
@@ -745,12 +836,16 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
             from repro.core.bottom_up import bottom_up_decompose
 
             res = bottom_up_decompose(n, edges, part_budget,
-                                      partitioner=partitioner)
+                                      partitioner=partitioner,
+                                      partitioner_seed=partitioner_seed,
+                                      mesh=mesh, mesh_axis=mesh_axis)
         else:
             from repro.core.top_down import top_down_decompose
 
             res = top_down_decompose(n, edges, budget=part_budget,
-                                     partitioner=partitioner)
+                                     partitioner=partitioner,
+                                     partitioner_seed=partitioner_seed,
+                                     mesh=mesh, mesh_axis=mesh_axis)
         phi = np.asarray(res.phi).astype(np.int64)
         return (phi, res.stats) if with_stats else phi
     tris = list_triangles_np(g)

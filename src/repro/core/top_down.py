@@ -110,12 +110,24 @@ def top_down_decompose(
     budget: Optional[int] = None,
     partitioner: str = "sequential",
     faithful_proc8: bool = False,
+    *,
+    partitioner_seed: int = 0,
+    mesh=None,
+    mesh_axis: str = "data",
 ) -> TopDownResult:
-    """Algorithm 7: top-t k-classes (all classes if t is None)."""
+    """Algorithm 7: top-t k-classes (all classes if t is None).
+
+    With a ``mesh``, every per-k candidate peel runs with its triangle
+    list sharded over ``mesh_axis`` (DESIGN.md §10); ``OocStats.devices``
+    / ``sharded_rounds`` record the routing.  ``partitioner_seed`` offsets
+    the randomized partitioner's per-round reseed in stage 1.
+    """
     edges = glib.canonical_edges(edges, n)
     m = len(edges)
     phi = np.zeros(m, dtype=np.int64)
     stats = OocStats()
+    if mesh is not None:
+        stats.devices = int(mesh.shape[mesh_axis])
     if m == 0:
         return TopDownResult(edges, phi, [], 2, [], 0, stats)
 
@@ -129,6 +141,8 @@ def top_down_decompose(
     else:
         sup, stats = partitioned_support(n, edges, budget,
                                          partitioner=partitioner,
+                                         partitioner_seed=partitioner_seed,
+                                         mesh=mesh, mesh_axis=mesh_axis,
                                          with_stats=True)
     phi[sup == 0] = 2
     alive = sup > 0                      # G_new
@@ -188,9 +202,10 @@ def top_down_decompose(
         # the peel result cannot change before pruning.
         handle = local_threshold_peel(
             sup0, tris_loc, tentative[h_l], k - 3, shape_cache=shape_cache,
-            blocking=False)
+            blocking=False, mesh=mesh, mesh_axis=mesh_axis)
         stats.compiles += int(handle.new_compile)
         stats.batches += 1
+        stats.sharded_rounds += int(handle.sharded)
         ta = (alive_l[tris_l[:, 0]] & alive_l[tris_l[:, 1]]
               & alive_l[tris_l[:, 2]])
         surv_l, _ = handle.result()

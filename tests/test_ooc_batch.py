@@ -11,8 +11,9 @@ from repro.core.bottom_up import (OocStats, _local_truss,
                                   partitioned_support)
 from repro.core.partition import (build_partition_batch, ns_edge_lists,
                                   sequential_partition)
-from repro.core.peel import (estimate_working_set, local_threshold_peel,
-                             peel_classes_batched, truss_decompose)
+from repro.core.peel import (PendingPeel, estimate_working_set,
+                             local_threshold_peel, peel_classes_batched,
+                             truss_decompose)
 from repro.core.serial import alg2_truss
 from repro.core.support import edge_support_np, list_triangles, list_triangles_np
 from tests.conftest import random_graph
@@ -228,6 +229,40 @@ def test_truss_decompose_ooc_dispatch(rng):
     for eng in ("bottom-up", "top-down"):
         phi3 = truss_decompose(n, ce, engine=eng, memory_budget=48)
         assert (phi3 == oracle).all(), eng
+
+
+def test_pending_peel_result_not_retried_after_error():
+    """Regression (ISSUE 4): if finalize raises, the handle must be
+    cleared/poisoned — a retry must NOT re-invoke the kernel, whose support
+    buffers were donated at dispatch and no longer exist."""
+    calls = []
+
+    def finalize():
+        calls.append(1)
+        raise ValueError("boom")
+
+    handle = PendingPeel(finalize, new_compile=False)
+    with pytest.raises(ValueError, match="boom"):
+        handle.result()
+    # the poisoned handle re-raises WITHOUT running finalize again
+    with pytest.raises(RuntimeError, match="cannot be retried") as exc:
+        handle.result()
+    assert len(calls) == 1
+    assert isinstance(exc.value.__cause__, ValueError)
+
+
+def test_pending_peel_result_cached_on_success():
+    calls = []
+
+    def finalize():
+        calls.append(1)
+        return ("phi", "st")
+
+    handle = PendingPeel(finalize, new_compile=True)
+    assert handle.result() == ("phi", "st")
+    assert handle.result() is handle.result()
+    assert calls == [1]
+    assert handle.new_compile and not handle.sharded
 
 
 def test_batched_equals_perpart_engine(rng):

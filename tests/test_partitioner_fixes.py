@@ -194,3 +194,96 @@ def test_resolve_partitioner_varargs_and_builtin():
     p1 = fn_r(g, 100, 1)
     p2 = fn_r(g, 100, 1)
     assert all((a == b).all() for a, b in zip(p1, p2))
+
+
+# ---------------------------------------------------------------------------
+# partitioner_seed plumbing (ISSUE 4): random_partition's seed= was
+# unreachable through the drivers
+# ---------------------------------------------------------------------------
+
+def test_resolve_partitioner_seed_reaches_random_partition():
+    """_resolve_partitioner("random", seed=s) must call
+    random_partition(g, b, seed=s + round); the default 0 preserves the
+    historical seed=round schedule."""
+    ce = _skewed_graph()
+    g = glib.build_graph(64, ce)
+    fn = _resolve_partitioner("random", seed=5)
+    got = fn(g, 30, 2)
+    ref = random_partition(g, 30, seed=7)
+    assert len(got) == len(ref)
+    assert all((a == b).all() for a, b in zip(got, ref))
+    fn0 = _resolve_partitioner("random")
+    legacy = random_partition(g, 30, seed=2)
+    got0 = fn0(g, 30, 2)
+    assert all((a == b).all() for a, b in zip(got0, legacy))
+
+
+def test_partitioner_seed_threaded_through_drivers(rng, monkeypatch):
+    """Both drivers and the unified dispatch must hand partitioner_seed=
+    down to random_partition (pre-fix the kwarg did not exist and a caller
+    could never steer the reseed)."""
+    from repro.core import partition as plib
+    from repro.core.bottom_up import partitioned_support
+    from repro.core.top_down import top_down_decompose
+
+    ce, n = _small(rng, n=28)
+    seen: list = []
+
+    def recording(g, budget, seed=0):
+        seen.append(seed)
+        return random_partition(g, budget, seed=seed)
+
+    monkeypatch.setitem(plib.PARTITIONERS, "random", recording)
+    oracle = alg2_truss(n, ce)
+    budget = max(8, len(ce) // 4)
+
+    seen.clear()
+    res = bottom_up_decompose(n, ce, budget, partitioner="random",
+                              partitioner_seed=100)
+    assert (res.phi == oracle).all()
+    assert seen and all(s > 100 for s in seen)     # seed + round, round >= 1
+
+    seen.clear()
+    td = top_down_decompose(n, ce, budget=budget, partitioner="random",
+                            partitioner_seed=200)
+    assert (td.phi == oracle).all()
+    assert seen and all(s > 200 for s in seen)
+
+    seen.clear()
+    partitioned_support(n, ce, budget, partitioner="random",
+                        partitioner_seed=300)
+    assert seen and all(s > 300 for s in seen)
+
+    seen.clear()
+    phi = truss_decompose(n, ce, engine="bottom-up", memory_budget=64,
+                          partitioner="random", partitioner_seed=400)
+    assert (phi == oracle).all()
+    assert seen and all(s > 400 for s in seen)
+
+
+def test_partitioner_seed_changes_partition_identical_phi(rng, monkeypatch):
+    """Different seeds must actually change the randomized partition (the
+    kwarg is live, not silently ignored), while Lemma 1 keeps phi
+    identical."""
+    from repro.core import partition as plib
+
+    ce, n = _small(rng, n=32, p=0.3)
+    oracle = alg2_truss(n, ce)
+    budget = max(8, len(ce) // 4)
+    captured: list = []
+
+    def recording(g, b, seed=0):
+        parts = random_partition(g, b, seed=seed)
+        captured.append([p.tolist() for p in parts])
+        return parts
+
+    monkeypatch.setitem(plib.PARTITIONERS, "random", recording)
+    r_a = bottom_up_decompose(n, ce, budget, partitioner="random",
+                              partitioner_seed=0)
+    parts_a = list(captured)
+    captured.clear()
+    r_b = bottom_up_decompose(n, ce, budget, partitioner="random",
+                              partitioner_seed=12345)
+    assert captured != parts_a         # the seed steered the partitions
+    assert (r_a.phi == oracle).all()
+    assert (r_b.phi == oracle).all()
