@@ -91,13 +91,17 @@ def table4_bottom_up(smoke: bool = False):
     targets: the seed path pays one host subgraph build + one freshly
     shaped compile per part, the batched engine a handful of pow2 shapes
     per run.  ``--json BENCH_ooc.json`` captures the OocStats counters
-    (rounds, scans, batches, compiles, padding waste).
+    (rounds, scans, batches, compiles, padding waste, triangle locality,
+    stage-2 pipeline depth).  A ``TDtopdown_batched`` row runs the second
+    driver at the same budget — both drivers' rows record
+    ``stage2_overlapped`` (DESIGN.md §11).
     """
     from benchmarks.datasets import load
     from repro.core.bottom_up import bottom_up_decompose
     from repro.core.graph import build_graph
     from repro.core.peel import peel_recompute
     from repro.core.support import list_triangles_np
+    from repro.core.top_down import top_down_decompose
 
     names = ["hep-like"] if smoke else ["hep-like", "amazon-like", "wiki-like"]
     for name in names:
@@ -123,11 +127,16 @@ def table4_bottom_up(smoke: bool = False):
         emit(f"table4_{name}_TDbottomup_batched", usb,
              f"m={len(edges)};rounds={res.rounds};parts={st.parts};"
              f"batches={st.batches};compiles={st.compiles};"
+             f"tri_locality={st.tri_locality:.3f};"
+             f"stage2_overlapped={st.stage2_overlapped};"
              f"speedup_vs_perpart={usp/usb:.2f};budget={budget}",
              m=len(edges), budget=budget, rounds=res.rounds,
              scans=res.scans, parts=st.parts, batches=st.batches,
              compiles=st.compiles, max_part_edges=st.max_part_edges,
              padding_waste=st.padding_waste,
+             tri_locality=st.tri_locality,
+             stage2_overlapped=st.stage2_overlapped,
+             tri_est_error=st.tri_est_error,
              speedup_vs_perpart=usp / usb)
         emit(f"table4_{name}_TDbottomup_perpart_seed", usp,
              f"rounds={res_p.rounds};scans={res_p.scans};"
@@ -137,6 +146,21 @@ def table4_bottom_up(smoke: bool = False):
         emit(f"table4_{name}_globaliter_MRstandin", usm,
              f"slowdown_vs_batched={usm/usb:.2f}",
              slowdown_vs_batched=usm / usb)
+        # the second driver at the same deep budget: its per-k candidate
+        # peels ride the same stage-2 pipeline (DESIGN.md §11)
+        ust, res_t = _time(lambda: top_down_decompose(n, edges,
+                                                      budget=budget))
+        assert (res_t.phi == res.phi).all()
+        st_t = res_t.stats
+        emit(f"table4_{name}_TDtopdown_batched", ust,
+             f"rounds={st_t.rounds};scans={st_t.scans};"
+             f"tri_locality={st_t.tri_locality:.3f};"
+             f"stage2_overlapped={st_t.stage2_overlapped};budget={budget}",
+             m=len(edges), budget=budget, rounds=st_t.rounds,
+             scans=st_t.scans, parts=st_t.parts, batches=st_t.batches,
+             compiles=st_t.compiles, tri_locality=st_t.tri_locality,
+             stage2_overlapped=st_t.stage2_overlapped,
+             tri_est_error=st_t.tri_est_error)
 
 
 def table4_partitioners(smoke: bool = False):
@@ -170,13 +194,18 @@ def table4_partitioners(smoke: bool = False):
                  f"tri_routes={st.tri_routes};scans={res.scans};"
                  f"batches={st.batches};compiles={st.compiles};"
                  f"tri_locality={st.tri_locality:.3f};"
+                 f"tri_est_error={st.tri_est_error:.2f};"
+                 f"stage2_overlapped={st.stage2_overlapped};"
                  f"overlapped={st.overlapped};budget={budget}",
                  m=len(edges), budget=budget, rounds=res.rounds,
                  ns_sweeps=st.ns_sweeps, tri_routes=st.tri_routes,
                  scans=res.scans, parts=st.parts, batches=st.batches,
                  compiles=st.compiles, tri_total=st.tri_total,
                  tri_assigned=st.tri_assigned,
-                 tri_locality=st.tri_locality, overlapped=st.overlapped,
+                 tri_locality=st.tri_locality,
+                 tri_est_error=st.tri_est_error,
+                 stage2_overlapped=st.stage2_overlapped,
+                 overlapped=st.overlapped,
                  max_part_edges=st.max_part_edges,
                  padding_waste=st.padding_waste)
 

@@ -30,7 +30,11 @@ Engines (DESIGN.md §8):
   (non-blocking dispatch, results consumed one round late).  Stage-2
   candidates are compacted and peeled on pow4-padded shapes
   (``peel.local_threshold_peel``), so consecutive k values share one
-  compiled kernel.
+  compiled kernel — and are **pipelined** the same way the stage-1 rounds
+  are (DESIGN.md §11): level k+1's candidate is pre-built on the host from
+  the pre-result masks (a superset U′ ⊇ U_{k+1}, provably sound) while the
+  device peels level k; the edges level k removes are killed at use time
+  via the peel's ``alive0`` mask (``OocStats.stage2_overlapped``).
 * ``engine="perpart"`` — the seed path (full ``build_graph`` per round, one
   host triangle enumeration and one freshly-shaped device peel per part);
   kept as the before/after benchmark baseline (BENCH_ooc.json).
@@ -130,6 +134,13 @@ class OocStats:
     ns_sweeps: int = 0        # whole-graph NS edge-list sweeps (1 per batch)
     overlapped: int = 0       # rounds whose device peel overlapped the
     #                           host build of the NEXT round (pipeline depth)
+    stage2_overlapped: int = 0  # stage-2 levels whose candidate extraction
+    #                           + compaction was pre-built on the host while
+    #                           the previous level's peel still ran on the
+    #                           device (DESIGN.md §11)
+    tri_est: int = 0          # wedge-based triangle estimates summed over
+    #                           partition rounds (the cost model's
+    #                           prediction; compare tri_total)
     devices: int = 1          # mesh devices the sharded dispatch spans
     sharded_rounds: int = 0   # device dispatches (stage-1 partition rounds
     #                           + per-k candidate peels) routed through
@@ -154,6 +165,17 @@ class OocStats:
         objective the locality-aware partitioner maximizes (DESIGN.md §9)."""
         return self.tri_assigned / self.tri_total if self.tri_total else 1.0
 
+    @property
+    def tri_est_error(self) -> float:
+        """Relative error of the partitioner's wedge-based triangle-volume
+        estimate vs the actual per-round enumerations (DESIGN.md §11).
+        The cost model only steers locality — a wildly wrong estimate can
+        cost rounds, never correctness — but the error is surfaced so the
+        estimator's drift on new graph shapes is visible in benchmarks.
+        The denominator floors at 1 so triangle-free runs still expose an
+        over-predicting estimator instead of reporting it as exact."""
+        return abs(self.tri_est - self.tri_total) / max(self.tri_total, 1)
+
     def absorb_batch(self, batch: "plib.PartitionBatch") -> None:
         self.parts += batch.n_parts
         self.scans += batch.n_parts
@@ -163,6 +185,7 @@ class OocStats:
         self.max_part_edges = max(self.max_part_edges, batch.max_part_edges)
         self.tri_total += batch.tri_total
         self.tri_assigned += batch.tri_assigned
+        self.tri_est += batch.tri_est
         self.ns_sweeps += 1        # build_partition_batch does exactly one
         #                            whole-graph NS sweep + triangle routing
 
@@ -424,27 +447,64 @@ def bottom_up_decompose(
     stats = lbres.stats
     shape_cache: set = set()
 
+    def candidate_masks(k_b: int):
+        """U_k and NS(U_k) from the CURRENT ``remaining`` mask — the one
+        extraction both engines share.  Returns ``(h_ids, internal)`` or
+        None when no remaining edge admits class k_b."""
+        elig = remaining & (lb <= k_b)
+        if not elig.any():
+            return None
+        u_k = np.zeros(n, dtype=bool)
+        eg = edges[elig]
+        u_k[eg[:, 0]] = True
+        u_k[eg[:, 1]] = True
+        # H = NS(U_k) within G_new: every remaining edge with >=1 endpoint
+        # in U_k.
+        u_in = u_k[edges[:, 0]]
+        v_in = u_k[edges[:, 1]]
+        in_h = remaining & (u_in | v_in)
+        internal = remaining & u_in & v_in
+        return np.nonzero(in_h)[0], internal
+
+    def build_candidate(k_b: int):
+        """Host half of one batched stage-2 level: NS(U_k) extracted,
+        compacted and triangle-enumerated.
+
+        Called one level ahead while the device still peels level k
+        (DESIGN.md §11): the ``remaining`` it reads then still contains the
+        edges level k is about to remove, so its U is a *superset* of the
+        true U_{k+1} — which is sound: every Φ_{k+1} edge has both endpoints
+        in U_{k+1} ⊆ U', so it stays removable, and a removable edge's
+        triangles all lie inside NS(U') (its endpoints are in U'), so its
+        support never under-counts; over-included removable edges with
+        trussness > k+1 keep support >= k through their own T_{k+2}
+        triangles, whose partner edges are again inside NS(U').  The edges
+        the pending peel then removes are killed at use time via the
+        ``alive0`` mask of ``local_threshold_peel``.  Returns None when no
+        remaining edge admits class k_b (the consumer re-checks after the
+        pending removal lands and jumps k past empty classes).
+        """
+        masks = candidate_masks(k_b)
+        if masks is None:
+            return None
+        h_ids, internal = masks
+        local_edges, verts = glib.compact_edge_list(edges[h_ids])
+        sub = glib.build_graph(len(verts), local_edges)
+        tris = np.asarray(list_triangles(sub), np.int32).reshape(-1, 3)
+        return k_b, h_ids, tris, internal
+
     k = 2
+    pre = None          # candidate pre-built while the previous level peeled
     while remaining.any():
         # Skip empty classes: no remaining edge admits class < min lb, so
         # jump k straight there instead of probing one k at a time.
         k = max(k, int(lb[remaining].min()))
         stats.scans += 1
-        # U_k: endpoints of remaining edges whose lower bound admits class k
-        # (non-empty by the jump above).
-        elig = remaining & (lb <= k)
-        u_k = np.zeros(n, dtype=bool)
-        eg = edges[elig]
-        u_k[eg[:, 0]] = True
-        u_k[eg[:, 1]] = True
-        # H = NS(U_k) within G_new: every remaining edge with >=1 endpoint in U_k.
-        u_in = u_k[edges[:, 0]]
-        v_in = u_k[edges[:, 1]]
-        in_h = remaining & (u_in | v_in)
-        internal = remaining & u_in & v_in
-        h_ids = np.nonzero(in_h)[0]
-        cand_sizes.append(len(h_ids))
         if engine == "perpart":
+            # seed path: blocking per-level extraction + full-shape peel
+            # (non-empty by the k-jump above)
+            h_ids, internal = candidate_masks(k)
+            cand_sizes.append(len(h_ids))
             sub = glib.build_graph(n, edges[h_ids])
             tris = list_triangles_np(sub)
             sup = support_from_triangle_list(tris, sub.m).astype(np.int32)
@@ -458,16 +518,34 @@ def bottom_up_decompose(
             )
             removed = np.asarray(removed)
         else:
-            local_edges, verts = glib.compact_edge_list(edges[h_ids])
-            sub = glib.build_graph(len(verts), local_edges)
-            tris = list_triangles(sub)
-            sup = support_from_triangle_list(tris, sub.m).astype(np.int32)
+            if pre is not None and pre[0] == k:
+                cand = pre           # built while level k-1 was peeling
+                stats.stage2_overlapped += 1
+            else:
+                cand = build_candidate(k)
+            pre = None
+            _, h_ids, tris, internal = cand
+            cand_sizes.append(len(h_ids))
+            # kill the edges the previous level removed after this
+            # candidate was built; supports count fully-alive triangles
+            alive_h = remaining[h_ids]
+            if len(tris):
+                t_alive = (alive_h[tris[:, 0]] & alive_h[tris[:, 1]]
+                           & alive_h[tris[:, 2]])
+                sup = support_from_triangle_list(
+                    tris[t_alive], len(h_ids)).astype(np.int32)
+            else:
+                sup = np.zeros(len(h_ids), np.int32)
             handle = local_threshold_peel(
-                sup, tris, internal[h_ids], k - 2, shape_cache=shape_cache,
-                blocking=False, mesh=mesh, mesh_axis=mesh_axis)
+                sup, tris, internal[h_ids], k - 2, alive0=alive_h,
+                shape_cache=shape_cache, blocking=False, mesh=mesh,
+                mesh_axis=mesh_axis)
             stats.compiles += int(handle.new_compile)
             stats.batches += 1
             stats.sharded_rounds += int(handle.sharded)
+            # pipeline: extract + compact level k+1's candidate on the host
+            # while the device peels level k (DESIGN.md §11)
+            pre = build_candidate(k + 1)
             _, removed = handle.result()
         rm_glob = h_ids[removed]
         phi[rm_glob] = k

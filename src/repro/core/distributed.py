@@ -32,7 +32,10 @@ Four device-parallel pieces (DESIGN.md §2, §10):
    decrements — the discipline of piece 2 at a single threshold level).
    ``peel.peel_classes_batched`` / ``peel.local_threshold_peel`` dispatch
    here when a ``mesh=`` is supplied, keeping the drivers' double-buffered
-   non-blocking rounds intact across the mesh.
+   non-blocking rounds — and the stage-2 candidate pipeline's pre-built
+   supersets with their ``alive0`` dead-edge masks (DESIGN.md §11) —
+   intact across the mesh: the replicated edge state simply starts with
+   the masked edges dead, so they never enter any shard's frontier.
 """
 
 from __future__ import annotations

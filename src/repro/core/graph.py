@@ -224,6 +224,43 @@ def undirected_csr(graph: Graph) -> tuple[np.ndarray, np.ndarray]:
     return indptr, cols.astype(Int)
 
 
+def wedge_weight(deg_a: np.ndarray, deg_b: np.ndarray) -> np.ndarray:
+    """Per-pair closed-wedge weight ``max(min(deg_a, deg_b) - 1, 0)`` —
+    the wedges through an (a, b) edge that could close into a triangle.
+    The single formula behind the DESIGN.md §11 cost model: shared by
+    :func:`closed_wedge_estimate` and the locality partitioner's
+    admission gain so the accuracy counter (``OocStats.tri_est_error``)
+    always validates the formula that actually steers part growth."""
+    return np.maximum(np.minimum(deg_a, deg_b) - 1, 0)
+
+
+def closed_wedge_estimate(graph: Graph) -> np.ndarray:
+    """Per-vertex triangle-volume estimate from wedge counts, O(m).
+
+    ``t(v) = (1/2) * Σ_{u ∈ N(v)} max(min(deg(u), deg(v)) - 1, 0)`` — each
+    neighbor u contributes the wedges (v, u, ·) that *could* close into a
+    triangle, capped by v's own degree (a triangle at v needs its third
+    vertex adjacent to v too).  Exact on cliques (``t(v) = C(deg(v), 2)``,
+    the incident triangle count) and an upper-bound-flavored estimate on
+    sparse graphs; ``Σ_v t(v) / 3`` estimates the graph's triangle count.
+
+    This is the cost model of the triangle-aware locality partitioner
+    (DESIGN.md §11): the per-edge weight depends only on endpoint degrees,
+    so two scatters over the edge list suffice — no CSR, no sort — which
+    is what lets every partition round afford it.  Additive over vertex
+    sets, so per-part triangle budgets compose; its per-run accuracy is
+    measured against the actual enumeration (``OocStats.tri_est_error``).
+    """
+    if graph.m == 0:
+        return np.zeros(graph.n, np.int64)
+    deg = graph.deg.astype(np.int64)
+    e = graph.edges.astype(np.int64)
+    w = wedge_weight(deg[e[:, 0]], deg[e[:, 1]]).astype(np.float64)
+    est = np.bincount(e[:, 0], weights=w, minlength=graph.n) \
+        + np.bincount(e[:, 1], weights=w, minlength=graph.n)
+    return est.astype(np.int64) // 2
+
+
 def compact_index(sorted_ids: np.ndarray, values: np.ndarray) -> np.ndarray:
     """Map global ids to part-local slots: position of ``values`` in the
     ascending ``sorted_ids``.

@@ -11,12 +11,14 @@ variants:
 * ``random_partition`` — hash vertices into p parts (Chu–Cheng's randomized
   partitioner: O(m/M) iterations w.h.p., no seed-set memory), then spill the
   overflow of cost-heavy bins so every bin respects the budget.
-* ``locality_partition`` — greedy cost-bounded BFS growth over the full
-  adjacency (LDG-style scoring), so each part captures its own triangles
-  instead of spraying them across parts.  In the spirit of PKT's observation
-  (Kabir & Madduri) that most triangle work concentrates in a small cohesive
-  region, parts are grown around the densest unassigned vertices first; more
-  internal edges per round means fewer O(|E|/M) partition rounds.
+* ``locality_partition`` — triangle-aware greedy cost-bounded growth over
+  the full adjacency: parts grow around the highest estimated-triangle-
+  volume vertices (``graph.closed_wedge_estimate``) and admit candidates by
+  closed-wedge gain, so each part captures its own triangles instead of
+  spraying them across parts.  In the spirit of PKT's observation (Kabir &
+  Madduri) that most triangle work concentrates in a small cohesive region;
+  more internal triangles per round means fewer O(|E|/M) partition rounds
+  (DESIGN.md §9, §11).
 
 ``budget`` is expressed in *edge entries* (the 2012 paper's M measured in
 bytes; on TPU the analogue is per-device working-set entries).
@@ -44,7 +46,8 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.graph import Graph, compact_index, undirected_csr
+from repro.core.graph import (Graph, closed_wedge_estimate, compact_index,
+                              undirected_csr, wedge_weight)
 
 
 class PartitionBudgetWarning(UserWarning):
@@ -113,8 +116,9 @@ def round_up_to_multiple(count: int, multiple: int) -> int:
 def _first_fit_decreasing(sizes: Sequence[int],
                           capacity: int) -> List[List[int]]:
     """Pack item indices into bins of ``capacity``, first-fit-decreasing
-    (an item above the capacity still gets its own bin).  Shared by the
-    lane packer and the locality partitioner's region merge."""
+    (an item above the capacity still gets its own bin).  Used by the lane
+    packer; the locality partitioner's region merge uses the triangle-aware
+    2-D variant below."""
     order = sorted(range(len(sizes)), key=lambda i: -sizes[i])
     bins: List[List[int]] = []
     room: List[int] = []
@@ -128,6 +132,45 @@ def _first_fit_decreasing(sizes: Sequence[int],
         else:
             bins.append([i])
             room.append(capacity - s)
+    return bins
+
+
+def _first_fit_decreasing_2d(costs: Sequence[int], tris: Sequence[int],
+                             cap_cost: int, cap_tri: int) -> List[List[int]]:
+    """First-fit-decreasing on cost with a soft triangle-budget dimension.
+
+    The cost dimension is the *validity* constraint (a part's NS working
+    set must fit the budget) and keeps the classic FFD insertion order and
+    guarantee: a new bin opens exactly when the cost fits nowhere, so no
+    two bins are at most half full and the bin count stays < 2·OPT + 1
+    on the cost dimension.  The triangle dimension steers placement among
+    the cost-feasible bins — first bin where BOTH fit, else the
+    cost-feasible bin with the most triangle room — so triangle-dense
+    fragments spread across bins (balanced device peels) instead of
+    piling into the first one.
+    """
+    order = sorted(range(len(costs)), key=lambda i: (-costs[i], -tris[i]))
+    bins: List[List[int]] = []
+    room_c: List[int] = []
+    room_t: List[int] = []
+    for i in order:
+        placed = -1
+        for j in range(len(bins)):
+            if room_c[j] >= costs[i] and room_t[j] >= tris[i]:
+                placed = j
+                break
+        if placed < 0:
+            feasible = [j for j in range(len(bins)) if room_c[j] >= costs[i]]
+            if feasible:
+                placed = max(feasible, key=lambda j: room_t[j])
+        if placed < 0:
+            bins.append([i])
+            room_c.append(cap_cost - costs[i])
+            room_t.append(cap_tri - tris[i])
+        else:
+            bins[placed].append(i)
+            room_c[placed] -= costs[i]
+            room_t[placed] -= tris[i]
     return bins
 
 
@@ -180,20 +223,57 @@ def random_partition(g: Graph, budget: int, seed: int = 0) -> List[np.ndarray]:
     return parts
 
 
-def locality_partition(g: Graph, budget: int) -> List[np.ndarray]:
-    """Greedy cost-bounded BFS growth over the adjacency (locality-aware).
+# Zone sizing of one locality round: parts are grown until the covered NS
+# cost reaches max(_ZONE_BUDGET_MULT * budget, total_cost / _ZONE_FRACTION).
+# Small multiples keep each round's scan focused on the surviving triangle
+# mass (high per-round capture, DESIGN.md §11); the fraction floor bounds
+# the round count on graphs much larger than the budget.
+_ZONE_BUDGET_MULT = 4
+_ZONE_FRACTION = 16
 
-    Each part is grown breadth-first from the densest unassigned vertex,
-    admitting at every level the unassigned neighbors with the most edges
-    into the current frontier first (LDG-style greedy scoring) until the
-    summed NS cost reaches the budget.  A part therefore approximates a
-    cohesive region: triangles concentrate inside parts (two or three
-    vertices co-located) instead of spraying across contiguous-id blocks,
-    so each round settles more internal edges and the O(|E|/M) round count
-    of the I/O-efficient drivers drops — the PKT observation (Kabir &
-    Madduri, *Shared-memory Graph Truss Decomposition*) applied to the
-    paper's Section-5.1 partitioning step.  ``OocStats.tri_locality``
-    reports the captured-triangle fraction per run.
+
+def locality_partition(g: Graph, budget: int) -> List[np.ndarray]:
+    """Triangle-aware zoned growth over the adjacency (DESIGN.md §11).
+
+    One call partitions the current *zone* — the triangle-densest region of
+    the working graph, up to ``max(4 * budget, total_cost / 16)`` of covered
+    NS cost — and defers the rest of the graph to later rounds.  The paper's
+    partition loop already repeats until no edges remain, so a partial cover
+    is sound (Lemma 1 per part; uncovered edges simply stay in the working
+    graph), and it is what keeps each round's scan on triangles it can
+    actually capture: a whole-graph cover at the deep ``m/32`` budget is
+    forced to spray the cohesive core across ~``total/budget`` parts, so the
+    same surviving triangles get re-scanned round after round.
+
+    Within the zone, each part grows from the unassigned vertex with the
+    largest estimated triangle volume (``graph.closed_wedge_estimate``, a
+    degree-capped wedge count over the edge list).  The growth keeps a
+    persistent
+    candidate pool — every unassigned neighbor of the part so far — and
+    admits candidates by **closed-wedge gain**: when vertex ``v`` joins the
+    part, each unassigned neighbor ``u`` accrues
+    ``min(deg(u), deg(v)) - 1`` (the wedges (u, v, ·) that co-locating u
+    would close into part-internal triangles), with edges-into-part and
+    cheap cost as tiebreaks.  Admission charges **marginal NS cost**
+    ``deg(u) - edges_into_part(u)``: the edges u shares with the part are
+    already in NS(P), so the accumulated charge equals the true ``|NS(P)|``
+    (the working set the budget actually protects) instead of the
+    ``Σ deg`` over-estimate — cohesive parts legitimately hold more
+    vertices.  An over-budget candidate is skipped (a hub seeds its own
+    part later — or joins once enough of its neighborhood is in and its
+    marginal cost fits).  This is the PKT observation (Kabir & Madduri,
+    *Shared-memory Graph Truss Decomposition*) — triangle volume, not edge
+    count, is what work division must balance — applied to the paper's
+    Section-5.1 partitioning step.
+
+    Grown fragments are merged first-fit over (NS cost, triangle estimate)
+    (:func:`_first_fit_decreasing_2d`): the cost budget stays the hard
+    validity constraint (fragment costs are true NS sizes, and a union's NS
+    is at most the sum), while the per-part triangle estimate is balanced
+    toward ``total_tri * budget / total_cost`` so triangle-dense fragments
+    spread across bins instead of piling up.  ``OocStats.tri_locality``
+    reports the captured-triangle fraction per run; ``tri_est_error`` the
+    estimate's accuracy.
     """
     cost = _ns_cost(g)
     active = np.nonzero(cost > 0)[0]
@@ -201,63 +281,106 @@ def locality_partition(g: Graph, budget: int) -> List[np.ndarray]:
         return []
     _warn_over_budget(cost, active, budget)
     indptr, nbrs = undirected_csr(g)
+    indptr = np.asarray(indptr, dtype=np.int64)
+    nbrs64 = np.asarray(nbrs, dtype=np.int64)
+    deg = g.deg.astype(np.int64)
+    tri_est = closed_wedge_estimate(g)
     unassigned = cost > 0
-    # seeds in descending NS-cost order: the cohesive core is captured by
-    # the first parts, the sparse periphery mops up afterwards
-    seed_order = active[np.argsort(-cost[active], kind="stable")]
+    zone_cost = max(_ZONE_BUDGET_MULT * budget,
+                    int(cost[active].sum()) // _ZONE_FRACTION)
+    # seeds in descending triangle-volume order (NS cost as tiebreak): the
+    # triangle-dense core is captured while the zone is still empty, the
+    # sparse periphery mops up in later rounds
+    seed_order = active[np.lexsort((-cost[active], -tri_est[active]))]
     seed_pos = 0
+    # per-part candidate scores, reset lazily via the stamp (the arrays are
+    # only trusted where stamp == part id)
+    gain = np.zeros(g.n, dtype=np.int64)      # closed-wedge gain vs part
+    ecnt = np.zeros(g.n, dtype=np.int64)      # edges into the part
+    stamp = np.full(g.n, -1, dtype=np.int64)
     parts: List[np.ndarray] = []
-    while True:
+    part_cost: List[int] = []                 # true |NS| per grown fragment
+    part_tri: List[int] = []
+    covered = 0
+    while covered < zone_cost:
         while seed_pos < len(seed_order) and not unassigned[seed_order[seed_pos]]:
             seed_pos += 1
         if seed_pos >= len(seed_order):
             break
         s = int(seed_order[seed_pos])
+        part_id = len(parts)
         unassigned[s] = False
         acc = int(cost[s])
         chunks = [np.array([s], dtype=np.int64)]
-        frontier = chunks[0]
-        while len(frontier) and acc < budget:
-            # all neighbor entries of the frontier, gathered vectorized
-            starts = indptr[frontier]
-            cnt = indptr[frontier + 1] - starts
+        newly = chunks[0]
+        pool = np.zeros(0, dtype=np.int64)
+        while acc < budget:
+            # score the unassigned neighbors of the newly admitted vertices
+            starts = indptr[newly]
+            cnt = indptr[newly + 1] - starts
             tot = int(cnt.sum())
-            if tot == 0:
+            if tot:
+                flat = np.repeat(starts - (np.cumsum(cnt) - cnt), cnt) \
+                    + np.arange(tot)
+                cand = nbrs64[flat]
+                src = np.repeat(newly, cnt)
+                keep = unassigned[cand]
+                cand, src = cand[keep], src[keep]
+            else:
+                cand = src = np.zeros(0, dtype=np.int64)
+            if len(cand):
+                uniq = np.unique(cand)
+                stale = stamp[uniq] != part_id
+                gain[uniq[stale]] = 0
+                ecnt[uniq[stale]] = 0
+                stamp[uniq] = part_id
+                w = wedge_weight(deg[cand], deg[src])
+                np.add.at(gain, cand, w)
+                np.add.at(ecnt, cand, 1)
+                pool = np.unique(np.concatenate([pool, uniq]))
+            pool = pool[unassigned[pool]]
+            if len(pool) == 0:
                 break
-            flat = np.repeat(starts - (np.cumsum(cnt) - cnt), cnt) \
-                + np.arange(tot)
-            cand = nbrs[flat].astype(np.int64)
-            cand = cand[unassigned[cand]]
-            if len(cand) == 0:
-                break
-            # LDG-style score: edges into the frontier (multiplicity),
-            # cheaper NS cost as tiebreak.  Candidates that individually
-            # exceed the remaining budget are skipped (a hub must not end
-            # the part — it seeds its own later), then the maximal scored
-            # prefix that fits is admitted; the rest wait for later parts.
-            uniq, counts = np.unique(cand, return_counts=True)
-            order = np.lexsort((cost[uniq], -counts))
-            ranked = uniq[order]
-            ranked = ranked[cost[ranked] <= budget - acc]
-            fits = acc + np.cumsum(cost[ranked]) <= budget
+            # closed-wedge gain first, edges-into-part then cheap marginal
+            # cost as tiebreaks.  Candidates whose marginal cost exceeds the
+            # remaining budget are skipped, then the maximal scored prefix
+            # that fits is admitted; the rest stay pooled for the next
+            # level or part.  (The prefix charges each candidate's marginal
+            # cost against the part BEFORE the batch — edges between
+            # co-admitted candidates are charged twice, so the accumulated
+            # charge only over-estimates |NS(P)|: the budget holds.)
+            mc = np.maximum(cost[pool] - ecnt[pool], 0)
+            order = np.lexsort((mc, -ecnt[pool], -gain[pool]))
+            ranked = pool[order]
+            mcr = mc[order]
+            fit1 = mcr <= budget - acc
+            ranked, mcr = ranked[fit1], mcr[fit1]
+            fits = acc + np.cumsum(mcr) <= budget
             take = ranked[fits]
             if len(take) == 0:
                 break
             unassigned[take] = False
-            acc += int(cost[take].sum())
+            acc += int(mcr[fits].sum())
             chunks.append(take)
-            frontier = take
-        parts.append(np.concatenate(chunks).astype(np.int32))
-    # Bin-pack the grown regions first-fit-decreasing: once the cohesive
-    # core is claimed, periphery vertices reachable only through assigned
-    # hubs fragment into tiny regions — packing them into budget-capacity
-    # bins keeps the part count near ceil(total_cost / budget) instead of
-    # one scan per fragment.  A union of regions is still a valid part
-    # (the budget estimate is additive), and co-locating fragments can
-    # only turn crossing edges internal and capture more triangles.
+            newly = take
+        P = np.concatenate(chunks)
+        parts.append(P.astype(np.int32))
+        part_cost.append(acc)
+        part_tri.append(int(tri_est[P].sum()))
+        covered += acc
+    # Merge the grown fragments first-fit over (NS cost, triangle
+    # estimate): once a seed's cohesive surroundings are claimed, later
+    # seeds fragment — packing fragments into budget-capacity bins keeps
+    # the part count near ceil(covered / budget) instead of one scan per
+    # fragment.  A union of fragments is still a valid part (|NS| is
+    # subadditive, the triangle estimate additive), and co-locating
+    # fragments can only turn crossing edges internal and capture more
+    # triangles; the soft triangle capacity spreads triangle volume evenly
+    # across the merged bins.
     if len(parts) > 1:
-        bins = _first_fit_decreasing([int(cost[P].sum()) for P in parts],
-                                     budget)
+        total_c = sum(part_cost)
+        cap_tri = max(1, -(-sum(part_tri) * budget // max(total_c, 1)))
+        bins = _first_fit_decreasing_2d(part_cost, part_tri, budget, cap_tri)
         parts = [np.concatenate([parts[i] for i in b]) for b in bins]
     return parts
 
@@ -364,6 +487,9 @@ class PartitionBatch:
     max_part_edges: int   # largest single NS (budget-accounting check)
     tri_total: int = 0    # triangles enumerated on the working graph
     tri_assigned: int = 0  # of those, captured by some part (>= 2 vertices)
+    tri_est: int = 0      # wedge-based triangle estimate of the working
+    #                       graph (the partitioner's cost model; compare
+    #                       against tri_total via OocStats.tri_est_error)
 
     @property
     def tri_locality(self) -> float:
@@ -434,16 +560,37 @@ def build_partition_batch(
                                     support_from_triangle_list,
                                     triangle_incidence_np)
 
-    # ONE whole-graph skew-aware triangle enumeration per round; each
-    # triangle is then routed to the unique part holding >= 2 of its
-    # vertices (assign_triangles) instead of re-enumerating wedges per part.
-    tris_g = list_triangles(g)
+    # ONE skew-aware triangle enumeration per round, scoped to the round's
+    # NS union — the subgraph of edges with >= 1 endpoint in some part,
+    # i.e. exactly what the paper's round reads.  A triangle needs >= 2
+    # vertices in one part to be assignable, so all its edges are then in
+    # that part's NS and the scoped enumeration finds it; with a full
+    # vertex cover (sequential/random partitioners) the scope is the whole
+    # working graph and nothing changes.  A zoned cover (locality
+    # partitioner, DESIGN.md §11) skips the deferred region entirely —
+    # less scan work, and ``tri_total`` counts only triangles the round
+    # actually read.  Each found triangle is routed to the unique part
+    # holding >= 2 of its vertices (assign_triangles) instead of
+    # re-enumerating wedges per part.
     part_of = np.full(g.n, -1, dtype=np.int64)
     for i, P in enumerate(parts):
         part_of[np.asarray(P, dtype=np.int64)] = i
+    e64 = g.edges.astype(np.int64)
+    in_ns = (part_of[e64[:, 0]] >= 0) | (part_of[e64[:, 1]] >= 0)
+    if in_ns.all():
+        g_scan, ns_eids = g, None
+    else:
+        g_scan = g.remove_edges(~in_ns)
+        ns_eids = np.nonzero(in_ns)[0]
+    tris_g = np.asarray(list_triangles(g_scan), np.int64).reshape(-1, 3)
+    if ns_eids is not None and len(tris_g):
+        tris_g = ns_eids[tris_g]           # back to g's edge ids
     tri_part = assign_triangles(g, tris_g, part_of)
     tri_total = int(len(tris_g))
     tri_assigned = int((tri_part >= 0).sum())
+    # the cost model's prediction for this round's scope, recorded next to
+    # the ground truth so OocStats.tri_est_error can report its accuracy
+    tri_est = int(closed_wedge_estimate(g_scan).sum()) // 3
     order = np.argsort(tri_part, kind="stable")
     tris_sorted = tris_g[order]
     bounds = np.searchsorted(tri_part[order],
@@ -462,7 +609,8 @@ def build_partition_batch(
     if not per_part:
         return PartitionBatch(buckets=[], n_parts=0, real_edges=0,
                               padded_slots=0, max_part_edges=0,
-                              tri_total=tri_total, tri_assigned=tri_assigned)
+                              tri_total=tri_total, tri_assigned=tri_assigned,
+                              tri_est=tri_est)
 
     # size classes on the pow4 grid: lanes of a class are sized to ITS
     # largest member, so one outlier hub part (the PartitionBudgetWarning
@@ -538,5 +686,5 @@ def build_partition_batch(
     return PartitionBatch(
         buckets=buckets, n_parts=len(per_part), real_edges=total_real,
         padded_slots=total_pad, max_part_edges=max_part,
-        tri_total=tri_total, tri_assigned=tri_assigned,
+        tri_total=tri_total, tri_assigned=tri_assigned, tri_est=tri_est,
     )

@@ -557,8 +557,9 @@ def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
     return np.asarray(phi), np.asarray(st), new
 
 
-def local_threshold_peel(sup0, tris, removable, thresh, *, shape_cache=None,
-                         blocking=True, mesh=None, mesh_axis: str = "data"):
+def local_threshold_peel(sup0, tris, removable, thresh, *, alive0=None,
+                         shape_cache=None, blocking=True, mesh=None,
+                         mesh_axis: str = "data"):
     """Single-level peel of a COMPACTED candidate subgraph on padded shapes.
 
     The out-of-core k-class extraction (bottom-up Procedure 5, top-down
@@ -566,8 +567,14 @@ def local_threshold_peel(sup0, tris, removable, thresh, *, shape_cache=None,
     natural (dynamic) shape would recompile every k; this pads edges and
     triangles to pow4 capacities (at most 4x pad, far fewer shapes) so
     consecutive k values reuse the same compiled kernel (``thresh`` is
-    traced, not static).  All ``m`` real edges start alive; ``removable``
-    marks the internal/tentative ones.
+    traced, not static).  All ``m`` real edges start alive unless
+    ``alive0`` masks some out — the stage-2 candidate pipeline
+    (DESIGN.md §11) pre-builds level k+1's candidate while level k still
+    peels, then kills the edges that peel removed via this mask instead of
+    re-extracting: dead edges never enter the frontier, never report as
+    removed, and their triangles never repair supports (the caller must
+    compute ``sup0`` from fully-alive triangles only).  ``removable``
+    marks the internal/tentative edges (intersected with ``alive0``).
 
     With ``blocking=False`` returns a :class:`PendingPeel` right after
     dispatch (``handle.result()`` -> (alive_mask, removed_mask)), so the
@@ -584,12 +591,16 @@ def local_threshold_peel(sup0, tris, removable, thresh, *, shape_cache=None,
     """
     m = int(len(sup0))
     T = int(len(tris))
+    alive0 = (np.ones(m, bool) if alive0 is None
+              else np.asarray(alive0, dtype=bool))
+    removable = np.asarray(removable, bool) & alive0
     if T == 0:
         # no triangles: removals cascade nothing, one sweep is the fixpoint
-        removed = np.asarray(removable, bool) & (np.asarray(sup0) <= thresh)
+        removed = removable & (np.asarray(sup0) <= thresh)
+        alive_out = alive0 & ~removed
         if not blocking:
-            return PendingPeel(lambda: (~removed, removed), False)
-        return ~removed, removed, False
+            return PendingPeel(lambda: (alive_out, removed), False)
+        return alive_out, removed, False
     # pow4 capacities: consecutive k levels shrink the candidate slowly, so
     # the coarser grid makes most of a run's peels share one compiled shape
     cap_e = _pow4_ceil(max(m, 1))
@@ -607,7 +618,7 @@ def local_threshold_peel(sup0, tris, removable, thresh, *, shape_cache=None,
     sup_p = np.zeros(cap_e, np.int32)
     sup_p[:m] = sup0
     alive_p = np.zeros(cap_e, bool)
-    alive_p[:m] = True
+    alive_p[:m] = alive0
     rem_p = np.zeros(cap_e, bool)
     rem_p[:m] = removable
     if mesh is not None:
@@ -620,7 +631,7 @@ def local_threshold_peel(sup0, tris, removable, thresh, *, shape_cache=None,
 
         def _finish_sharded():
             alive = np.asarray(alive_dev)[:m]
-            return alive, ~alive
+            return alive, alive0 & ~alive
 
         if not blocking:
             return PendingPeel(_finish_sharded, new, sharded=True)
@@ -644,7 +655,7 @@ def local_threshold_peel(sup0, tris, removable, thresh, *, shape_cache=None,
 
     def _finish():
         alive = np.asarray(alive_dev)[:m]
-        return alive, ~alive
+        return alive, alive0 & ~alive
 
     if not blocking:
         return PendingPeel(_finish, new)

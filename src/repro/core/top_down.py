@@ -18,9 +18,13 @@ H is compacted to candidate-local edge ids, its triangle list filtered from
 the one static G_new list, and the peel executes on pow4-padded shapes
 (``peel.local_threshold_peel``) so consecutive k values reuse one compiled
 kernel — the seed path instead recomputed an m-wide support scatter and ran
-an m-sized peel per k.  The peel is dispatched non-blocking (DESIGN.md §9):
-while the device works, the host runs the O(T) alive-triangle sweep the
-Steps-7-9 pruning needs.  With a ``budget``, stage-1 supports come from the
+an m-sized peel per k.  The peel is dispatched non-blocking (DESIGN.md §9,
+§11): while the device works, the host pre-builds the NEXT level's
+candidate from the pre-result masks (a superset — provably sound: newly
+classified edges flip to support-only externals and pruned edges die via
+the peel's ``alive0`` mask at use time; ``OocStats.stage2_overlapped``)
+and runs the O(T) alive-triangle sweep the Steps-7-9 pruning needs.  With
+a ``budget``, stage-1 supports come from the
 batched ``partitioned_support`` (whose partition rounds share the
 double-buffered producer of ``bottom_up._partition_rounds``).
 ``TopDownResult.stats`` carries the ``OocStats`` counters of both stages.
@@ -165,6 +169,54 @@ def top_down_decompose(
     pruned_total = 0
     k = int(psi_l.max()) if gnew.m else 2
 
+    def build_candidate(k_b: int):
+        """Host half of one top-down level: U_k from the CURRENT alive /
+        classified masks, the candidate compacted and its triangles
+        filtered from the static G_new list.
+
+        Called one level ahead while the device still peels level k
+        (DESIGN.md §11), when ``classified_l`` / ``alive_l`` miss the
+        pending level's classifications and prunes — which only makes U
+        and the candidate *supersets* of the true ones, and that is sound:
+        a Φ_{k-1} edge is undecided and alive with psi >= k-1 now and
+        after the pending level (classification only touches survivors of
+        level k, pruning only classified edges off every undecided
+        triangle), so it stays tentative with its T_{k-1} triangles
+        present; extra tentative edges can only peel away or survive into
+        S, and the S ∪ T_k maximality argument of the module docstring
+        never assumed U was minimal.  At use time the masks are re-read:
+        newly classified edges flip from removable to support-only,
+        pruned edges die via the ``alive0`` mask of
+        ``local_threshold_peel``.  Returns None when no undecided alive
+        edge has psi >= k_b.
+        """
+        undecided_b = alive_l & ~classified_l
+        elig = undecided_b & (psi_l >= k_b)
+        if not elig.any():
+            return None
+        u_k = np.zeros(n, dtype=bool)
+        eg = edges_l[elig]
+        u_k[eg[:, 0]] = True
+        u_k[eg[:, 1]] = True
+        u_in = u_k[edges_l[:, 0]]
+        v_in = u_k[edges_l[:, 1]]
+        in_h = alive_l & (u_in | v_in)
+        internal = u_in & v_in           # re-masked by alive at use time
+        if faithful_proc8:
+            cand_set = in_h
+        else:
+            # exclude external unclassified support (see module docstring)
+            cand_set = ((internal & alive_l & ~classified_l)
+                        | (classified_l & in_h))
+        # Compact the candidate to local edge ids and filter its triangles
+        # (part-local compaction shared with the partition-batch engine).
+        h_l = np.nonzero(cand_set)[0]
+        tmask = (cand_set[tris_l[:, 0]] & cand_set[tris_l[:, 1]]
+                 & cand_set[tris_l[:, 2]])
+        tris_loc = glib.compact_index(h_l, tris_l[tmask])
+        return k_b, h_l, tris_loc, internal, int(in_h.sum())
+
+    pre = None          # candidate pre-built while the previous level peeled
     while k >= 3 and (t is None or len(classes) < t):
         undecided = alive_l & ~classified_l
         if not undecided.any():
@@ -173,39 +225,41 @@ def top_down_decompose(
         if not elig.any():
             k = int(psi_l[undecided].max())
             continue
-        u_k = np.zeros(n, dtype=bool)
-        eg = edges_l[elig]
-        u_k[eg[:, 0]] = True
-        u_k[eg[:, 1]] = True
-        u_in = u_k[edges_l[:, 0]]
-        v_in = u_k[edges_l[:, 1]]
-        in_h = alive_l & (u_in | v_in)
-        internal = alive_l & u_in & v_in
-        tentative = internal & ~classified_l
-        cand_sizes.append(int(in_h.sum()))
-        stats.scans += 1
-        if faithful_proc8:
-            alive0 = in_h
+        if pre is not None and pre[0] == k and not faithful_proc8:
+            cand = pre               # built while level k+1 was peeling
+            stats.stage2_overlapped += 1
         else:
-            # exclude external unclassified support (see module docstring)
-            alive0 = tentative | (classified_l & in_h)
-        # Compact the candidate to local edge ids and peel on padded shapes
-        # (part-local compaction shared with the partition-batch engine).
-        h_l = np.nonzero(alive0)[0]
-        tmask = (alive0[tris_l[:, 0]] & alive0[tris_l[:, 1]]
-                 & alive0[tris_l[:, 2]])
-        tris_loc = glib.compact_index(h_l, tris_l[tmask])
-        sup0 = support_from_triangle_list(tris_loc, len(h_l)).astype(np.int32)
-        # Double-buffered candidate peel (DESIGN.md §9): dispatch without
-        # blocking, then do the O(T) alive-triangle sweep the prune step
-        # needs while the device peels — it depends only on alive_l, which
-        # the peel result cannot change before pruning.
+            cand = build_candidate(k)
+        pre = None
+        _, h_l, tris_loc, internal, in_h_size = cand
+        tentative = internal & alive_l & ~classified_l
+        cand_sizes.append(in_h_size)
+        stats.scans += 1
+        # kill candidate edges pruned after a pre-build; supports count
+        # fully-alive triangles (newly classified edges stay as
+        # support-only externals — they were tentative at build time)
+        alive_h = alive_l[h_l]
+        if len(tris_loc):
+            t_alive = (alive_h[tris_loc[:, 0]] & alive_h[tris_loc[:, 1]]
+                       & alive_h[tris_loc[:, 2]])
+            sup0 = support_from_triangle_list(
+                tris_loc[t_alive], len(h_l)).astype(np.int32)
+        else:
+            sup0 = np.zeros(len(h_l), np.int32)
+        # Double-buffered candidate peel (DESIGN.md §9, §11): dispatch
+        # without blocking, then build the NEXT level's candidate and do
+        # the O(T) alive-triangle sweep the prune step needs while the
+        # device peels — both depend only on masks the peel result cannot
+        # change before it is consumed.
         handle = local_threshold_peel(
-            sup0, tris_loc, tentative[h_l], k - 3, shape_cache=shape_cache,
-            blocking=False, mesh=mesh, mesh_axis=mesh_axis)
+            sup0, tris_loc, tentative[h_l], k - 3, alive0=alive_h,
+            shape_cache=shape_cache, blocking=False, mesh=mesh,
+            mesh_axis=mesh_axis)
         stats.compiles += int(handle.new_compile)
         stats.batches += 1
         stats.sharded_rounds += int(handle.sharded)
+        if not faithful_proc8:
+            pre = build_candidate(k - 1)
         ta = (alive_l[tris_l[:, 0]] & alive_l[tris_l[:, 1]]
               & alive_l[tris_l[:, 2]])
         surv_l, _ = handle.result()

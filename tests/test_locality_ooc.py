@@ -1,14 +1,18 @@
-"""Locality-aware partitioner + double-buffered OOC rounds (DESIGN.md §9):
-partition validity, triangle-locality scoring, round reduction on a
-clustered graph, and the non-blocking peel dispatch path."""
+"""Triangle-aware locality partitioner + pipelined OOC rounds (DESIGN.md
+§9, §11): zoned partition validity, the closed-wedge cost model, triangle-
+locality scoring, the stage-2 candidate pipeline and the non-blocking peel
+dispatch path."""
 
 import numpy as np
 import pytest
 
 from repro.core import graph as glib
+from repro.core import partition as plib
 from repro.core.bottom_up import (bottom_up_decompose, lower_bounding,
                                   partitioned_support)
+from repro.core.graph import closed_wedge_estimate
 from repro.core.partition import (PartitionBudgetWarning,
+                                  _first_fit_decreasing_2d,
                                   build_partition_batch, locality_partition,
                                   sequential_partition)
 from repro.core.peel import (PendingPeel, local_threshold_peel,
@@ -16,78 +20,164 @@ from repro.core.peel import (PendingPeel, local_threshold_peel,
 from repro.core.serial import alg2_truss
 from repro.core.support import (edge_support_np, list_triangles_np,
                                 support_from_triangle_list)
-from tests.conftest import random_graph
-
-
-def _clustered_graph(n_cliques=6, size=8, seed=7):
-    """Disjoint cliques bridged into one component, vertex ids shuffled —
-    contiguous-id blocks split every clique, BFS growth recovers them."""
-    n = n_cliques * size
-    rng = np.random.default_rng(seed)
-    perm = rng.permutation(n)
-    blocks = []
-    for c in range(n_cliques):
-        iu = np.triu_indices(size, 1)
-        blocks.append(np.stack(iu, 1) + c * size)
-    bridges = np.stack([np.arange(0, n - size, size),
-                        np.arange(size, n, size)], axis=1)
-    edges = perm[np.concatenate(blocks + [bridges])]
-    return n, glib.canonical_edges(edges, n)
+from repro.core.top_down import top_down_decompose
+from tests.conftest import (clique_edges, clustered_cliques, random_graph,
+                            star_hub_graph, triangle_free_graph)
 
 
 # ---------------------------------------------------------------------------
-# partitioner properties
+# the closed-wedge cost model (DESIGN.md §11)
 # ---------------------------------------------------------------------------
 
-def test_locality_partition_is_valid_partition(rng):
+def test_closed_wedge_estimate_exact_on_clique():
+    """On K_s the estimate equals the incident triangle count C(s-1, 2)
+    per vertex, so the graph total / 3 is the exact triangle count."""
+    for s in (4, 6, 9):
+        g = glib.build_graph(s, clique_edges(0, s))
+        est = closed_wedge_estimate(g)
+        assert (est == (s - 1) * (s - 2) // 2).all()
+        assert int(est.sum()) // 3 == s * (s - 1) * (s - 2) // 6
+
+
+def test_closed_wedge_estimate_zero_iff_triangle_free_vertex():
+    n, ce = triangle_free_graph(20)
+    g = glib.build_graph(n, ce)
+    assert (closed_wedge_estimate(g) >= 0).all()
+    # a star's leaves AND hub are triangle-free: estimate 0 everywhere
+    n, ce = star_hub_graph(30, 20)
+    g = glib.build_graph(n, ce)
+    est = closed_wedge_estimate(g)
+    assert (est[g.deg == 1] == 0).all()
+    # empty graph
+    g0 = glib.build_graph(5, np.zeros((0, 2), np.int64))
+    assert (closed_wedge_estimate(g0) == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# partitioner properties (zoned, marginal-cost)
+# ---------------------------------------------------------------------------
+
+def test_locality_partition_is_valid_zoned_partition(rng):
+    """Parts are disjoint, only active vertices, and every part's TRUE
+    working set |NS(P)| fits the budget (the marginal-cost accounting's
+    guarantee) except the warned over-budget singleton case.  A zoned
+    cover may defer periphery vertices to later rounds — that is the
+    contract change of DESIGN.md §11."""
     n = 50
     ce = glib.canonical_edges(random_graph(rng, n, 0.25), n)
     g = glib.build_graph(n, ce)
     budget = max(8, len(ce) // 5)
     parts = locality_partition(g, budget)
+    assert parts
     allv = np.concatenate(parts)
     assert len(allv) == len(np.unique(allv))          # disjoint
-    assert set(allv.tolist()) == set(np.nonzero(g.deg > 0)[0].tolist())
-    cost = g.deg.astype(np.int64)
+    active = set(np.nonzero(g.deg > 0)[0].tolist())
+    assert set(allv.tolist()) <= active
     for P in parts:
-        # budget respected, except the warned over-budget singleton case
-        assert int(cost[P].sum()) <= budget or len(P) == 1
+        ns_ids, _, _ = glib.neighborhood_subgraph(g, P)
+        assert len(ns_ids) <= budget or len(P) == 1
+
+
+def test_locality_rounds_terminate_on_partial_covers(rng):
+    """Repeatedly partitioning + removing internal edges must empty every
+    graph even though single calls cover only a zone."""
+    for n, p in ((40, 0.3), (30, 0.1)):
+        ce = glib.canonical_edges(random_graph(rng, n, p), n)
+        g = glib.build_graph(n, ce)
+        budget = max(6, len(ce) // 6)
+        for _ in range(500):
+            if g.m == 0:
+                break
+            parts = locality_partition(g, budget)
+            if not parts:
+                break
+            part_of = np.full(g.n, -1, np.int64)
+            for i, P in enumerate(parts):
+                part_of[P.astype(np.int64)] = i
+            e = g.edges.astype(np.int64)
+            internal = (part_of[e[:, 0]] == part_of[e[:, 1]]) \
+                & (part_of[e[:, 0]] >= 0)
+            if not internal.any():
+                budget *= 2          # the driver's stall rule
+                continue
+            g = g.remove_edges(internal)
+        assert g.m == 0
 
 
 def test_locality_partition_warns_on_hub():
-    n = 30
-    hub = np.stack([np.zeros(n - 1, np.int64), np.arange(1, n)], axis=1)
-    ce = glib.canonical_edges(hub, n)
+    n, ce = star_hub_graph(30, 29)
     g = glib.build_graph(n, ce)
     with pytest.warns(PartitionBudgetWarning) as rec:
         parts = locality_partition(g, budget=5)
     assert rec[0].message.max_cost == n - 1
-    assert sum(len(P) for P in parts) == n
+    # the hub is emitted as an over-budget singleton part in SOME round's
+    # zone; vertices are never duplicated
+    allv = np.concatenate(parts)
+    assert len(allv) == len(np.unique(allv))
 
 
 def test_locality_partition_is_compact(rng):
-    """Bin-packed growth regions: the part count stays near the
-    ceil(total_cost / budget) lower bound (first-fit-decreasing is within
-    a constant factor), instead of one part per periphery fragment."""
+    """Bin-packed growth fragments: the part count stays near the
+    ceil(covered_cost / budget) lower bound (first-fit is within a factor
+    2 on the cost dimension even with triangle-ordered insertion), instead
+    of one part per periphery fragment."""
     n = 60
     ce = glib.canonical_edges(random_graph(rng, n, 0.2), n)
     g = glib.build_graph(n, ce)
     cost = g.deg.astype(np.int64)
     for budget in (16, 40, 100):
         parts = locality_partition(g, budget)
+        covered = sum(
+            len(glib.neighborhood_subgraph(g, P)[0]) for P in parts)
         n_over = int((cost > budget).sum())
-        lower = int(np.ceil(cost.sum() / budget))
+        lower = int(np.ceil(covered / budget))
         assert len(parts) <= 2 * lower + n_over + 1
+
+
+def test_first_fit_decreasing_2d_cost_guarantee():
+    """The triangle dimension is soft: bins open only when COST fits
+    nowhere, so the bin count matches the cost-only first-fit bound even
+    under adversarial triangle sizes."""
+    costs = [30, 30, 30, 30, 5, 5, 5, 5]
+    tris = [1000, 1000, 1000, 1000, 0, 0, 0, 0]
+    bins = _first_fit_decreasing_2d(costs, tris, cap_cost=70, cap_tri=10)
+    assert sorted(i for b in bins for i in b) == list(range(len(costs)))
+    total = sum(costs)
+    assert len(bins) <= 2 * -(-total // 70) + 1
+    # triangle-heavy items spread across the cost-opened bins instead of
+    # piling into the first one
+    costs2 = [60, 60, 5, 5]
+    tris2 = [10, 10, 40, 40]
+    bins2 = _first_fit_decreasing_2d(costs2, tris2, cap_cost=70, cap_tri=50)
+    loads = [sum(tris2[i] for i in b) for b in bins2]
+    assert len(bins2) == 2
+    assert max(loads) <= 50
+
+
+def test_marginal_cost_packs_cohesive_parts_denser():
+    """A clique's NS is far below its Σ deg: with the marginal-cost
+    accounting one part can hold several cliques a Σ-deg charge would
+    split, while the true |NS| stays within budget."""
+    n, ce = clustered_cliques(4, 6, seed=3)
+    g = glib.build_graph(n, ce)
+    # one K6's NS ≈ 15 internal + bridges; Σ deg = 6 * 5 = 30
+    budget = 40
+    parts = locality_partition(g, budget)
+    sizes = sorted(len(P) for P in parts)
+    assert sizes[-1] > 6            # at least one part spans > one clique
+    for P in parts:
+        assert len(glib.neighborhood_subgraph(g, P)[0]) <= budget
 
 
 def test_locality_beats_sequential_on_clustered_graph():
     """The tentpole claim in miniature: on a shuffled clique graph the
-    locality-aware partitioner captures more triangles per part and
-    settles the decomposition in no more rounds than contiguous-id
-    blocks, with identical phi (Lemma 1 holds for any partition)."""
-    n, ce = _clustered_graph()
+    triangle-aware partitioner captures more triangles per scanned
+    triangle and settles the decomposition in no more rounds than
+    contiguous-id blocks, with identical phi (Lemma 1 holds for any
+    partition)."""
+    n, ce = clustered_cliques()
     oracle = alg2_truss(n, ce)
-    budget = 2 * 8 * 7 + 16        # ~ one clique's NS cost
+    budget = 2 * 8 * 7 + 16        # ~ two cliques' Σ-deg cost
     res = {}
     for p in ("sequential", "locality"):
         res[p] = bottom_up_decompose(n, ce, budget, partitioner=p)
@@ -100,19 +190,43 @@ def test_locality_beats_sequential_on_clustered_graph():
     assert 0.0 <= st_loc.tri_locality <= 1.0
 
 
-def test_partition_batch_tri_locality_counters(rng):
+def test_partition_batch_tri_counters(rng):
     n = 40
     ce = glib.canonical_edges(random_graph(rng, n, 0.3), n)
     g = glib.build_graph(n, ce)
     batch = build_partition_batch(
         g, sequential_partition(g, max(8, len(ce) // 4)))
+    # full cover: the scoped enumeration IS the whole working graph
     assert batch.tri_total == len(list_triangles_np(g))
     assert 0 <= batch.tri_assigned <= batch.tri_total
+    assert batch.tri_est >= 0
     assert batch.tri_locality == pytest.approx(
         batch.tri_assigned / batch.tri_total if batch.tri_total else 1.0)
     # one part captures everything
     whole = build_partition_batch(g, [np.nonzero(g.deg > 0)[0].astype(np.int32)])
     assert whole.tri_locality == 1.0
+
+
+def test_partition_batch_scoped_enumeration_on_partial_cover(rng):
+    """With a partial cover, tri_total counts exactly the triangles of the
+    NS-union subgraph (what the round reads), and the assigned triangles
+    still route to the unique part holding >= 2 vertices."""
+    n = 36
+    ce = glib.canonical_edges(random_graph(rng, n, 0.3), n)
+    g = glib.build_graph(n, ce)
+    # cover only half the active vertices with sequential blocks
+    half = np.nonzero(g.deg > 0)[0][: max(2, (g.deg > 0).sum() // 2)]
+    sub_parts = plib._pack_cost_bounded(
+        half, g.deg.astype(np.int64), max(8, len(ce) // 4))
+    batch = build_partition_batch(g, sub_parts)
+    in_part = np.zeros(n, bool)
+    for P in sub_parts:
+        in_part[P] = True
+    e = ce.astype(np.int64)
+    in_ns = in_part[e[:, 0]] | in_part[e[:, 1]]
+    ref = glib.build_graph(n, ce[in_ns])
+    assert batch.tri_total == len(list_triangles_np(ref))
+    assert batch.tri_assigned <= batch.tri_total
 
 
 @pytest.mark.parametrize("budget_frac", [0.15, 0.4])
@@ -129,9 +243,116 @@ def test_locality_engines_match_oracle(rng, budget_frac):
         sup = edge_support_np(glib.build_graph(n, ce))
         ps = partitioned_support(n, ce, budget, partitioner="locality")
         assert (ps == sup).all()
-        from repro.core.top_down import top_down_decompose
         td = top_down_decompose(n, ce, budget=budget, partitioner="locality")
         assert (td.phi == oracle).all()
+
+
+def test_wildly_wrong_triangle_estimate_only_costs_rounds(rng, monkeypatch):
+    """Regression: the cost model steers locality, never correctness — a
+    partitioner whose triangle estimate is garbage (reversed, huge,
+    zero) must still yield phi identical to the oracle and respect the
+    NS budget."""
+    n = 32
+    ce = glib.canonical_edges(random_graph(rng, n, 0.3), n)
+    oracle = alg2_truss(n, ce)
+    budget = max(8, len(ce) // 4)
+
+    def wrong_estimate(graph):
+        rng2 = np.random.default_rng(99)
+        return rng2.integers(0, 10**9, size=graph.n)
+
+    monkeypatch.setattr(plib, "closed_wedge_estimate", wrong_estimate)
+    g = glib.build_graph(n, ce)
+    parts = locality_partition(g, budget)
+    for P in parts:
+        assert len(glib.neighborhood_subgraph(g, P)[0]) <= budget \
+            or len(P) == 1
+    res = bottom_up_decompose(n, ce, budget, partitioner="locality")
+    assert (res.phi == oracle).all()
+    td = top_down_decompose(n, ce, budget=budget, partitioner="locality")
+    assert (td.phi == oracle).all()
+
+
+# ---------------------------------------------------------------------------
+# stage-2 candidate pipeline (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def test_stage2_pipeline_overlaps_and_matches_oracle(rng):
+    """Graphs with several consecutive k-classes drive the stage-2
+    prebuild path: the overlapped counter must advance and phi stay
+    exact on both drivers."""
+    edges = np.concatenate([
+        clique_edges(0, 9), clique_edges(6, 7),   # overlapping cliques
+        random_graph(rng, 20, 0.25) + 12,
+    ])
+    n = 32
+    ce = glib.canonical_edges(edges, n)
+    oracle = alg2_truss(n, ce)
+    budget = max(8, len(ce) // 4)
+    res = bottom_up_decompose(n, ce, budget)
+    assert (res.phi == oracle).all()
+    assert res.stats.stage2_overlapped > 0
+    td = top_down_decompose(n, ce, budget=budget)
+    assert (td.phi == oracle).all()
+    assert td.stats.stage2_overlapped > 0
+    # the full-memory top-down path pipelines too
+    td2 = top_down_decompose(n, ce)
+    assert (td2.phi == oracle).all()
+    assert td2.stats.stage2_overlapped > 0
+
+
+def test_local_threshold_peel_alive0_equals_prefiltered(rng):
+    """Passing a dead-edge mask must equal physically removing those edges
+    and re-indexing — the fixup contract the stage-2 pipeline relies on."""
+    n = 24
+    ce = glib.canonical_edges(random_graph(rng, n, 0.4), n)
+    g = glib.build_graph(n, ce)
+    tris = list_triangles_np(g)
+    removable = rng.random(g.m) < 0.7
+    dead = rng.random(g.m) < 0.25
+    alive0 = ~dead
+    t_alive = alive0[tris[:, 0]] & alive0[tris[:, 1]] & alive0[tris[:, 2]]
+    sup = support_from_triangle_list(tris[t_alive], g.m).astype(np.int32)
+    for thresh in (0, 1, 3):
+        alive_m, removed_m, _ = local_threshold_peel(
+            sup, tris, removable, thresh, alive0=alive0)
+        # reference: rebuild on the surviving edge set
+        keep_ids = np.nonzero(alive0)[0]
+        tris_ref = glib.compact_index(keep_ids, tris[t_alive])
+        sup_ref = support_from_triangle_list(
+            tris_ref, len(keep_ids)).astype(np.int32)
+        alive_r, removed_r, _ = local_threshold_peel(
+            sup_ref, tris_ref, removable[keep_ids], thresh)
+        assert (alive_m[keep_ids] == alive_r).all()
+        assert (removed_m[keep_ids] == removed_r).all()
+        # dead edges never resurface in either mask
+        assert not alive_m[dead].any()
+        assert not removed_m[dead].any()
+
+
+def test_stage2_superset_candidate_is_sound(rng):
+    """The pipeline peels NS(U') for a SUPERSET U' of the true U_k (built
+    before the previous level's removals landed).  Emulate the extreme
+    case — U' = all vertices — and check the removed set still equals the
+    exact class."""
+    from repro.core.peel import peel_threshold_dense
+    import jax.numpy as jnp
+
+    n = 26
+    ce = glib.canonical_edges(random_graph(rng, n, 0.35), n)
+    oracle = alg2_truss(n, ce)
+    g = glib.build_graph(n, ce)
+    tris = list_triangles_np(g)
+    sup = support_from_triangle_list(tris, g.m).astype(np.int32)
+    if len(tris) == 0:
+        tris = np.full((1, 3), g.m, np.int32)
+    kmin = int(oracle.min())
+    # peel the whole graph (maximal superset candidate) at the first
+    # class's threshold: removals must be exactly that class
+    _, _, removed = peel_threshold_dense(
+        jnp.asarray(sup), jnp.asarray(tris), jnp.ones(g.m, bool),
+        jnp.ones(g.m, bool), jnp.int32(kmin - 2))
+    assert (np.asarray(removed) == (oracle == kmin)).all()
 
 
 # ---------------------------------------------------------------------------
@@ -173,12 +394,18 @@ def test_local_threshold_peel_nonblocking_matches_blocking(rng):
         alive_nb, removed_nb = handle.result()
         assert (alive_nb == alive_b).all()
         assert (removed_nb == removed_b).all()
-    # triangle-free short-circuit honors the contract too
+    # triangle-free short-circuit honors the contract too, incl. alive0
     h = local_threshold_peel(np.zeros(4, np.int32),
                              np.zeros((0, 3), np.int32),
                              np.ones(4, bool), 0, blocking=False)
     alive_nb, removed_nb = h.result()
     assert removed_nb.all() and not alive_nb.any()
+    alive_nb, removed_nb, _ = local_threshold_peel(
+        np.zeros(4, np.int32), np.zeros((0, 3), np.int32),
+        np.ones(4, bool), 0,
+        alive0=np.array([True, False, True, False]))
+    assert (removed_nb == np.array([True, False, True, False])).all()
+    assert not alive_nb.any()
 
 
 def test_shape_cache_compile_counter_nonblocking(rng):

@@ -16,7 +16,7 @@ from repro.core.peel import (PendingPeel, estimate_working_set,
                              truss_decompose)
 from repro.core.serial import alg2_truss
 from repro.core.support import edge_support_np, list_triangles, list_triangles_np
-from tests.conftest import random_graph
+from tests.conftest import clique_edges, random_graph
 
 
 # ---------------------------------------------------------------------------
@@ -181,12 +181,8 @@ def test_stage2_skips_empty_classes():
     """Disjoint K12 + K5 + a path: the only classes are {2, 5, 12}, and the
     lower bounds are exact, so stage 2 must probe exactly two k values (5
     then 12) instead of every k in [2, 12] as the seed did."""
-    def clique(lo, size):
-        iu = np.triu_indices(size, 1)
-        return np.stack(iu, 1) + lo
-
     edges = np.concatenate([
-        clique(0, 12), clique(12, 5),
+        clique_edges(0, 12), clique_edges(12, 5),
         np.array([[17, 18], [18, 19], [19, 20]]),
     ])
     n = 21

@@ -73,8 +73,9 @@ def test_partitioned_support_batched_exact(g, budget_frac):
 @settings(max_examples=12, deadline=None)
 @given(graphs(), st.sampled_from([0.15, 0.35, 0.6]))
 def test_partitioner_equivalence(g, budget_frac):
-    """Lemma 1 holds for ANY valid partition: sequential, (rebalanced)
-    random and locality-aware rounds must all produce identical phi."""
+    """Lemma 1 holds for ANY valid (possibly zoned) partition: sequential,
+    (rebalanced) random and triangle-aware locality rounds must all
+    produce identical phi."""
     n, edges = g
     ce = glib.canonical_edges(edges, n)
     if len(ce) < 3:
@@ -89,3 +90,52 @@ def test_partitioner_equivalence(g, budget_frac):
     for p, res in results.items():
         assert (res.phi == phi_ref).all(), p
         assert 0.0 <= res.stats.tri_locality <= 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(graphs(), st.sampled_from(["sequential", "locality"]),
+       st.sampled_from([0.2, 0.5]))
+def test_stage2_pipeline_property(g, partitioner, budget_frac):
+    """The stage-2 candidate pipeline (DESIGN.md §11): prebuilt superset
+    candidates + alive-mask fixups never change phi on either driver, and
+    the counters stay consistent."""
+    n, edges = g
+    ce = glib.canonical_edges(edges, n)
+    if len(ce) < 3:
+        return
+    oracle = alg2_truss(n, ce)
+    budget = max(4, int(len(ce) * budget_frac))
+    res = bottom_up_decompose(n, ce, budget, partitioner=partitioner)
+    assert (res.phi == oracle).all()
+    assert 0 <= res.stats.stage2_overlapped <= res.stats.scans
+    td = top_down_decompose(n, ce, budget=budget, partitioner=partitioner)
+    assert (td.phi == oracle).all()
+    assert 0 <= td.stats.stage2_overlapped <= td.stats.scans
+    assert res.stats.tri_assigned <= res.stats.tri_total
+    assert res.stats.tri_est_error >= 0.0
+
+
+@settings(max_examples=8, deadline=None)
+@given(graphs(), st.sampled_from([0.2, 0.5]), st.integers(0, 2**31 - 1))
+def test_wrong_triangle_estimate_keeps_phi(g, budget_frac, est_seed):
+    """The triangle cost model steers locality only: a garbage estimator
+    must never change phi (regression for the DESIGN.md §11 contract)."""
+    import repro.core.partition as plib
+
+    n, edges = g
+    ce = glib.canonical_edges(edges, n)
+    if len(ce) < 3:
+        return
+    budget = max(4, int(len(ce) * budget_frac))
+    real = plib.closed_wedge_estimate
+
+    def wrong(graph):
+        rng = np.random.default_rng(est_seed)
+        return rng.integers(0, 10**9, size=graph.n)
+
+    plib.closed_wedge_estimate = wrong
+    try:
+        res = bottom_up_decompose(n, ce, budget, partitioner="locality")
+    finally:
+        plib.closed_wedge_estimate = real
+    assert (res.phi == alg2_truss(n, ce)).all()

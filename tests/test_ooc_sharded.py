@@ -28,7 +28,7 @@ from repro.core.peel import (local_threshold_peel, peel_classes_batched,
 from repro.core.serial import alg2_truss
 from repro.core.support import list_triangles_np, support_from_triangle_list
 from repro.core.top_down import top_down_decompose
-from tests.conftest import random_graph
+from tests.conftest import er_graph, random_graph
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -39,7 +39,7 @@ def mesh():
 
 
 def _graph(rng, n=26, p=0.3):
-    ce = glib.canonical_edges(random_graph(rng, n, p), n)
+    n, ce = er_graph(rng, n, p)
     assert len(ce) >= 3
     return ce, n
 
@@ -57,6 +57,9 @@ def test_bottom_up_sharded_matches_oracle_and_single(rng, mesh):
     assert res_s.stats.sharded_rounds > 0
     assert res_s.stats.devices == len(jax.devices())
     assert res_1.stats.sharded_rounds == 0 and res_1.stats.devices == 1
+    # the stage-2 candidate pipeline (DESIGN.md §11) is control-flow
+    # identical across the mesh: same levels prebuilt either way
+    assert res_s.stats.stage2_overlapped == res_1.stats.stage2_overlapped
 
 
 def test_top_down_sharded_matches_oracle(rng, mesh):

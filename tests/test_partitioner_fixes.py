@@ -20,21 +20,17 @@ from repro.core.partition import (PartitionBudgetWarning, random_partition,
                                   sequential_partition)
 from repro.core.peel import truss_decompose
 from repro.core.serial import alg2_truss
-from tests.conftest import random_graph
+from tests.conftest import er_graph, star_hub_graph
 
 
 # ---------------------------------------------------------------------------
 # truss_decompose: memory_budget=0 must be rejected, not defaulted
 # ---------------------------------------------------------------------------
 
-def _small(rng, n=24, p=0.35):
-    return glib.canonical_edges(random_graph(rng, n, p), n), n
-
-
 @pytest.mark.parametrize("engine", ["auto", "bottom-up", "top-down"])
 @pytest.mark.parametrize("bad", [0, -1, -100])
 def test_nonpositive_memory_budget_rejected(rng, engine, bad):
-    ce, n = _small(rng)
+    n, ce = er_graph(rng)
     with pytest.raises(ValueError, match="memory_budget must be a positive"):
         truss_decompose(n, ce, engine=engine, memory_budget=bad)
 
@@ -42,7 +38,7 @@ def test_nonpositive_memory_budget_rejected(rng, engine, bad):
 def test_memory_budget_none_still_defaults(rng):
     """Only *explicit* non-positive budgets are errors; None keeps the
     m // 8 default for the forced out-of-core engines."""
-    ce, n = _small(rng)
+    n, ce = er_graph(rng)
     oracle = alg2_truss(n, ce)
     for engine in ("bottom-up", "top-down"):
         phi = truss_decompose(n, ce, engine=engine, memory_budget=None)
@@ -54,7 +50,7 @@ def test_explicit_budget_honored(rng):
     forces strictly deeper partitioning than a roomy one."""
     from repro.core.peel import estimate_working_set
 
-    ce, n = _small(rng, n=40, p=0.3)
+    n, ce = er_graph(rng, n=40, p=0.3)
     oracle = alg2_truss(n, ce)
     est = estimate_working_set(glib.build_graph(n, ce))
     phi_small, st_small = truss_decompose(
@@ -69,14 +65,6 @@ def test_explicit_budget_honored(rng):
 # random_partition: cost-aware bins
 # ---------------------------------------------------------------------------
 
-def _skewed_graph(n=64, hub_deg=40):
-    """A hub star plus a sparse tail: per-vertex NS costs are wildly
-    uneven, the regime where cost-blind hashing overflows bins."""
-    hub = np.stack([np.zeros(hub_deg, np.int64),
-                    np.arange(1, hub_deg + 1)], axis=1)
-    tail = np.stack([np.arange(hub_deg + 1, n - 1),
-                     np.arange(hub_deg + 2, n)], axis=1)
-    return glib.canonical_edges(np.concatenate([hub, tail]), n)
 
 
 def test_random_partition_respects_budget():
@@ -85,7 +73,7 @@ def test_random_partition_respects_budget():
     summed NS cost fits (no single vertex is over budget here, so no
     over-budget singleton is allowed either)."""
     n = 64
-    ce = _skewed_graph(n)
+    _, ce = star_hub_graph(n)
     g = glib.build_graph(n, ce)
     cost = g.deg.astype(np.int64)
     budget = int(cost.max()) + 4          # every vertex fits on its own
@@ -102,9 +90,7 @@ def test_random_partition_respects_budget():
 def test_random_partition_warns_on_over_budget_vertex():
     """A single vertex above the budget must warn — consistently with
     sequential_partition — and still be emitted as a singleton part."""
-    n = 30
-    hub = np.stack([np.zeros(n - 1, np.int64), np.arange(1, n)], axis=1)
-    ce = glib.canonical_edges(hub, n)
+    n, ce = star_hub_graph(30, 29)
     budget = 5
     g = glib.build_graph(n, ce)
     with pytest.warns(PartitionBudgetWarning) as rec:
@@ -121,7 +107,7 @@ def test_random_partition_warns_on_over_budget_vertex():
 
 
 def test_random_partition_deterministic_per_seed():
-    ce = _skewed_graph()
+    _, ce = star_hub_graph()
     g = glib.build_graph(64, ce)
     a = random_partition(g, budget=30, seed=3)
     b = random_partition(g, budget=30, seed=3)
@@ -135,7 +121,7 @@ def test_random_partition_deterministic_per_seed():
 # ---------------------------------------------------------------------------
 
 def test_custom_partitioner_receives_round_index(rng):
-    ce, n = _small(rng, n=30)
+    n, ce = er_graph(rng, n=30)
     seen: list = []
 
     def by_round(g, budget, round_idx):
@@ -148,7 +134,7 @@ def test_custom_partitioner_receives_round_index(rng):
 
 
 def test_custom_partitioner_two_arg_still_works(rng):
-    ce, n = _small(rng, n=30)
+    n, ce = er_graph(rng, n=30)
     calls: list = []
 
     def plain(g, budget):
@@ -166,7 +152,7 @@ def test_defaulted_third_param_keeps_two_arg_call(rng):
     """A defaulted third parameter is a config kwarg, not a round slot:
     the legacy 2-arg call must be kept so the round index never hijacks
     it."""
-    ce, n = _small(rng, n=24)
+    n, ce = er_graph(rng, n=24)
     seen: list = []
 
     def with_config(g, budget, strict=True):
@@ -205,7 +191,7 @@ def test_resolve_partitioner_seed_reaches_random_partition():
     """_resolve_partitioner("random", seed=s) must call
     random_partition(g, b, seed=s + round); the default 0 preserves the
     historical seed=round schedule."""
-    ce = _skewed_graph()
+    _, ce = star_hub_graph()
     g = glib.build_graph(64, ce)
     fn = _resolve_partitioner("random", seed=5)
     got = fn(g, 30, 2)
@@ -226,7 +212,7 @@ def test_partitioner_seed_threaded_through_drivers(rng, monkeypatch):
     from repro.core.bottom_up import partitioned_support
     from repro.core.top_down import top_down_decompose
 
-    ce, n = _small(rng, n=28)
+    n, ce = er_graph(rng, n=28)
     seen: list = []
 
     def recording(g, budget, seed=0):
@@ -267,7 +253,7 @@ def test_partitioner_seed_changes_partition_identical_phi(rng, monkeypatch):
     identical."""
     from repro.core import partition as plib
 
-    ce, n = _small(rng, n=32, p=0.3)
+    n, ce = er_graph(rng, n=32, p=0.3)
     oracle = alg2_truss(n, ce)
     budget = max(8, len(ce) // 4)
     captured: list = []
