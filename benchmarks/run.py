@@ -253,6 +253,77 @@ def table4_sharded(smoke: bool = False):
              padding_waste=res_b.stats.padding_waste)
 
 
+def table4_resilience(smoke: bool = False):
+    """Crash-safety cost model (DESIGN.md §12): the batched bottom-up
+    engine with round journaling at ``checkpoint_every=1`` (every completed
+    partition round and class level snapshotted) vs the unjournaled run,
+    plus a fault-injected run (one device OOM in each stage) exercising the
+    retry ladder.
+
+    The ``checkpoint_overhead`` column is the journaled run's wall-clock
+    overhead fraction — the acceptance target is < 0.15 at every-round
+    granularity on the smoke rows; ``retries`` / ``degraded`` /
+    ``checkpoints`` record the recovery counters.  phi is asserted
+    identical across all three runs.
+    """
+    import shutil
+    import tempfile
+
+    from benchmarks.datasets import load
+    from repro.core import faults
+    from repro.core.bottom_up import bottom_up_decompose
+
+    names = ["hep-like"] if smoke else ["hep-like", "amazon-like",
+                                        "wiki-like"]
+    for name in names:
+        n, edges = load(name)
+        budget = max(len(edges) // 32, 1024)
+        usb, res = _time(lambda: bottom_up_decompose(n, edges, budget),
+                         repeats=2)
+
+        def journaled():
+            d = tempfile.mkdtemp(prefix="bench_ckpt_")
+            try:
+                return bottom_up_decompose(n, edges, budget,
+                                           checkpoint_dir=d,
+                                           checkpoint_every=1)
+            finally:
+                shutil.rmtree(d, ignore_errors=True)
+
+        usj, res_j = _time(journaled, repeats=2)
+        assert (res_j.phi == res.phi).all()
+        overhead = max(usj - usb, 0.0) / usb
+        st = res_j.stats
+        emit(f"table4resil_{name}_TDbottomup_journaled", usj,
+             f"checkpoint_overhead={overhead:.3f};"
+             f"checkpoints={st.checkpoints};rounds={res_j.rounds};"
+             f"budget={budget}",
+             m=len(edges), budget=budget, rounds=res_j.rounds,
+             checkpoints=st.checkpoints, checkpoint_overhead=overhead,
+             retries=st.retries, degraded=st.degraded)
+
+        def faulted():
+            plan = faults.FaultPlan([
+                faults.FaultRule(site=faults.DISPATCH, kind="oom",
+                                 where={"stage": 1}, times=1),
+                faults.FaultRule(site=faults.DISPATCH, kind="oom",
+                                 where={"stage": 2}, times=1),
+            ])
+            with faults.active(plan):
+                return bottom_up_decompose(n, edges, budget)
+
+        usf, res_f = _time(faulted)
+        assert (res_f.phi == res.phi).all()
+        st_f = res_f.stats
+        assert st_f.retries >= 2, st_f
+        emit(f"table4resil_{name}_TDbottomup_oom_injected", usf,
+             f"retries={st_f.retries};degraded={st_f.degraded};"
+             f"slowdown_vs_clean={usf/usb:.2f};budget={budget}",
+             m=len(edges), budget=budget, retries=st_f.retries,
+             degraded=st_f.degraded, checkpoints=st_f.checkpoints,
+             slowdown_vs_clean=usf / usb)
+
+
 def table5_top_down():
     from benchmarks.datasets import MEDIUM, load
     from repro.core.bottom_up import bottom_up_decompose
@@ -420,6 +491,7 @@ TABLES = {
     "table4": table4_bottom_up,
     "table4part": table4_partitioners,
     "table4shard": table4_sharded,
+    "table4resil": table4_resilience,
     "table5": table5_top_down,
     "table6": table6_truss_vs_core,
     "peel": peel_engines,
@@ -428,7 +500,8 @@ TABLES = {
 }
 
 # tables that accept smoke= (smallest-dataset variant); shared with hillclimb
-SMOKE_TABLES = ("peel", "table4", "table4part", "table4shard")
+SMOKE_TABLES = ("peel", "table4", "table4part", "table4shard",
+                "table4resil")
 
 
 def main(argv=None) -> None:

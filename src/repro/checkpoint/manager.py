@@ -1,11 +1,24 @@
 """Checkpointing: atomic, keep-k, restart- and reshard-safe.
 
 Format: one directory per step containing ``arrays.npz`` (flattened leaves)
-and ``manifest.json`` (step, tree structure, shapes/dtypes, user metadata).
-Writes go to ``<dir>.tmp`` then ``os.rename`` — a crash mid-write never
-corrupts the latest checkpoint (the fault-tolerance contract the train loop
-relies on).  ``AsyncWriter`` moves serialization off the step path
+and ``manifest.json`` (step, tree structure, shapes/dtypes, payload sha256,
+user metadata).  Writes go to ``<dir>.tmp`` then ``os.rename`` — a crash
+mid-write never corrupts the latest checkpoint (the fault-tolerance
+contract the train loop and the OOC round journal rely on; the
+``"checkpoint-write"`` fault-injection site sits between the payload write
+and the rename so tests can tear the write deterministically,
+DESIGN.md §12).  ``AsyncWriter`` moves serialization off the step path
 (write-behind thread), bounding checkpoint stalls to an array copy.
+
+Integrity: the manifest records the sha256 of ``arrays.npz`` as written, so
+a snapshot whose payload was truncated or bit-rotted *after* the atomic
+rename (torn disk write, partial copy) is detected at restore time —
+``restore(step=None)`` then falls back to the next-newest valid snapshot
+instead of crashing, raising :class:`CheckpointCorruptionError` only when
+no snapshot survives.  Structural mismatches against the caller's ``like``
+tree (leaf count, shapes) raise :class:`CheckpointStructureError` — those
+are caller bugs, not disk corruption, so no fallback is attempted (and
+unlike the bare ``assert``s they replace, they survive ``python -O``).
 
 Elastic re-shard: checkpoints store full (unsharded) arrays; ``restore``
 optionally takes ``shardings`` and ``jax.device_put``s each leaf — loading a
@@ -14,17 +27,35 @@ optionally takes ``shardings`` and ``jax.device_put``s each leaf — loading a
 
 from __future__ import annotations
 
+import hashlib
+import io
 import json
 import os
 import shutil
 import threading
+import warnings
 from typing import Any, Optional
 
 import jax
 import ml_dtypes
 import numpy as np
 
+from repro.core import faults
+
 _EXOTIC = {"bfloat16": (np.uint16, ml_dtypes.bfloat16)}
+
+
+class CheckpointError(RuntimeError):
+    """Base class for checkpoint restore failures."""
+
+
+class CheckpointCorruptionError(CheckpointError):
+    """A snapshot's payload is unreadable or fails its manifest checksum."""
+
+
+class CheckpointStructureError(CheckpointError):
+    """A snapshot does not match the structure of the caller's ``like``
+    tree (leaf count or leaf shape) — a caller/config bug, not corruption."""
 
 
 def _to_savable(arr: np.ndarray) -> np.ndarray:
@@ -40,16 +71,31 @@ def _from_savable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
     return arr
 
 
+def _path_part(k) -> str:
+    # plain names ("sup", "opt/mu/0") instead of jax's "['sup']" reprs, so
+    # a like=None restore yields a tree keyed by the names save() was given
+    for attr in ("key", "name", "idx"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
 def _flatten_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    paths = ["/".join(_path_part(k) for k in path) for path, _ in flat]
     leaves = [leaf for _, leaf in flat]
     return paths, leaves, treedef
 
 
 def save(ckpt_dir: str, step: int, tree: Any, metadata: Optional[dict] = None,
          keep: int = 3) -> str:
-    """Atomic save of a pytree; prunes to the newest ``keep`` checkpoints."""
+    """Atomic save of a pytree; prunes to the newest ``keep`` checkpoints.
+
+    The payload is serialized in memory first so the manifest can record
+    its sha256 — the checksum covers exactly the bytes handed to the OS,
+    letting ``restore`` distinguish "renamed but torn on disk" from a good
+    snapshot.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     tmp = final + ".tmp"
@@ -58,12 +104,21 @@ def save(ckpt_dir: str, step: int, tree: Any, metadata: Optional[dict] = None,
     os.makedirs(tmp)
     paths, leaves, _ = _flatten_with_paths(tree)
     arrays = {f"a{i}": _to_savable(np.asarray(x)) for i, x in enumerate(leaves)}
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    payload = buf.getvalue()
+    npz_path = os.path.join(tmp, "arrays.npz")
+    with open(npz_path, "wb") as f:
+        f.write(payload)
+    # deterministic torn-write / crash injection between payload and commit
+    faults.check(faults.CHECKPOINT_WRITE, step=step, path=npz_path,
+                 dir=ckpt_dir)
     manifest = {
         "step": step,
         "paths": paths,
         "dtypes": [str(np.asarray(x).dtype) for x in leaves],
         "shapes": [list(np.asarray(x).shape) for x in leaves],
+        "arrays_sha256": hashlib.sha256(payload).hexdigest(),
         "metadata": metadata or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -99,31 +154,107 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
+def _load_step(ckpt_dir: str, step: int) -> tuple[list, dict]:
+    """Read + integrity-check one snapshot; returns (leaves, manifest).
+
+    Raises :class:`CheckpointCorruptionError` on any unreadable file or a
+    payload whose sha256 disagrees with the manifest.  Snapshots written
+    before checksums existed (no ``arrays_sha256`` key) load unchecked.
+    """
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptionError(
+            f"checkpoint step {step} under {ckpt_dir}: unreadable manifest "
+            f"({e})") from e
+    npz_path = os.path.join(d, "arrays.npz")
+    try:
+        with open(npz_path, "rb") as f:
+            payload = f.read()
+    except OSError as e:
+        raise CheckpointCorruptionError(
+            f"checkpoint step {step} under {ckpt_dir}: unreadable payload "
+            f"({e})") from e
+    want = manifest.get("arrays_sha256")
+    if want is not None:
+        got = hashlib.sha256(payload).hexdigest()
+        if got != want:
+            raise CheckpointCorruptionError(
+                f"checkpoint step {step} under {ckpt_dir}: arrays.npz sha256 "
+                f"mismatch (manifest {want[:12]}…, on disk {got[:12]}… — "
+                f"truncated or torn write)")
+    try:
+        data = np.load(io.BytesIO(payload))
+        leaves = [_from_savable(data[f"a{i}"], manifest["dtypes"][i])
+                  for i in range(len(manifest["paths"]))]
+    except Exception as e:
+        raise CheckpointCorruptionError(
+            f"checkpoint step {step} under {ckpt_dir}: undecodable payload "
+            f"({e})") from e
+    return leaves, manifest
+
+
+def restore(ckpt_dir: str, like: Any = None, step: Optional[int] = None,
             shardings: Any = None) -> tuple[Any, dict]:
-    """Restore into the structure of ``like`` (shape/dtype validated).
+    """Restore a snapshot; returns ``(tree, metadata)``.
+
+    With ``like`` given, leaves are validated against its structure
+    (:class:`CheckpointStructureError` on leaf-count or shape mismatch) and
+    cast to its leaf dtypes.  With ``like=None`` the snapshot is returned
+    as a flat ``{path: array}`` dict straight from the manifest — the form
+    the OOC round journal uses, where the caller inspects the metadata
+    before deciding what the arrays mean.
+
+    With ``step=None`` (latest), a snapshot that fails its integrity check
+    falls back to the next-newest one (each skip warns), so a torn write of
+    the newest snapshot costs one checkpoint interval of progress instead
+    of the whole run; an explicit ``step`` never falls back.
 
     ``shardings``: optional matching pytree of Sharding — enables elastic
-    re-shard onto a different mesh.  Returns (tree, metadata).
+    re-shard onto a different mesh.
     """
-    if step is None:
-        step = latest_step(ckpt_dir)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    d = os.path.join(ckpt_dir, f"step_{step:010d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(d, "arrays.npz"))
-    leaves = [_from_savable(data[f"a{i}"], manifest["dtypes"][i])
-              for i in range(len(manifest["paths"]))]
+    if step is not None:
+        candidates = [step]
+    else:
+        candidates = sorted(all_steps(ckpt_dir), reverse=True)
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    last_err: Optional[CheckpointCorruptionError] = None
+    leaves = manifest = None
+    for s in candidates:
+        try:
+            leaves, manifest = _load_step(ckpt_dir, s)
+            break
+        except CheckpointCorruptionError as e:
+            last_err = e
+            if step is not None:
+                raise
+            warnings.warn(f"skipping corrupt checkpoint: {e}", stacklevel=2)
+    if manifest is None:
+        raise CheckpointCorruptionError(
+            f"no intact checkpoint under {ckpt_dir} "
+            f"({len(candidates)} candidate(s) failed)") from last_err
+    if like is None:
+        tree = dict(zip(manifest["paths"], leaves))
+        return tree, manifest["metadata"]
     flat_like, treedef = jax.tree_util.tree_flatten(like)
-    assert len(flat_like) == len(leaves), (len(flat_like), len(leaves))
+    if len(flat_like) != len(leaves):
+        raise CheckpointStructureError(
+            f"checkpoint step {manifest['step']} holds {len(leaves)} leaves "
+            f"but the restore target has {len(flat_like)} — wrong tree "
+            f"structure for this checkpoint")
     out = []
     flat_sh = (jax.tree_util.tree_flatten(shardings)[0]
                if shardings is not None else [None] * len(leaves))
-    for ref, arr, sh in zip(flat_like, leaves, flat_sh):
+    for i, (ref, arr, sh) in enumerate(zip(flat_like, leaves, flat_sh)):
         arr = arr.astype(ref.dtype) if hasattr(ref, "dtype") else arr
-        assert tuple(arr.shape) == tuple(ref.shape), (arr.shape, ref.shape)
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise CheckpointStructureError(
+                f"checkpoint step {manifest['step']} leaf "
+                f"{manifest['paths'][i]!r} has shape {tuple(arr.shape)} but "
+                f"the restore target expects {tuple(ref.shape)}")
         out.append(jax.device_put(arr, sh) if sh is not None else arr)
     return jax.tree_util.tree_unflatten(treedef, out), manifest["metadata"]
 

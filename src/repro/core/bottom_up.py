@@ -52,18 +52,57 @@ stage-2 candidate supports are always exact w.r.t. G_new.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import inspect
-from typing import Callable, Iterator, List, Optional, Tuple
+import warnings
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import manager as ckpt
+from repro.core import faults
 from repro.core import graph as glib
 from repro.core import partition as plib
 from repro.core.peel import (local_threshold_peel, peel_classes,
                              peel_classes_batched, peel_threshold)
 from repro.core.support import (list_triangles, list_triangles_np,
                                 support_from_triangle_list)
+
+# The degradation ladder's floor for the per-round working-set budget:
+# halving below this cannot meaningfully shrink a dispatch (a single lane
+# is already ~this size), so at the floor the failure propagates.
+_MIN_ROUND_BUDGET = 64
+
+
+class _RestartRounds(Exception):
+    """Internal control flow of the stage-1 degradation ladder: unwind the
+    round generator and restart it from the journaled host state with a
+    smaller working-set budget (smaller parts => smaller dispatches).  All
+    completed rounds' folds are idempotent scatters, so the restart loses
+    at most the failed round's device work."""
+
+    def __init__(self, budget: int):
+        super().__init__(f"restart partition rounds at budget={budget}")
+        self.budget = budget
+
+
+@dataclasses.dataclass
+class _Engine:
+    """Mutable dispatch configuration shared by a run's device launches.
+
+    The degradation ladder rewrites it in place (``mesh = None`` drops the
+    run to single-device), so every later dispatch — including stage 2 —
+    inherits the degraded routing without re-threading arguments."""
+
+    mesh: object = None
+    mesh_axis: str = "data"
+
+    @property
+    def n_dev(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(self.mesh.shape[self.mesh_axis])
 
 
 def _accepts_round(fn) -> bool:
@@ -145,6 +184,13 @@ class OocStats:
     sharded_rounds: int = 0   # device dispatches (stage-1 partition rounds
     #                           + per-k candidate peels) routed through
     #                           shard_map across the mesh (DESIGN.md §10)
+    retries: int = 0          # failed dispatches re-driven by the retry
+    #                           ladder (lane splits + degraded re-runs)
+    degraded: int = 0         # engine degradations taken: mesh drops +
+    #                           working-set budget halvings (DESIGN.md §12)
+    checkpoints: int = 0      # journal snapshots written this run
+    resumed_round: int = -1   # round/level index of the snapshot this run
+    #                           resumed from (-1: started fresh)
 
     @property
     def tri_routes(self) -> int:
@@ -189,6 +235,18 @@ class OocStats:
         self.ns_sweeps += 1        # build_partition_batch does exactly one
         #                            whole-graph NS sweep + triangle routing
 
+    def as_dict(self) -> Dict[str, int]:
+        """JSON-safe counter snapshot (the journal's metadata form)."""
+        return {f.name: int(getattr(self, f.name))
+                for f in dataclasses.fields(self)}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, int]) -> "OocStats":
+        """Rebuild from :meth:`as_dict` output; unknown keys (snapshots
+        written by a newer layout) are ignored."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: int(v) for k, v in d.items() if k in known})
+
 
 @dataclasses.dataclass
 class LowerBoundResult:
@@ -200,6 +258,96 @@ class LowerBoundResult:
     scans: int               # NS extractions (I/O-scan analogue)
     max_part_edges: int      # largest NS working set seen (budget check)
     stats: Optional[OocStats] = None
+
+
+def _run_key(driver: str, n: int, edges: np.ndarray, budget,
+             partitioner, partitioner_seed: int, **extras) -> str:
+    """Digest binding a journal to one run configuration (DESIGN.md §12).
+
+    Covers the driver, the canonical edge bytes and every parameter that
+    changes the decomposition's trajectory, so ``resume=True`` can never
+    silently continue a snapshot from a different graph or configuration.
+    Callable partitioners hash by name — the best identity available short
+    of bytecode hashing.
+    """
+    pname = (partitioner if isinstance(partitioner, str)
+             else getattr(partitioner, "__name__", "custom"))
+    h = hashlib.sha256()
+    desc = "|".join(
+        [driver, f"n={n}", f"budget={budget}", f"part={pname}",
+         f"seed={partitioner_seed}"]
+        + [f"{k}={v}" for k, v in sorted(extras.items())])
+    h.update(desc.encode())
+    h.update(np.ascontiguousarray(edges, dtype=np.int64).tobytes())
+    return h.hexdigest()[:16]
+
+
+class RoundJournal:
+    """Round-granular snapshot journal over ``checkpoint.manager`` (§12).
+
+    One journal serves one decomposition run.  Each snapshot is a flat
+    ``{name: array}`` tree of host-side round state plus metadata
+    ``{stage, index, run_key, stats, **extra}``; writes go through
+    :func:`checkpoint.manager.save`'s atomic tmp+rename path, so a crash
+    mid-write can never corrupt the newest intact snapshot.  Steps form a
+    monotone sequence continued across resumes (the constructor seeds the
+    counter from the directory), and ``run_key`` is verified at load so a
+    ``checkpoint_dir`` can never silently resume a different run.
+    """
+
+    def __init__(self, ckpt_dir: str, run_key: str, *, every: int = 1,
+                 keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.run_key = run_key
+        self.every = max(1, int(every))
+        self.keep = keep
+        self.seq = int(ckpt.latest_step(ckpt_dir) or 0)
+        self._events = 0
+
+    def record(self, stage: str, index: int, arrays: Dict[str, np.ndarray],
+               stats: OocStats, **extra) -> bool:
+        """Journal one completed unit of work (a partition round or class
+        level); writes every ``every``-th call.  Returns whether a snapshot
+        was written.  The write is synchronous — the device pipeline is
+        already overlapped with host work, and an async journal would leave
+        a window where "completed" rounds are lost on crash."""
+        self._events += 1
+        if self._events % self.every:
+            return False
+        self.seq += 1
+        stats.checkpoints += 1
+        meta = {"stage": stage, "index": int(index),
+                "run_key": self.run_key, "stats": stats.as_dict(), **extra}
+        # narrow i64 -> i32 on the way out (phi/lb/sup are all < 2^31; the
+        # restore paths cast back), halving the dominant snapshot cost
+        arrays = {k: (np.asarray(v).astype(np.int32)
+                      if np.asarray(v).dtype == np.int64 else np.asarray(v))
+                  for k, v in arrays.items()}
+        ckpt.save(self.ckpt_dir, self.seq, dict(arrays), metadata=meta,
+                  keep=self.keep)
+        return True
+
+    def load_latest(self):
+        """``(arrays, meta)`` of the newest intact snapshot, or ``None``
+        when the directory holds no usable one (empty, or every snapshot
+        corrupt — the run then starts fresh, with a warning in the corrupt
+        case).  A ``run_key`` mismatch raises: resuming a different run's
+        journal is a caller error, not a recoverable state."""
+        try:
+            tree, meta = ckpt.restore(self.ckpt_dir)
+        except FileNotFoundError:
+            return None
+        except ckpt.CheckpointCorruptionError as e:
+            warnings.warn(
+                f"no intact snapshot under {self.ckpt_dir!r} ({e}); "
+                f"starting the run from scratch", stacklevel=2)
+            return None
+        if meta.get("run_key") != self.run_key:
+            raise ValueError(
+                f"checkpoint_dir {self.ckpt_dir!r} holds a journal for a "
+                f"different run (run_key {meta.get('run_key')!r} != "
+                f"{self.run_key!r}); refusing to resume")
+        return tree, meta
 
 
 def _local_truss(sub_edges: np.ndarray, n: int) -> np.ndarray:
@@ -231,48 +379,86 @@ def lower_bounding(
     partitioner_seed: int = 0,
     mesh=None,
     mesh_axis: str = "data",
+    journal: Optional[RoundJournal] = None,
+    restored=None,
+    max_retries: int = 2,
+    engine_state: Optional[_Engine] = None,
 ) -> LowerBoundResult:
     """Algorithm 3: per-edge lower bounds + exact round-1 Phi_2.
 
     With a ``mesh``, every round's bucket peels span the mesh axis
     (DESIGN.md §10); requires the batched engine.
+
+    ``journal`` / ``restored`` / ``max_retries`` are the resilience hooks
+    (DESIGN.md §12): a :class:`RoundJournal` snapshots the host-side fold
+    state after each completed round, ``restored`` (an ``(arrays, meta)``
+    pair from :meth:`RoundJournal.load_latest` at stage ``"lb"``) resumes
+    from it, and ``max_retries`` bounds the lane-split retries a failed
+    dispatch gets before the engine degrades.  ``engine_state`` shares one
+    mutable :class:`_Engine` with the caller so a mesh drop here carries
+    into stage 2.  Both engines compute identical bounds, but only the
+    batched engine journals — its per-round state lives in flat host
+    arrays; the per-part seed path is the benchmark baseline.
     """
     part_fn = _resolve_partitioner(partitioner, seed=partitioner_seed)
     edges = glib.canonical_edges(edges, n)
     if engine == "perpart":
         if mesh is not None:
             raise ValueError("mesh= requires the batched engine")
+        if journal is not None or restored is not None:
+            raise ValueError(
+                "checkpointing requires the batched engine "
+                "(engine='perpart' is the uninstrumented seed baseline)")
         return _lower_bounding_perpart(n, edges, budget, part_fn)
     if engine != "batched":
         raise ValueError(f"unknown engine {engine!r}")
     return _lower_bounding_batched(n, edges, budget, part_fn,
-                                   mesh=mesh, mesh_axis=mesh_axis)
+                                   mesh=mesh, mesh_axis=mesh_axis,
+                                   journal=journal, restored=restored,
+                                   max_retries=max_retries,
+                                   engine_state=engine_state)
 
 
 def _partition_rounds(
     n: int, edges: np.ndarray, budget: int, part_fn, stats: OocStats,
     *, with_incidence: bool = True, lane_multiple: int = 1,
-) -> Iterator[Tuple[int, "plib.PartitionBatch", np.ndarray]]:
+    start_ids: Optional[np.ndarray] = None,
+) -> Iterator[Tuple[int, "plib.PartitionBatch", np.ndarray, int]]:
     """Producer side of the double-buffered round pipeline (DESIGN.md §9).
 
-    Yields ``(round_idx, batch, cur_ids)`` per partition round, with
-    ``cur_ids`` mapping the batch's current-graph edge ids to original edge
-    ids.  Which edges a round removes is known at batch-build time (a
-    round's internal edges leave the working graph regardless of their peel
-    results), so the generator applies ``Graph.remove_edges`` and
-    repartitions immediately — the consumer can keep the device busy with
-    round r while this code builds round r + 1 on the host.
+    Yields ``(round_idx, batch, cur_ids, cur_budget)`` per partition round,
+    with ``cur_ids`` mapping the batch's current-graph edge ids to original
+    edge ids and ``cur_budget`` the working-set budget the round was built
+    at (the value a resumed run must restart from, since the stall fallback
+    below mutates it).  Which edges a round removes is known at batch-build
+    time (a round's internal edges leave the working graph regardless of
+    their peel results), so the generator applies ``Graph.remove_edges``
+    and repartitions immediately — the consumer can keep the device busy
+    with round r while this code builds round r + 1 on the host.
+
+    ``start_ids`` restarts the generator from a working graph that is a
+    subset of ``edges`` (the resume and budget-degrade paths, DESIGN.md
+    §12); the default is the full edge list.  Round numbering continues
+    from ``stats.rounds``, which a resumed run restores first.
 
     A round in which no edge became internal (a deterministic-partitioner
     stall; the paper's remedy is the randomized re-partition) doubles the
     working-set budget and yields nothing: with no internal edges a peel
     could not contribute any bound.
     """
-    g = glib.build_graph(n, edges)
-    cur_ids = np.arange(g.m, dtype=np.int64)  # current edge id -> original id
+    if start_ids is None:
+        g = glib.build_graph(n, edges)
+        cur_ids = np.arange(g.m, dtype=np.int64)
+    else:
+        cur_ids = np.asarray(start_ids, dtype=np.int64)
+        g = glib.build_graph(n, edges[cur_ids])
     cur_budget = budget
     while g.m:
         stats.rounds += 1
+        # the host-side "between rounds" fault site: the natural place for
+        # the crash/kill injections the resume tests drive (DESIGN.md §12)
+        faults.check(faults.PARTITIONER, stage=1, round=stats.rounds,
+                     budget=cur_budget)
         parts = part_fn(g, cur_budget, stats.rounds)
         if not parts:
             break
@@ -292,62 +478,204 @@ def _partition_rounds(
         ids_snapshot = cur_ids
         cur_ids = cur_ids[~removed]
         g = g.remove_edges(removed)
-        yield stats.rounds, batch, ids_snapshot
+        yield stats.rounds, batch, ids_snapshot, cur_budget
+
+
+def _retry_stage1_round(eng: _Engine, stats: OocStats, shape_cache,
+                        round_idx: int, batch, ids, fold_bucket, exc,
+                        cur_budget: int, max_retries: int) -> None:
+    """Blocking retry ladder for a failed stage-1 round (DESIGN.md §12).
+
+    The failed dispatch's donated device buffers are gone — a poisoned
+    :class:`~repro.core.peel.PendingPeel` can never be re-finalized — but
+    the :class:`~repro.core.partition.PartBucket` host arrays survive the
+    donation, so the round is rebuilt by re-dispatching them.  The ladder,
+    engaged only for retryable failures (:func:`faults.is_retryable`):
+
+    1. lane-split retries — re-dispatch each bucket as
+       ``split_bucket_lanes`` sub-buckets (split 2, then 4, … up to
+       ``max_retries`` doublings), halving the device-resident footprint
+       per launch each time;
+    2. mesh drop — retire the sharded dispatch for the rest of the run
+       (``eng.mesh = None``; per-shard overheads are gone and the smallest
+       single-device launch is strictly smaller than a shard's slice);
+    3. budget halving — raise :class:`_RestartRounds` so the driver
+       restarts the round loop from the journaled host state with half the
+       working-set budget (smaller parts => smaller buckets), down to
+       ``_MIN_ROUND_BUDGET``; below the floor the failure propagates.
+
+    Folds re-applied by a retry are idempotent (``lb`` is a running max,
+    ``phi``/``in_gnew``/``alive`` are set-to-constant scatters), so a retry
+    that failed halfway through folding simply re-folds everything.
+    """
+    split = 1
+    while True:
+        if not faults.is_retryable(exc):
+            raise exc
+        stats.retries += 1
+        if split < (1 << max_retries):
+            split *= 2
+        elif eng.mesh is not None:
+            eng.mesh = None
+            stats.degraded += 1
+        else:
+            if cur_budget <= _MIN_ROUND_BUDGET:
+                raise exc
+            stats.degraded += 1
+            raise _RestartRounds(max(cur_budget // 2, _MIN_ROUND_BUDGET))
+        try:
+            for bi, bucket in enumerate(batch.buckets):
+                for si, sub in enumerate(
+                        plib.split_bucket_lanes(bucket, split)):
+                    # a sub-bucket whose lane count no longer divides the
+                    # mesh axis runs single-device (the point is a smaller
+                    # footprint, not preserving the routing)
+                    mesh = (eng.mesh if eng.mesh is not None
+                            and sub.n_lanes % eng.n_dev == 0 else None)
+                    h = peel_classes_batched(
+                        sub.sup, sub.tris, sub.indptr, sub.tids, sub.alive,
+                        shape_cache=shape_cache, blocking=False,
+                        mesh=mesh, mesh_axis=eng.mesh_axis,
+                        fault_ctx={"stage": 1, "round": round_idx,
+                                   "bucket": bi, "sub": si, "retry": split})
+                    stats.compiles += int(h.new_compile)
+                    stats.batches += 1
+                    phi_b, _ = h.result()
+                    fold_bucket(round_idx, sub, ids, np.asarray(phi_b))
+            return
+        except Exception as e:
+            exc = e
 
 
 def _lower_bounding_batched(n, edges, budget, part_fn, mesh=None,
-                            mesh_axis: str = "data") -> LowerBoundResult:
+                            mesh_axis: str = "data",
+                            journal: Optional[RoundJournal] = None,
+                            restored=None, max_retries: int = 2,
+                            engine_state: Optional[_Engine] = None,
+                            ) -> LowerBoundResult:
     m = len(edges)
     phi = np.zeros(m, dtype=np.int64)
     lb = np.full(m, 2, dtype=np.int64)
     in_gnew = np.zeros(m, dtype=bool)
+    alive = np.ones(m, dtype=bool)        # still in the working graph
     stats = OocStats()
-    n_dev = int(mesh.shape[mesh_axis]) if mesh is not None else 1
-    stats.devices = n_dev
+    eng = engine_state if engine_state is not None else _Engine(
+        mesh=mesh, mesh_axis=mesh_axis)
+    stats.devices = eng.n_dev
+    start_budget = budget
+    if restored is not None:
+        # resume from a journaled "lb" snapshot: the fold state is four
+        # flat arrays over original edge ids; the working graph is
+        # edges[alive] (fresh ranks are fine — phi is exact under any
+        # partition sequence, DESIGN.md §12)
+        tree, meta = restored
+        phi = tree["phi"].astype(np.int64)
+        lb = tree["lb"].astype(np.int64)
+        in_gnew = tree["in_gnew"].astype(bool)
+        alive = tree["alive"].astype(bool)
+        stats = OocStats.from_dict(meta["stats"])
+        stats.resumed_round = int(meta["index"])
+        stats.devices = eng.n_dev
+        start_budget = int(meta.get("cur_budget", budget))
     shape_cache: set = set()
 
-    def consume(round_idx, batch, ids, handles):
-        """Blocking half: fold one round's peel results into lb/phi."""
-        for bucket, handle in zip(batch.buckets, handles):
-            phi_b, _ = handle.result()
-            # internal edges live in exactly one part, so flat scatters are
-            # collision-free; lb takes the max anyway (Lemma 1 is a bound)
-            int_mask = bucket.internal
-            ids_int = bucket.edge_ids[int_mask]          # current-graph ids
-            phi_int = phi_b[int_mask].astype(np.int64)
-            glob = ids[ids_int]
-            np.maximum.at(lb, glob, phi_int)
-            if round_idx == 1:
-                # Exact Phi_2: internal support == global support in G here.
-                is2 = phi_int == 2
-                phi[glob[is2]] = 2
-                in_gnew[glob[~is2]] = True
-            else:
-                in_gnew[glob] = True
+    def fold_bucket(round_idx, bucket, ids, phi_b):
+        """Fold one bucket's peel results into lb/phi/in_gnew/alive.
+
+        Internal edges live in exactly one part, so the flat scatters are
+        collision-free; every scatter is idempotent (lb is a max, the rest
+        set constants), which is what lets the retry ladder re-fold."""
+        int_mask = bucket.internal
+        ids_int = bucket.edge_ids[int_mask]          # current-graph ids
+        phi_int = phi_b[int_mask].astype(np.int64)
+        glob = ids[ids_int]
+        np.maximum.at(lb, glob, phi_int)
+        if round_idx == 1:
+            # Exact Phi_2: internal support == global support in G here.
+            is2 = phi_int == 2
+            phi[glob[is2]] = 2
+            in_gnew[glob[~is2]] = True
+        else:
+            in_gnew[glob] = True
+        alive[glob] = False
+
+    def consume(pending):
+        """Blocking half: land one round's folds, retrying on failure,
+        then journal the completed round."""
+        round_idx, batch, ids, handles, cur_b = pending
+        try:
+            for bucket, handle in zip(batch.buckets, handles):
+                phi_b, _ = handle.result()
+                fold_bucket(round_idx, bucket, ids, np.asarray(phi_b))
+        except Exception as exc:
+            _retry_stage1_round(eng, stats, shape_cache, round_idx, batch,
+                                ids, fold_bucket, exc, cur_b, max_retries)
+        if journal is not None:
+            journal.record("lb", round_idx,
+                           {"phi": phi, "lb": lb, "in_gnew": in_gnew,
+                            "alive": alive},
+                           stats, cur_budget=int(cur_b))
 
     # Double-buffered rounds: dispatch round r non-blocking, then let the
     # generator build round r + 1 (NS sweep, triangle routing, lane packing)
     # while the device peels r; consume r's results one round late.  With a
     # mesh the same pipeline holds pod-wide: the handles are shard_map
     # dispatches whose lanes span the mesh axis (DESIGN.md §10).
-    pending = None
-    for round_idx, batch, ids in _partition_rounds(
-            n, edges, budget, part_fn, stats, lane_multiple=n_dev):
-        handles = []
-        for bucket in batch.buckets:
-            h = peel_classes_batched(
-                bucket.sup, bucket.tris, bucket.indptr, bucket.tids,
-                bucket.alive, shape_cache=shape_cache, blocking=False,
-                mesh=mesh, mesh_axis=mesh_axis)
-            stats.compiles += int(h.new_compile)
-            handles.append(h)
-        stats.sharded_rounds += int(any(h.sharded for h in handles))
-        if pending is not None:
-            stats.overlapped += 1
-            consume(*pending)
-        pending = (round_idx, batch, ids, handles)
-    if pending is not None:
-        consume(*pending)
+    #
+    # The outer loop is the budget-degrade restart (DESIGN.md §12): when
+    # the retry ladder exhausts lane splits and the mesh drop, it raises
+    # _RestartRounds and the round generator is rebuilt from the fold
+    # state's alive mask at the smaller budget.  ``alive`` only changes in
+    # fold_bucket, so an un-folded round's edges are all still present —
+    # the restart re-partitions (and re-peels) exactly the unfinished work.
+    while True:
+        start_ids = np.nonzero(alive)[0]
+        if not len(start_ids):
+            break
+        pending = None
+        try:
+            for round_idx, batch, ids, cur_b in _partition_rounds(
+                    n, edges, start_budget, part_fn, stats,
+                    lane_multiple=eng.n_dev, start_ids=start_ids):
+                try:
+                    handles = []
+                    for bi, bucket in enumerate(batch.buckets):
+                        h = peel_classes_batched(
+                            bucket.sup, bucket.tris, bucket.indptr,
+                            bucket.tids, bucket.alive,
+                            shape_cache=shape_cache, blocking=False,
+                            mesh=eng.mesh, mesh_axis=eng.mesh_axis,
+                            fault_ctx={"stage": 1, "round": round_idx,
+                                       "bucket": bi, "retry": 0})
+                        stats.compiles += int(h.new_compile)
+                        handles.append(h)
+                    stats.sharded_rounds += int(
+                        any(h.sharded for h in handles))
+                except Exception as exc:
+                    # the failed dispatch is dead, but the PREVIOUS round's
+                    # handles are fine: land those folds first so a budget
+                    # restart below cannot lose a completed round
+                    if pending is not None:
+                        consume(pending)
+                        pending = None
+                    _retry_stage1_round(eng, stats, shape_cache, round_idx,
+                                        batch, ids, fold_bucket, exc,
+                                        cur_b, max_retries)
+                    if journal is not None:
+                        journal.record("lb", round_idx,
+                                       {"phi": phi, "lb": lb,
+                                        "in_gnew": in_gnew, "alive": alive},
+                                       stats, cur_budget=int(cur_b))
+                    continue
+                if pending is not None:
+                    stats.overlapped += 1
+                    consume(pending)
+                pending = (round_idx, batch, ids, handles, cur_b)
+            if pending is not None:
+                consume(pending)
+            break
+        except _RestartRounds as r:
+            start_budget = r.budget
 
     return LowerBoundResult(
         edges=edges, phi=phi, lb=lb, in_gnew=in_gnew, rounds=stats.rounds,
@@ -416,6 +744,35 @@ class BottomUpResult:
     stats: Optional[OocStats] = None
 
 
+def _retry_candidate_peel(eng: _Engine, stats: OocStats, exc, dispatch,
+                          max_retries: int = 2):
+    """Blocking retry ladder for a failed stage-2 / top-down candidate peel
+    (DESIGN.md §12).  The candidate's host arrays survive the donation, so
+    a retry is a plain re-dispatch of the same level (``dispatch(retry,
+    eng)`` must dispatch blocking and return the folded result).  After
+    ``max_retries`` failures the mesh is dropped — single-device is the
+    memory floor for a candidate peel, whose size is set by the k-class
+    structure rather than the round budget — and the retry budget resets
+    once on the degraded engine; then the failure propagates.
+    """
+    attempt = 0
+    while True:
+        if not faults.is_retryable(exc):
+            raise exc
+        stats.retries += 1
+        attempt += 1
+        if attempt > max_retries:
+            if eng.mesh is None:
+                raise exc
+            eng.mesh = None
+            stats.degraded += 1
+            attempt = 0
+        try:
+            return dispatch(attempt, eng)
+        except Exception as e:
+            exc = e
+
+
 def bottom_up_decompose(
     n: int,
     edges: np.ndarray,
@@ -426,6 +783,11 @@ def bottom_up_decompose(
     partitioner_seed: int = 0,
     mesh=None,
     mesh_axis: str = "data",
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 1,
+    resume: bool = False,
+    checkpoint_keep: int = 3,
+    max_retries: int = 2,
 ) -> BottomUpResult:
     """Algorithm 4: full decomposition under a working-set budget.
 
@@ -435,16 +797,64 @@ def bottom_up_decompose(
     ``OocStats.devices`` / ``sharded_rounds`` record the routing.
     ``partitioner_seed`` offsets the randomized partitioner's per-round
     reseed (ignored by the deterministic splitters).
+
+    ``checkpoint_dir`` enables the round journal (DESIGN.md §12): every
+    ``checkpoint_every``-th completed stage-1 round ("lb" snapshots) and
+    stage-2 level ("s2" snapshots) is written through the atomic
+    checkpoint path, keeping the newest ``checkpoint_keep``; with
+    ``resume=True`` the newest intact snapshot whose run_key matches this
+    configuration is restored and the run continues — φ is bit-identical
+    to an uninterrupted run.  ``max_retries`` bounds the lane-split
+    retries a retryable dispatch failure gets before the engine degrades
+    (mesh drop, then budget halving); ``OocStats.retries / degraded /
+    checkpoints / resumed_round`` record all of it.
     """
-    lbres = lower_bounding(n, edges, budget, partitioner, engine=engine,
-                           partitioner_seed=partitioner_seed,
-                           mesh=mesh, mesh_axis=mesh_axis)
-    edges = lbres.edges
-    phi = lbres.phi.copy()
-    lb = lbres.lb
-    remaining = lbres.in_gnew.copy()
+    journal = None
+    snap = None
+    if checkpoint_dir is not None:
+        if engine != "batched":
+            raise ValueError(
+                "checkpointing requires the batched engine "
+                "(engine='perpart' is the uninstrumented seed baseline)")
+        edges = glib.canonical_edges(edges, n)
+        key = _run_key("bottom_up", n, edges, budget, partitioner,
+                       partitioner_seed, devices=(
+                           int(mesh.shape[mesh_axis]) if mesh is not None
+                           else 1))
+        journal = RoundJournal(checkpoint_dir, key, every=checkpoint_every,
+                               keep=checkpoint_keep)
+        if resume:
+            snap = journal.load_latest()
+
+    eng = _Engine(mesh=mesh, mesh_axis=mesh_axis)
+    if snap is not None and snap[1]["stage"] == "s2":
+        # stage 1 is complete in the snapshot; rebuild the stage-2 state
+        # directly and skip the partition rounds entirely
+        tree, meta = snap
+        edges = glib.canonical_edges(edges, n)
+        phi = tree["phi"].astype(np.int64)
+        lb = tree["lb"].astype(np.int64)
+        remaining = tree["remaining"].astype(bool)
+        stats = OocStats.from_dict(meta["stats"])
+        stats.resumed_round = int(meta["index"])
+        stats.devices = eng.n_dev
+        k0 = int(meta["index"]) + 1     # the journaled level is complete
+        lbres = None
+    else:
+        k0 = 2
+        lbres = lower_bounding(
+            n, edges, budget, partitioner, engine=engine,
+            partitioner_seed=partitioner_seed, mesh=mesh,
+            mesh_axis=mesh_axis, journal=journal,
+            restored=snap if snap is not None
+            and snap[1]["stage"] == "lb" else None,
+            max_retries=max_retries, engine_state=eng)
+        edges = lbres.edges
+        phi = lbres.phi.copy()
+        lb = lbres.lb
+        remaining = lbres.in_gnew.copy()
+        stats = lbres.stats
     cand_sizes: List[int] = []
-    stats = lbres.stats
     shape_cache: set = set()
 
     def candidate_masks(k_b: int):
@@ -493,7 +903,7 @@ def bottom_up_decompose(
         tris = np.asarray(list_triangles(sub), np.int32).reshape(-1, 3)
         return k_b, h_ids, tris, internal
 
-    k = 2
+    k = k0
     pre = None          # candidate pre-built while the previous level peeled
     while remaining.any():
         # Skip empty classes: no remaining edge admits class < min lb, so
@@ -536,25 +946,55 @@ def bottom_up_decompose(
                     tris[t_alive], len(h_ids)).astype(np.int32)
             else:
                 sup = np.zeros(len(h_ids), np.int32)
-            handle = local_threshold_peel(
-                sup, tris, internal[h_ids], k - 2, alive0=alive_h,
-                shape_cache=shape_cache, blocking=False, mesh=mesh,
-                mesh_axis=mesh_axis)
-            stats.compiles += int(handle.new_compile)
-            stats.batches += 1
-            stats.sharded_rounds += int(handle.sharded)
+            handle = dispatch_exc = None
+            try:
+                handle = local_threshold_peel(
+                    sup, tris, internal[h_ids], k - 2, alive0=alive_h,
+                    shape_cache=shape_cache, blocking=False, mesh=eng.mesh,
+                    mesh_axis=eng.mesh_axis,
+                    fault_ctx={"stage": 2, "k": int(k), "retry": 0})
+                stats.compiles += int(handle.new_compile)
+                stats.batches += 1
+                stats.sharded_rounds += int(handle.sharded)
+            except Exception as exc:
+                dispatch_exc = exc      # enters the retry ladder below
             # pipeline: extract + compact level k+1's candidate on the host
             # while the device peels level k (DESIGN.md §11)
             pre = build_candidate(k + 1)
-            _, removed = handle.result()
+            try:
+                if dispatch_exc is not None:
+                    raise dispatch_exc
+                _, removed = handle.result()
+            except Exception as exc:
+                # the level's host inputs survive the donation: re-dispatch
+                # through the retry ladder (DESIGN.md §12)
+                def redispatch(retry, e, _k=k, _sup=sup, _tris=tris,
+                               _rm=internal[h_ids], _alive=alive_h):
+                    h = local_threshold_peel(
+                        _sup, _tris, _rm, _k - 2, alive0=_alive,
+                        shape_cache=shape_cache, blocking=False,
+                        mesh=e.mesh, mesh_axis=e.mesh_axis,
+                        fault_ctx={"stage": 2, "k": int(_k),
+                                   "retry": retry})
+                    stats.compiles += int(h.new_compile)
+                    stats.batches += 1
+                    _, rem = h.result()
+                    return rem
+
+                removed = _retry_candidate_peel(eng, stats, exc, redispatch,
+                                                max_retries)
         rm_glob = h_ids[removed]
         phi[rm_glob] = k
         remaining[rm_glob] = False
+        if journal is not None:
+            journal.record("s2", k,
+                           {"phi": phi, "lb": lb, "remaining": remaining},
+                           stats)
         k += 1
 
     kmax = int(phi.max()) if len(phi) else 2
     return BottomUpResult(
-        edges=edges, phi=phi, kmax=kmax, rounds=lbres.rounds,
+        edges=edges, phi=phi, kmax=kmax, rounds=stats.rounds,
         scans=stats.scans, candidate_sizes=cand_sizes, stats=stats,
     )
 
@@ -570,6 +1010,8 @@ def partitioned_support(
     partitioner_seed: int = 0,
     mesh=None,
     mesh_axis: str = "data",
+    journal: Optional[RoundJournal] = None,
+    restored=None,
 ):
     """Exact sup(e) w.r.t. the FULL graph, computed under a working-set
     budget (triangle-credit variant of Algorithm 3 used by the top-down
@@ -587,17 +1029,38 @@ def partitioned_support(
     and a ``mesh`` only records ``OocStats.devices`` for the caller
     (top-down threads it here so one stats object describes both stages —
     the credit scatters themselves are host-side and never span the mesh).
+
+    ``journal`` / ``restored`` (batched engine only) snapshot the credit
+    state after each completed round as ``"sup"``-stage snapshots and
+    resume from one (DESIGN.md §12): the exactly-once crediting invariant
+    is per-working-graph, so restarting the rounds from the journaled
+    ``alive`` mask re-credits nothing — rounds after the snapshot were
+    never folded into the journaled ``sup``.
     """
     part_fn = _resolve_partitioner(partitioner, seed=partitioner_seed)
     edges = glib.canonical_edges(edges, n)
     m = len(edges)
     sup = np.zeros(m, dtype=np.int64)
+    alive = np.ones(m, dtype=bool)
     stats = OocStats()
     if mesh is not None:
         if engine == "perpart":
             raise ValueError("mesh= requires the batched engine")
         stats.devices = int(mesh.shape[mesh_axis])
     cur_budget = budget
+    if restored is not None:
+        if engine == "perpart":
+            raise ValueError(
+                "checkpointing requires the batched engine "
+                "(engine='perpart' is the uninstrumented seed baseline)")
+        tree, meta = restored
+        sup = tree["sup"].astype(np.int64)
+        alive = tree["alive"].astype(bool)
+        dev = stats.devices
+        stats = OocStats.from_dict(meta["stats"])
+        stats.resumed_round = int(meta["index"])
+        stats.devices = dev
+        cur_budget = int(meta.get("cur_budget", budget))
 
     if engine == "perpart":
         alive = np.ones(m, dtype=bool)
@@ -633,19 +1096,27 @@ def partitioned_support(
     # The triangle-credit counter is all host-side scatters (no device
     # peel), so the shared round generator is consumed directly — same
     # incremental maintenance and stall fallback as the peeling driver.
-    for _round_idx, batch, ids in _partition_rounds(
-            n, edges, cur_budget, part_fn, stats, with_incidence=False):
-        for bucket in batch.buckets:
-            B = bucket.n_lanes
-            # local triangle ids -> parent edge ids, lane-wise; the drop
-            # slot cap_e maps to -1, so padding rows vanish with the mask
-            eid_pad = np.concatenate(
-                [bucket.edge_ids, np.full((B, 1), -1, np.int64)], axis=1)
-            lane = np.arange(B)[:, None, None]
-            parent = eid_pad[lane, bucket.tris]          # (B, cap_t, 3)
-            real = parent[:, :, 0] >= 0
-            trip = parent[real]
-            if len(trip):
-                np.add.at(sup, ids[trip.reshape(-1)], 1)
+    start_ids = np.nonzero(alive)[0]
+    if len(start_ids):
+        for round_idx, batch, ids, cur_b in _partition_rounds(
+                n, edges, cur_budget, part_fn, stats, with_incidence=False,
+                start_ids=start_ids):
+            for bucket in batch.buckets:
+                B = bucket.n_lanes
+                # local triangle ids -> parent edge ids, lane-wise; the drop
+                # slot cap_e maps to -1, so padding rows vanish with the mask
+                eid_pad = np.concatenate(
+                    [bucket.edge_ids, np.full((B, 1), -1, np.int64)], axis=1)
+                lane = np.arange(B)[:, None, None]
+                parent = eid_pad[lane, bucket.tris]          # (B, cap_t, 3)
+                real = parent[:, :, 0] >= 0
+                trip = parent[real]
+                if len(trip):
+                    np.add.at(sup, ids[trip.reshape(-1)], 1)
+                alive[ids[bucket.edge_ids[bucket.internal]]] = False
+            if journal is not None:
+                journal.record("sup", round_idx,
+                               {"sup": sup, "alive": alive}, stats,
+                               cur_budget=int(cur_b))
 
     return (sup, stats) if with_stats else sup

@@ -28,16 +28,30 @@ Int = np.int32
 
 
 def canonical_edges(edges: np.ndarray, n: Optional[int] = None) -> np.ndarray:
-    """Canonicalize an edge list: undirected, simple, u < v, lex-sorted."""
+    """Canonicalize an edge list: undirected, simple, u < v, lex-sorted.
+
+    Vertex ids are validated: negatives always raise, and with an explicit
+    ``n`` any id >= n raises — the ``u * n + v`` dedup key below is
+    injective only for ids in [0, n), so an out-of-range id would silently
+    fold distinct edges together (and decode to garbage) instead of
+    failing loudly.
+    """
     edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
     if edges.size == 0:
         return np.zeros((0, 2), dtype=Int)
+    if int(edges.min()) < 0:
+        raise ValueError(
+            f"edge list contains negative vertex id {int(edges.min())}")
     u = np.minimum(edges[:, 0], edges[:, 1])
     v = np.maximum(edges[:, 0], edges[:, 1])
     keep = u != v  # drop self loops
     u, v = u[keep], v[keep]
     if n is None:
         n = int(v.max()) + 1 if v.size else 0
+    elif v.size and int(v.max()) >= n:
+        raise ValueError(
+            f"edge list references vertex id {int(v.max())} but n={n}; "
+            f"vertex ids must lie in [0, n)")
     key = u * np.int64(n) + v
     key = np.unique(key)
     out = np.stack([key // n, key % n], axis=1)

@@ -499,6 +499,43 @@ class PartitionBatch:
         return self.tri_assigned / self.tri_total if self.tri_total else 1.0
 
 
+def split_bucket_lanes(bucket: PartBucket, factor: int) -> List[PartBucket]:
+    """Split a bucket along its lane axis into up to ``factor`` sub-buckets.
+
+    Lanes are independent subproblems — each lane's triangles and incidence
+    CSR reference only its own slots — so dispatching the sub-buckets one
+    at a time is peel-equivalent to the single dispatch while cutting the
+    device-resident footprint per launch by ``factor``.  This is the
+    lane-split rung of the OOC retry ladder (DESIGN.md §12): after a device
+    OOM the round's host arrays (which survive the donation) are re-peeled
+    in smaller launches.  ``factor`` is clamped to the lane count; pow2
+    factors keep sub-bucket lane counts on the pow2 shape grid, so a retry
+    costs at most a handful of extra compiles.
+    """
+    B = bucket.n_lanes
+    factor = max(1, min(int(factor), B))
+    if factor == 1:
+        return [bucket]
+    step = -(-B // factor)
+    out: List[PartBucket] = []
+    for lo in range(0, B, step):
+        hi = min(lo + step, B)
+        eid = bucket.edge_ids[lo:hi]
+        part = bucket.part_of[lo:hi]
+        live_parts = np.unique(part[part >= 0])
+        out.append(PartBucket(
+            cap_e=bucket.cap_e, cap_t=bucket.cap_t,
+            n_parts=int(len(live_parts)),
+            n_real_lanes=int(max(0, min(hi, bucket.n_real_lanes) - lo)),
+            sup=bucket.sup[lo:hi], tris=bucket.tris[lo:hi],
+            alive=bucket.alive[lo:hi], indptr=bucket.indptr[lo:hi],
+            tids=bucket.tids[lo:hi], edge_ids=eid,
+            internal=bucket.internal[lo:hi], part_of=part,
+            real_edges=int((eid >= 0).sum()),
+        ))
+    return out
+
+
 def assign_triangles(
     g: Graph, tris: np.ndarray, part_of: np.ndarray
 ) -> np.ndarray:

@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults
 from repro.core.support import (_pow2_ceil, _pow4_ceil, list_triangles_np,
                                 support_from_triangle_list,
                                 triangle_incidence_np)
@@ -435,12 +436,19 @@ class PendingPeel:
     re-invoked — the kernel would read donated (dead) memory.  A failing
     :meth:`result` raises the original error once and poisons the handle;
     later calls raise a ``RuntimeError`` chained to that error.
+
+    ``fault_ctx`` (optional) names this dispatch at the ``"finalize"``
+    fault-injection site (DESIGN.md §12): an injected failure there lands
+    inside the consume path exactly like a real asynchronous device error
+    surfacing at block time, and poisons the handle the same way.
     """
 
-    def __init__(self, finalize, new_compile: bool, sharded: bool = False):
+    def __init__(self, finalize, new_compile: bool, sharded: bool = False,
+                 fault_ctx: Optional[dict] = None):
         self._finalize = finalize
         self.new_compile = bool(new_compile)
         self.sharded = bool(sharded)
+        self._fault_ctx = fault_ctx
         self._out = None
         self._error = None
 
@@ -453,6 +461,8 @@ class PendingPeel:
         if self._finalize is not None:
             finalize, self._finalize = self._finalize, None
             try:
+                if self._fault_ctx is not None:
+                    faults.check(faults.FINALIZE, **self._fault_ctx)
                 self._out = finalize()
             except BaseException as e:
                 self._error = e
@@ -462,7 +472,8 @@ class PendingPeel:
 
 def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
                          *, shape_cache=None, blocking=True,
-                         mesh=None, mesh_axis: str = "data"):
+                         mesh=None, mesh_axis: str = "data",
+                         fault_ctx: Optional[dict] = None):
     """Local trussness of every NS lane of one bucket in ONE device call.
 
     Arrays are the (B, cap_e)-padded stacks a ``partition.PartBucket``
@@ -492,9 +503,15 @@ def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
     ``sharded`` flag records the routing.  Triangle-free buckets still
     short-circuit on host (nothing to shard).
 
+    ``fault_ctx`` names this call at the ``"dispatch"`` fault-injection
+    site (and its handle at ``"finalize"``, DESIGN.md §12); ``None`` (the
+    default) skips both hooks.
+
     Returns (phi (B, cap_e) int32 ndarray, stats (B, N_STATS) ndarray,
     newly_compiled bool) when blocking.
     """
+    if fault_ctx is not None:
+        faults.check(faults.DISPATCH, **fault_ctx)
     cap_e = int(sup_b.shape[1])
     n_inc = int(tids_b.shape[1])
     tris_np = np.asarray(tris_b)
@@ -504,7 +521,7 @@ def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
         phi = np.where(np.asarray(alive_b), 2, 0).astype(np.int32)
         st = np.zeros(tris_np.shape[:1] + (N_STATS,), np.int32)
         if not blocking:
-            return PendingPeel(lambda: (phi, st), False)
+            return PendingPeel(lambda: (phi, st), False, fault_ctx=fault_ctx)
         return phi, st, False
     # frontier capacities: local decompositions peel every lane to EMPTY,
     # so total frontier throughput matters more than per-round width — the
@@ -541,7 +558,8 @@ def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
             return np.asarray(phi_d)[:B], np.asarray(st_d)[:B]
 
         if not blocking:
-            return PendingPeel(_finish, new, sharded=True)
+            return PendingPeel(_finish, new, sharded=True,
+                               fault_ctx=fault_ctx)
         phi, st = _finish()
         return phi, st, new
     key = (sup_b.shape, tris_b.shape, cap_f, cap_t)
@@ -553,13 +571,15 @@ def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
         jnp.asarray(tids_b), jnp.asarray(alive_b),
         cap_f=cap_f, cap_t=cap_t)
     if not blocking:
-        return PendingPeel(lambda: (np.asarray(phi), np.asarray(st)), new)
+        return PendingPeel(lambda: (np.asarray(phi), np.asarray(st)), new,
+                           fault_ctx=fault_ctx)
     return np.asarray(phi), np.asarray(st), new
 
 
 def local_threshold_peel(sup0, tris, removable, thresh, *, alive0=None,
                          shape_cache=None, blocking=True, mesh=None,
-                         mesh_axis: str = "data"):
+                         mesh_axis: str = "data",
+                         fault_ctx: Optional[dict] = None):
     """Single-level peel of a COMPACTED candidate subgraph on padded shapes.
 
     The out-of-core k-class extraction (bottom-up Procedure 5, top-down
@@ -586,9 +606,15 @@ def local_threshold_peel(sup0, tris, removable, thresh, *, alive0=None,
     (``distributed.local_threshold_peel_sharded``, DESIGN.md §10); the
     handle's ``sharded`` flag records the routing.
 
+    ``fault_ctx`` names this call at the ``"dispatch"`` fault-injection
+    site (and its handle at ``"finalize"``, DESIGN.md §12); ``None`` (the
+    default) skips both hooks.
+
     Returns (alive_mask (m,), removed_mask (m,), newly_compiled bool)
     when blocking.
     """
+    if fault_ctx is not None:
+        faults.check(faults.DISPATCH, **fault_ctx)
     m = int(len(sup0))
     T = int(len(tris))
     alive0 = (np.ones(m, bool) if alive0 is None
@@ -599,7 +625,8 @@ def local_threshold_peel(sup0, tris, removable, thresh, *, alive0=None,
         removed = removable & (np.asarray(sup0) <= thresh)
         alive_out = alive0 & ~removed
         if not blocking:
-            return PendingPeel(lambda: (alive_out, removed), False)
+            return PendingPeel(lambda: (alive_out, removed), False,
+                               fault_ctx=fault_ctx)
         return alive_out, removed, False
     # pow4 capacities: consecutive k levels shrink the candidate slowly, so
     # the coarser grid makes most of a run's peels share one compiled shape
@@ -634,7 +661,8 @@ def local_threshold_peel(sup0, tris, removable, thresh, *, alive0=None,
             return alive, alive0 & ~alive
 
         if not blocking:
-            return PendingPeel(_finish_sharded, new, sharded=True)
+            return PendingPeel(_finish_sharded, new, sharded=True,
+                               fault_ctx=fault_ctx)
         alive, removed = _finish_sharded()
         return alive, removed, new
     indptr, tids = triangle_incidence_np(tris_p, cap_e)
@@ -658,7 +686,7 @@ def local_threshold_peel(sup0, tris, removable, thresh, *, alive0=None,
         return alive, alive0 & ~alive
 
     if not blocking:
-        return PendingPeel(_finish, new)
+        return PendingPeel(_finish, new, fault_ctx=fault_ctx)
     alive, removed = _finish()
     return alive, removed, new
 
@@ -794,7 +822,9 @@ def estimate_working_set(g) -> int:
 def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
                     memory_budget=None, partitioner: str = "sequential",
                     partitioner_seed: int = 0, mesh=None,
-                    mesh_axis: str = "data", with_stats: bool = False):
+                    mesh_axis: str = "data", with_stats: bool = False,
+                    checkpoint_dir=None, checkpoint_every: int = 1,
+                    resume: bool = False, max_retries: int = 2):
     """End-to-end decomposition — the unified host entry point.
 
     ``engine``:
@@ -815,9 +845,22 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
     peels triangle-sharded.  The in-memory engines are single-program and
     ignore it (``distributed.peel_classes_sharded`` is their mesh form).
 
+    ``checkpoint_dir`` enables the out-of-core engines' round journal
+    (DESIGN.md §12): every ``checkpoint_every``-th completed partition
+    round / class level snapshots the host-side state through
+    ``checkpoint.manager.save``'s atomic tmp+rename path, and
+    ``resume=True`` restores the latest intact snapshot and continues,
+    producing φ bit-identical to an uninterrupted run.  ``max_retries``
+    bounds the lane-split retries a device OOM gets before the engine
+    degrades (mesh drop, then smaller rounds).  The in-memory engines run
+    in one device call and have nothing to journal — a ``checkpoint_dir``
+    that ends up routed to them warns and is ignored.
+
     With ``with_stats`` the second return value is a :class:`PeelStats`
     (in-memory frontier), ``None`` (dense), or an ``OocStats`` (out-of-core).
     """
+    import warnings
+
     from repro.core.graph import build_graph
 
     if memory_budget is not None and memory_budget <= 0:
@@ -849,16 +892,28 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
             res = bottom_up_decompose(n, edges, part_budget,
                                       partitioner=partitioner,
                                       partitioner_seed=partitioner_seed,
-                                      mesh=mesh, mesh_axis=mesh_axis)
+                                      mesh=mesh, mesh_axis=mesh_axis,
+                                      checkpoint_dir=checkpoint_dir,
+                                      checkpoint_every=checkpoint_every,
+                                      resume=resume, max_retries=max_retries)
         else:
             from repro.core.top_down import top_down_decompose
 
             res = top_down_decompose(n, edges, budget=part_budget,
                                      partitioner=partitioner,
                                      partitioner_seed=partitioner_seed,
-                                     mesh=mesh, mesh_axis=mesh_axis)
+                                     mesh=mesh, mesh_axis=mesh_axis,
+                                     checkpoint_dir=checkpoint_dir,
+                                     checkpoint_every=checkpoint_every,
+                                     resume=resume, max_retries=max_retries)
         phi = np.asarray(res.phi).astype(np.int64)
         return (phi, res.stats) if with_stats else phi
+    if checkpoint_dir is not None:
+        warnings.warn(
+            "checkpoint_dir is ignored by the in-memory engines (one device "
+            "call, nothing to journal); pass a memory_budget that routes to "
+            "an out-of-core engine, or engine='bottom-up'/'top-down'",
+            stacklevel=2)
     tris = list_triangles_np(g)
     sup = support_from_triangle_list(tris, g.m).astype(np.int32)
     if len(tris) == 0:

@@ -49,7 +49,9 @@ from typing import List, Optional
 import numpy as np
 
 from repro.core import graph as glib
-from repro.core.bottom_up import OocStats, partitioned_support
+from repro.core.bottom_up import (OocStats, RoundJournal, _Engine,
+                                  _retry_candidate_peel, _run_key,
+                                  partitioned_support)
 from repro.core.peel import local_threshold_peel
 from repro.core.support import (edge_support_auto, list_triangles,
                                 support_from_triangle_list)
@@ -118,6 +120,11 @@ def top_down_decompose(
     partitioner_seed: int = 0,
     mesh=None,
     mesh_axis: str = "data",
+    checkpoint_dir=None,
+    checkpoint_every: int = 1,
+    resume: bool = False,
+    checkpoint_keep: int = 3,
+    max_retries: int = 2,
 ) -> TopDownResult:
     """Algorithm 7: top-t k-classes (all classes if t is None).
 
@@ -125,29 +132,60 @@ def top_down_decompose(
     list sharded over ``mesh_axis`` (DESIGN.md §10); ``OocStats.devices``
     / ``sharded_rounds`` record the routing.  ``partitioner_seed`` offsets
     the randomized partitioner's per-round reseed in stage 1.
+
+    With a ``checkpoint_dir`` the run journals round state (DESIGN.md §12):
+    stage-1 partition rounds as ``"sup"`` snapshots and each completed class
+    level as a ``"td"`` snapshot; ``resume=True`` restores the newest intact
+    one and continues to a phi bit-identical to an uninterrupted run.  The
+    derived level structure (psi, G_new, its triangle list) is recomputed
+    deterministically from the journaled supports rather than stored.
+    Failed candidate peels walk the retry ladder of
+    ``bottom_up._retry_candidate_peel``.
     """
     edges = glib.canonical_edges(edges, n)
     m = len(edges)
     phi = np.zeros(m, dtype=np.int64)
     stats = OocStats()
+    eng = _Engine(mesh=mesh, mesh_axis=mesh_axis)
     if mesh is not None:
         stats.devices = int(mesh.shape[mesh_axis])
     if m == 0:
         return TopDownResult(edges, phi, [], 2, [], 0, stats)
 
+    journal = snap = None
+    if checkpoint_dir is not None:
+        key = _run_key("top_down", n, edges, budget, partitioner,
+                       partitioner_seed, t=t, faithful=bool(faithful_proc8),
+                       devices=eng.n_dev)
+        journal = RoundJournal(checkpoint_dir, key, every=checkpoint_every,
+                               keep=checkpoint_keep)
+        if resume:
+            snap = journal.load_latest()
+    td_snap = snap if snap is not None and snap[1].get("stage") == "td" else None
+
     # Stage 1 (Alg 3 variant): exact supports; Phi_2 = zero-support edges.
     # edge_support_auto routes dense cores to the matmul/Pallas path and
     # sparse graphs to the bucketed wedge scan (DESIGN.md §2); with a budget
     # the batched triangle-credit counter runs under the working-set cap.
-    if budget is None:
+    # A "td" snapshot carries the finished supports, so stage 1 is skipped.
+    if td_snap is not None:
+        sup = np.asarray(td_snap[0]["sup"], dtype=np.int64)
+        stats = OocStats.from_dict(td_snap[1]["stats"])
+        stats.resumed_round = int(td_snap[1]["index"])
+        if mesh is not None:
+            stats.devices = int(mesh.shape[mesh_axis])
+    elif budget is None:
         g = glib.build_graph(n, edges)
         sup = edge_support_auto(g)
     else:
-        sup, stats = partitioned_support(n, edges, budget,
-                                         partitioner=partitioner,
-                                         partitioner_seed=partitioner_seed,
-                                         mesh=mesh, mesh_axis=mesh_axis,
-                                         with_stats=True)
+        sup, stats = partitioned_support(
+            n, edges, budget,
+            partitioner=partitioner,
+            partitioner_seed=partitioner_seed,
+            mesh=mesh, mesh_axis=mesh_axis,
+            with_stats=True, journal=journal,
+            restored=snap if snap is not None
+            and snap[1].get("stage") == "sup" else None)
     phi[sup == 0] = 2
     alive = sup > 0                      # G_new
     psi = upper_bounds(n, edges, sup)
@@ -168,6 +206,18 @@ def top_down_decompose(
     cand_sizes: List[int] = []
     pruned_total = 0
     k = int(psi_l.max()) if gnew.m else 2
+    if td_snap is not None:
+        # Continue below the journaled level: the snapshot's masks are the
+        # state AFTER level ``index`` completed, so the next level is
+        # ``index - 1``.  phi already holds every emitted class.
+        tree, meta = td_snap
+        phi = np.asarray(tree["phi"], dtype=np.int64)
+        alive_l = np.asarray(tree["alive_l"], dtype=bool)
+        classified_l = np.asarray(tree["classified_l"], dtype=bool)
+        classes = [int(c) for c in meta.get("classes", [])]
+        cand_sizes = [int(c) for c in meta.get("cand_sizes", [])]
+        pruned_total = int(meta.get("pruned", 0))
+        k = int(meta["index"]) - 1
 
     def build_candidate(k_b: int):
         """Host half of one top-down level: U_k from the CURRENT alive /
@@ -251,18 +301,43 @@ def top_down_decompose(
         # the O(T) alive-triangle sweep the prune step needs while the
         # device peels — both depend only on masks the peel result cannot
         # change before it is consumed.
-        handle = local_threshold_peel(
-            sup0, tris_loc, tentative[h_l], k - 3, alive0=alive_h,
-            shape_cache=shape_cache, blocking=False, mesh=mesh,
-            mesh_axis=mesh_axis)
-        stats.compiles += int(handle.new_compile)
-        stats.batches += 1
-        stats.sharded_rounds += int(handle.sharded)
+        handle = dispatch_exc = None
+        try:
+            handle = local_threshold_peel(
+                sup0, tris_loc, tentative[h_l], k - 3, alive0=alive_h,
+                shape_cache=shape_cache, blocking=False, mesh=eng.mesh,
+                mesh_axis=eng.mesh_axis,
+                fault_ctx={"stage": "td", "k": int(k), "retry": 0})
+            stats.compiles += int(handle.new_compile)
+            stats.batches += 1
+            stats.sharded_rounds += int(handle.sharded)
+        except Exception as exc:
+            dispatch_exc = exc          # enters the retry ladder below
         if not faithful_proc8:
             pre = build_candidate(k - 1)
         ta = (alive_l[tris_l[:, 0]] & alive_l[tris_l[:, 1]]
               & alive_l[tris_l[:, 2]])
-        surv_l, _ = handle.result()
+        try:
+            if dispatch_exc is not None:
+                raise dispatch_exc
+            surv_l, _ = handle.result()
+        except Exception as exc:
+            # Candidate host arrays survive the donation, so a retry is a
+            # plain re-dispatch of the same level (DESIGN.md §12).
+            def redispatch(retry, e, _sup=sup0, _tris=tris_loc,
+                           _rm=tentative[h_l], _k=k, _alive=alive_h):
+                h = local_threshold_peel(
+                    _sup, _tris, _rm, _k - 3, alive0=_alive,
+                    shape_cache=shape_cache, blocking=False, mesh=e.mesh,
+                    mesh_axis=e.mesh_axis,
+                    fault_ctx={"stage": "td", "k": int(_k), "retry": retry})
+                stats.compiles += int(h.new_compile)
+                stats.batches += 1
+                stats.sharded_rounds += int(h.sharded)
+                s, _ = h.result()
+                return s
+            surv_l = _retry_candidate_peel(eng, stats, exc, redispatch,
+                                           max_retries)
         phi_k = np.zeros(gnew.m, dtype=bool)
         phi_k[h_l[surv_l]] = True
         phi_k &= tentative
@@ -279,6 +354,15 @@ def top_down_decompose(
             prunable = alive_l & classified_l & (needs == 0)
             pruned_total += int(prunable.sum())
             alive_l &= ~prunable
+        if journal is not None:
+            journal.record(
+                "td", k,
+                {"phi": phi, "sup": sup, "alive_l": alive_l,
+                 "classified_l": classified_l},
+                stats,
+                classes=[int(c) for c in classes],
+                cand_sizes=[int(c) for c in cand_sizes],
+                pruned=int(pruned_total))
         k -= 1
 
     kmax = classes[0] if classes else 2

@@ -26,6 +26,34 @@ FIG2_CLASSES = {
 }
 
 
+def test_canonical_edges_rejects_out_of_range_ids():
+    """Regression: an explicit n smaller than the max vertex id used to
+    wrap ids through the u*n+v dedup key and silently corrupt the edge
+    list; it must raise instead."""
+    bad = np.array([[0, 1], [2, 5]])
+    with pytest.raises(ValueError, match=r"vertex id 5 but n=3"):
+        glib.canonical_edges(bad, 3)
+    # boundary: ids in [0, n) are fine
+    ok = glib.canonical_edges(bad, 6)
+    assert ok.max() == 5
+
+
+def test_canonical_edges_rejects_negative_ids():
+    with pytest.raises(ValueError, match="negative vertex id"):
+        glib.canonical_edges(np.array([[0, 1], [-2, 3]]), 10)
+    # negatives are rejected even when n is inferred
+    with pytest.raises(ValueError, match="negative vertex id"):
+        glib.canonical_edges(np.array([[-1, 2]]))
+
+
+def test_canonical_edges_valid_inputs_unchanged():
+    e = np.array([[3, 1], [1, 3], [2, 2], [0, 3]])
+    ce = glib.canonical_edges(e, 4)
+    # dedup, self-loop drop, u < v orientation, lexicographic order
+    assert ce.tolist() == [[0, 3], [1, 3]]
+    assert glib.canonical_edges(np.zeros((0, 2), np.int64), 4).shape == (0, 2)
+
+
 def test_figure2_exact():
     """Reproduces the paper's running example (Figure 2) exactly."""
     n = 12
