@@ -96,13 +96,45 @@ class _Engine:
     inherits the degraded routing without re-threading arguments."""
 
     mesh: object = None
-    mesh_axis: str = "data"
+    mesh_axis: object = "data"   # one axis name or a (lane, tri) tuple (§13)
+    kernel: str = "auto"         # per-lane peel engine (pallas | xla | auto)
+
+    @property
+    def lane_axis(self) -> str:
+        ax = self.mesh_axis
+        return ax if isinstance(ax, str) else ax[0]
 
     @property
     def n_dev(self) -> int:
+        """Lane-axis size — the multiple the bucket packers pad lanes to."""
         if self.mesh is None:
             return 1
-        return int(self.mesh.shape[self.mesh_axis])
+        return int(self.mesh.shape[self.lane_axis])
+
+    @property
+    def devices(self) -> int:
+        """Total devices spanned: the product over every named mesh axis."""
+        if self.mesh is None:
+            return 1
+        axes = ((self.mesh_axis,) if isinstance(self.mesh_axis, str)
+                else tuple(self.mesh_axis))
+        d = 1
+        for a in axes:
+            d *= int(self.mesh.shape[a])
+        return d
+
+
+def _mesh_devices(mesh, mesh_axis) -> int:
+    """Total devices a (mesh, mesh_axis) pair spans: the product over the
+    named axes.  1 without a mesh; for a single axis name this equals the
+    axis size, keeping single-axis checkpoint run keys unchanged."""
+    if mesh is None:
+        return 1
+    axes = (mesh_axis,) if isinstance(mesh_axis, str) else tuple(mesh_axis)
+    d = 1
+    for a in axes:
+        d *= int(mesh.shape[a])
+    return d
 
 
 def _accepts_round(fn) -> bool:
@@ -125,6 +157,25 @@ def _accepts_round(fn) -> bool:
             or any(p.kind == p.VAR_POSITIONAL for p in params))
 
 
+class _AdaptiveLocality:
+    """Stateful wrapper feeding observed triangle locality back into the
+    zoned partitioner (DESIGN.md §11): ``_partition_rounds`` calls
+    :meth:`observe` with each built batch, and the next round's zone cap
+    scales with the capture fraction the previous round actually achieved
+    (``partition._zone_mult``) instead of the fixed 4x constant."""
+
+    def __init__(self, fn):
+        self._fn = fn
+        self.prev_locality: float | None = None
+
+    def __call__(self, g, budget, round_idx):
+        return self._fn(g, budget, prev_locality=self.prev_locality)
+
+    def observe(self, batch: "plib.PartitionBatch") -> None:
+        if batch.tri_total:
+            self.prev_locality = batch.tri_locality
+
+
 def _resolve_partitioner(partitioner, seed: int = 0):
     """Normalize to fn(graph, budget, round_idx) -> parts.
 
@@ -138,6 +189,10 @@ def _resolve_partitioner(partitioner, seed: int = 0):
     too, so custom partitioners can vary per round the way the built-in
     "random" reseed does; 2-arg callables — including ones with defaulted
     config parameters — keep the legacy (graph, budget) call.
+
+    The built-in "locality" partitioner resolves to a stateful
+    :class:`_AdaptiveLocality` whose ``observe`` hook the round generator
+    drives; resolving fresh per run keeps the feedback run-local.
     """
     if callable(partitioner):
         if _accepts_round(partitioner):
@@ -146,6 +201,8 @@ def _resolve_partitioner(partitioner, seed: int = 0):
     fn = plib.PARTITIONERS[partitioner]
     if partitioner == "random":
         return lambda g, b, r: fn(g, b, seed=seed + r)
+    if partitioner == "locality":
+        return _AdaptiveLocality(fn)
     return lambda g, b, r: fn(g, b)
 
 
@@ -180,6 +237,10 @@ class OocStats:
     tri_est: int = 0          # wedge-based triangle estimates summed over
     #                           partition rounds (the cost model's
     #                           prediction; compare tri_total)
+    tri_rescans_avoided: int = 0  # rounds whose triangle list was filtered
+    #                           from the previous round's instead of
+    #                           re-enumerated (the O(m^1.5) scan replaced
+    #                           by an O(T) filter; at most rounds - 1)
     devices: int = 1          # mesh devices the sharded dispatch spans
     sharded_rounds: int = 0   # device dispatches (stage-1 partition rounds
     #                           + per-k candidate peels) routed through
@@ -378,7 +439,8 @@ def lower_bounding(
     *,
     partitioner_seed: int = 0,
     mesh=None,
-    mesh_axis: str = "data",
+    mesh_axis="data",
+    kernel: str = "auto",
     journal: Optional[RoundJournal] = None,
     restored=None,
     max_retries: int = 2,
@@ -387,7 +449,11 @@ def lower_bounding(
     """Algorithm 3: per-edge lower bounds + exact round-1 Phi_2.
 
     With a ``mesh``, every round's bucket peels span the mesh axis
-    (DESIGN.md §10); requires the batched engine.
+    (DESIGN.md §10); requires the batched engine.  ``mesh_axis`` may be a
+    single axis name or a ``(lane, tri)`` tuple for multi-axis meshes
+    (DESIGN.md §13); ``kernel`` routes each lane's peel engine
+    (``"pallas" | "xla" | "auto"``, forwarded to
+    ``peel.peel_classes_batched``).
 
     ``journal`` / ``restored`` / ``max_retries`` are the resilience hooks
     (DESIGN.md §12): a :class:`RoundJournal` snapshots the host-side fold
@@ -414,6 +480,7 @@ def lower_bounding(
         raise ValueError(f"unknown engine {engine!r}")
     return _lower_bounding_batched(n, edges, budget, part_fn,
                                    mesh=mesh, mesh_axis=mesh_axis,
+                                   kernel=kernel,
                                    journal=journal, restored=restored,
                                    max_retries=max_retries,
                                    engine_state=engine_state)
@@ -445,6 +512,17 @@ def _partition_rounds(
     stall; the paper's remedy is the randomized re-partition) doubles the
     working-set budget and yields nothing: with no internal edges a peel
     could not contribute any bound.
+
+    Triangle lists are **incremental** across rounds: the full working
+    graph is enumerated once (round 1), and every later round filters the
+    previous list against the surviving edges — a triangle of the shrunken
+    graph is exactly a triangle of the previous graph with all three edges
+    alive — and remaps edge ids to the compacted numbering
+    ``Graph.remove_edges`` produces.  The O(m^1.5) wedge enumeration per
+    round becomes an O(T) mask (``OocStats.tri_rescans_avoided``); zoned
+    covers pay one full scan up front instead of one zone scan per round,
+    and ``build_partition_batch`` re-scopes the passed list so
+    ``tri_total`` / ``tri_locality`` semantics are unchanged.
     """
     if start_ids is None:
         g = glib.build_graph(n, edges)
@@ -453,6 +531,14 @@ def _partition_rounds(
         cur_ids = np.asarray(start_ids, dtype=np.int64)
         g = glib.build_graph(n, edges[cur_ids])
     cur_budget = budget
+    tris_cur = None      # full triangle list of g, g-local edge ids
+    # shape ladder (sharded packing only, DESIGN.md §13): the shapes this
+    # run has already compiled the shard_map peel for; a round that fits
+    # an entry reuses it verbatim (compile-cache hit), one that doesn't
+    # packs naturally and contributes its shape — on a mesh every
+    # recompile is a pod-wide stall, and the dead padding a reused entry
+    # adds costs each shard only 1/n_dev of its slots
+    ladder: list = []
     while g.m:
         stats.rounds += 1
         # the host-side "between rounds" fault site: the natural place for
@@ -462,10 +548,23 @@ def _partition_rounds(
         parts = part_fn(g, cur_budget, stats.rounds)
         if not parts:
             break
-        batch = plib.build_partition_batch(g, parts,
-                                           with_incidence=with_incidence,
-                                           lane_multiple=lane_multiple)
+        if tris_cur is None:
+            tris_cur = np.asarray(list_triangles(g), np.int64).reshape(-1, 3)
+        else:
+            stats.tri_rescans_avoided += 1
+        batch = plib.build_partition_batch(
+            g, parts, with_incidence=with_incidence,
+            lane_multiple=lane_multiple, tris=tris_cur,
+            shape_ladder=ladder if lane_multiple > 1 else None)
+        if lane_multiple > 1:
+            for b in batch.buckets:
+                shape = (b.cap_e, b.cap_t, b.n_lanes)
+                if shape not in ladder:
+                    ladder.append(shape)
         stats.absorb_batch(batch)
+        observe = getattr(part_fn, "observe", None)
+        if observe is not None:
+            observe(batch)     # adaptive zone sizing feedback (§11)
         removed = np.zeros(g.m, dtype=bool)
         for bucket in batch.buckets:
             removed[bucket.edge_ids[bucket.internal]] = True
@@ -478,6 +577,10 @@ def _partition_rounds(
         ids_snapshot = cur_ids
         cur_ids = cur_ids[~removed]
         g = g.remove_edges(removed)
+        if len(tris_cur):
+            keep = ~removed[tris_cur].any(axis=1)
+            remap = np.cumsum(~removed) - 1      # old id -> compacted id
+            tris_cur = remap[tris_cur[keep]]
         yield stats.rounds, batch, ids_snapshot, cur_budget
 
 
@@ -536,6 +639,7 @@ def _retry_stage1_round(eng: _Engine, stats: OocStats, shape_cache,
                         sub.sup, sub.tris, sub.indptr, sub.tids, sub.alive,
                         shape_cache=shape_cache, blocking=False,
                         mesh=mesh, mesh_axis=eng.mesh_axis,
+                        kernel=eng.kernel,
                         fault_ctx={"stage": 1, "round": round_idx,
                                    "bucket": bi, "sub": si, "retry": split})
                     stats.compiles += int(h.new_compile)
@@ -548,7 +652,7 @@ def _retry_stage1_round(eng: _Engine, stats: OocStats, shape_cache,
 
 
 def _lower_bounding_batched(n, edges, budget, part_fn, mesh=None,
-                            mesh_axis: str = "data",
+                            mesh_axis="data", kernel: str = "auto",
                             journal: Optional[RoundJournal] = None,
                             restored=None, max_retries: int = 2,
                             engine_state: Optional[_Engine] = None,
@@ -560,8 +664,8 @@ def _lower_bounding_batched(n, edges, budget, part_fn, mesh=None,
     alive = np.ones(m, dtype=bool)        # still in the working graph
     stats = OocStats()
     eng = engine_state if engine_state is not None else _Engine(
-        mesh=mesh, mesh_axis=mesh_axis)
-    stats.devices = eng.n_dev
+        mesh=mesh, mesh_axis=mesh_axis, kernel=kernel)
+    stats.devices = eng.devices
     start_budget = budget
     if restored is not None:
         # resume from a journaled "lb" snapshot: the fold state is four
@@ -575,7 +679,7 @@ def _lower_bounding_batched(n, edges, budget, part_fn, mesh=None,
         alive = tree["alive"].astype(bool)
         stats = OocStats.from_dict(meta["stats"])
         stats.resumed_round = int(meta["index"])
-        stats.devices = eng.n_dev
+        stats.devices = eng.devices
         start_budget = int(meta.get("cur_budget", budget))
     shape_cache: set = set()
 
@@ -645,6 +749,7 @@ def _lower_bounding_batched(n, edges, budget, part_fn, mesh=None,
                             bucket.tids, bucket.alive,
                             shape_cache=shape_cache, blocking=False,
                             mesh=eng.mesh, mesh_axis=eng.mesh_axis,
+                            kernel=eng.kernel,
                             fault_ctx={"stage": 1, "round": round_idx,
                                        "bucket": bi, "retry": 0})
                         stats.compiles += int(h.new_compile)
@@ -782,7 +887,8 @@ def bottom_up_decompose(
     *,
     partitioner_seed: int = 0,
     mesh=None,
-    mesh_axis: str = "data",
+    mesh_axis="data",
+    kernel: str = "auto",
     checkpoint_dir: Optional[str] = None,
     checkpoint_every: int = 1,
     resume: bool = False,
@@ -794,7 +900,12 @@ def bottom_up_decompose(
     With a ``mesh`` (batched engine only), stage-1 rounds split their
     bucket lanes over ``mesh_axis`` and stage-2 candidate peels run
     triangle-sharded — one partition round spans the pod (DESIGN.md §10);
-    ``OocStats.devices`` / ``sharded_rounds`` record the routing.
+    ``OocStats.devices`` / ``sharded_rounds`` record the routing.  A
+    ``(lane, tri)`` tuple ``mesh_axis`` additionally shards each lane's
+    triangle sweep over the second axis (DESIGN.md §13).  ``kernel``
+    routes the per-lane peel engine (``"pallas" | "xla" | "auto"``);
+    it never changes φ or the round trajectory, so it is not part of
+    the checkpoint run key.
     ``partitioner_seed`` offsets the randomized partitioner's per-round
     reseed (ignored by the deterministic splitters).
 
@@ -818,15 +929,14 @@ def bottom_up_decompose(
                 "(engine='perpart' is the uninstrumented seed baseline)")
         edges = glib.canonical_edges(edges, n)
         key = _run_key("bottom_up", n, edges, budget, partitioner,
-                       partitioner_seed, devices=(
-                           int(mesh.shape[mesh_axis]) if mesh is not None
-                           else 1))
+                       partitioner_seed,
+                       devices=_mesh_devices(mesh, mesh_axis))
         journal = RoundJournal(checkpoint_dir, key, every=checkpoint_every,
                                keep=checkpoint_keep)
         if resume:
             snap = journal.load_latest()
 
-    eng = _Engine(mesh=mesh, mesh_axis=mesh_axis)
+    eng = _Engine(mesh=mesh, mesh_axis=mesh_axis, kernel=kernel)
     if snap is not None and snap[1]["stage"] == "s2":
         # stage 1 is complete in the snapshot; rebuild the stage-2 state
         # directly and skip the partition rounds entirely
@@ -837,7 +947,7 @@ def bottom_up_decompose(
         remaining = tree["remaining"].astype(bool)
         stats = OocStats.from_dict(meta["stats"])
         stats.resumed_round = int(meta["index"])
-        stats.devices = eng.n_dev
+        stats.devices = eng.devices
         k0 = int(meta["index"]) + 1     # the journaled level is complete
         lbres = None
     else:
@@ -951,7 +1061,7 @@ def bottom_up_decompose(
                 handle = local_threshold_peel(
                     sup, tris, internal[h_ids], k - 2, alive0=alive_h,
                     shape_cache=shape_cache, blocking=False, mesh=eng.mesh,
-                    mesh_axis=eng.mesh_axis,
+                    mesh_axis=eng.mesh_axis, kernel=eng.kernel,
                     fault_ctx={"stage": 2, "k": int(k), "retry": 0})
                 stats.compiles += int(handle.new_compile)
                 stats.batches += 1
@@ -973,7 +1083,7 @@ def bottom_up_decompose(
                     h = local_threshold_peel(
                         _sup, _tris, _rm, _k - 2, alive0=_alive,
                         shape_cache=shape_cache, blocking=False,
-                        mesh=e.mesh, mesh_axis=e.mesh_axis,
+                        mesh=e.mesh, mesh_axis=e.mesh_axis, kernel=e.kernel,
                         fault_ctx={"stage": 2, "k": int(_k),
                                    "retry": retry})
                     stats.compiles += int(h.new_compile)
@@ -1009,7 +1119,7 @@ def partitioned_support(
     *,
     partitioner_seed: int = 0,
     mesh=None,
-    mesh_axis: str = "data",
+    mesh_axis="data",
     journal: Optional[RoundJournal] = None,
     restored=None,
 ):
@@ -1046,7 +1156,7 @@ def partitioned_support(
     if mesh is not None:
         if engine == "perpart":
             raise ValueError("mesh= requires the batched engine")
-        stats.devices = int(mesh.shape[mesh_axis])
+        stats.devices = _mesh_devices(mesh, mesh_axis)
     cur_budget = budget
     if restored is not None:
         if engine == "perpart":

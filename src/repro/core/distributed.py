@@ -318,6 +318,69 @@ def pad_bucket_lanes(sup_b, tris_b, indptr_b, tids_b, alive_b, n_lanes: int):
     )
 
 
+def _axes_tuple(axis) -> tuple:
+    """Normalize an axis knob (one name or a sequence) to a tuple."""
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def shard_incidence_lanes(tris_b: np.ndarray, cap_e: int, n_shards: int):
+    """Lane-wise :func:`shard_incidence`: per-lane per-shard edge→triangle
+    incidence over contiguous triangle shards.
+
+    ``tris_b`` (B, T, 3) with T divisible by ``n_shards``; triangle ids in
+    each shard's CSR are LOCAL to the (lane, shard) rows shard_map hands
+    each device.  Returns (indptr_ls (B, S, cap_e+1), tids_ls (B, S, L))
+    padded to a common L across lanes AND shards (one static shape per
+    bucket).
+    """
+    B, T = tris_b.shape[0], tris_b.shape[1]
+    t_loc = T // n_shards
+    per = [[triangle_incidence_np(tris_b[b, i * t_loc:(i + 1) * t_loc],
+                                  cap_e)
+            for i in range(n_shards)] for b in range(B)]
+    L = max([len(t) for row in per for _, t in row] + [1])
+    indptr_ls = np.zeros((B, n_shards, cap_e + 1), np.int32)
+    tids_ls = np.zeros((B, n_shards, L), np.int32)
+    for b in range(B):
+        for i, (indptr, tids) in enumerate(per[b]):
+            indptr_ls[b, i] = indptr
+            tids_ls[b, i, : len(tids)] = tids
+    return indptr_ls, tids_ls
+
+
+@lru_cache(maxsize=None)
+def _batched_sharded2_fn(mesh, lane_axis: str, tri_axis: str, cap_f: int,
+                         cap_t: int):
+    """jit(shard_map) of the TWO-AXIS batched peel (DESIGN.md §13): lanes
+    split over ``lane_axis`` while each lane's triangle list + incidence
+    shard over ``tri_axis``.  Edge state is sharded by lane and replicated
+    across the triangle axis, so inside each lane's vmapped
+    ``peel_classes_fixedcap`` the frontier prefix is agreed by pmin and
+    decrements merged by psum over ``tri_axis`` — a bucket with fewer lanes
+    than devices still spreads every lane's round across the second axis."""
+
+    def local(sup, tris, indptr, tids, alive):
+        def one(s, t, ip, ti, a):
+            Em = s.shape[0]
+            phi0 = jnp.zeros(Em, jnp.int32)
+            st0 = jnp.zeros(N_STATS, jnp.int32)
+            _, _, phi, _, st, _ = peel_classes_fixedcap(
+                s, t, ip.reshape(-1), ti.reshape(-1), a, phi0,
+                jnp.int32(2), st0, cap_f=cap_f, cap_t=cap_t, axis=tri_axis)
+            return phi, st
+
+        return jax.vmap(one)(sup, tris, indptr, tids, alive)
+
+    fn = _shard_map(
+        local, mesh,
+        in_specs=(P(lane_axis), P(lane_axis, tri_axis),
+                  P(lane_axis, tri_axis), P(lane_axis, tri_axis),
+                  P(lane_axis)),
+        out_specs=(P(lane_axis), P(lane_axis)),
+    )
+    return jax.jit(fn, donate_argnums=(0,))
+
+
 @lru_cache(maxsize=None)
 def _batched_sharded_fn(mesh, axis: str, cap_f: int, cap_t: int):
     """jit(shard_map(·)) of ``peel._peel_classes_vmapped_impl`` — each
@@ -349,23 +412,53 @@ def peel_classes_batched_sharded(mesh, sup_b, tris_b, indptr_b, tids_b,
     ``lane_multiple`` pre-pads batches so this is normally a no-op, with
     the waste visible in ``OocStats.padding_waste``.
 
+    With ``axis`` a TUPLE (lane_axis, tri_axis) the bucket spans a
+    multi-axis mesh (DESIGN.md §13): lanes pad to a multiple of the lane
+    axis only, and each lane's triangle rows (padded to a multiple of the
+    triangle axis) shard over the second axis with a per-(lane, shard)
+    incidence CSR (:func:`shard_incidence_lanes`) — pmin/psum over
+    ``tri_axis`` keep the replicated per-lane edge state in lockstep.  The
+    caller's ``cap_t`` covers the largest whole-lane incidence row, which
+    bounds every shard-local row, so progress stays guaranteed.
+
     Returns DEVICE arrays ``(phi, stats)`` over the PADDED lane count —
     still futures at return time, so the caller's host work overlaps the
     pod-wide peel; slice back to the original B when materializing.
     """
-    n_dev = int(mesh.shape[axis])
+    axes = _axes_tuple(axis)
+    n_lane = int(mesh.shape[axes[0]])
     arrs = pad_bucket_lanes(
         sup_b, tris_b, indptr_b, tids_b, alive_b,
-        round_up_to_multiple(sup_b.shape[0], n_dev))
-    fn = _batched_sharded_fn(mesh, axis, int(cap_f), int(cap_t))
-    return fn(*(jnp.asarray(a) for a in arrs))
+        round_up_to_multiple(sup_b.shape[0], n_lane))
+    if len(axes) == 1:
+        fn = _batched_sharded_fn(mesh, axes[0], int(cap_f), int(cap_t))
+        return fn(*(jnp.asarray(a) for a in arrs))
+    lane_axis, tri_axis = axes
+    n_tri = int(mesh.shape[tri_axis])
+    sup_p, tris_p, _, _, alive_p = arrs
+    cap_e = int(sup_p.shape[1])
+    T = int(tris_p.shape[1])
+    T_pad = round_up_to_multiple(T, n_tri)
+    if T_pad != T:  # contiguous triangle shards need equal rows per device
+        pad = np.full((sup_p.shape[0], T_pad - T, 3), cap_e, np.int32)
+        tris_p = np.concatenate([np.asarray(tris_p), pad], axis=1)
+    indptr_ls, tids_ls = shard_incidence_lanes(
+        np.asarray(tris_p), cap_e, n_tri)
+    fn = _batched_sharded2_fn(mesh, lane_axis, tri_axis,
+                              int(cap_f), int(cap_t))
+    return fn(jnp.asarray(sup_p), jnp.asarray(tris_p),
+              jnp.asarray(indptr_ls), jnp.asarray(tids_ls),
+              jnp.asarray(alive_p))
 
 
 @lru_cache(maxsize=None)
-def _threshold_sharded_fn(mesh, axis: str, cap_f: int, cap_t: int):
+def _threshold_sharded_fn(mesh, axis, cap_f: int, cap_t: int):
     """jit(shard_map) of the single-level peel: edge state replicated,
     triangles + incidence sharded, pmin/psum per round (see
-    ``_peel_sharded_body`` for the multi-level analogue)."""
+    ``_peel_sharded_body`` for the multi-level analogue).  ``axis`` may be
+    one axis name or a tuple of names — ``P(axis)`` then shards the
+    triangle rows over the flattened product and pmin/psum reduce over all
+    named axes at once (DESIGN.md §13)."""
 
     def local(sup0, tris_loc, indptr_loc, tids_loc, alive0, removable,
               thresh):
@@ -396,7 +489,7 @@ def _threshold_sharded_fn(mesh, axis: str, cap_f: int, cap_t: int):
 
 
 def local_threshold_peel_sharded(mesh, sup0, tris, alive0, removable, thresh,
-                                 *, axis: str = "data"):
+                                 *, axis="data"):
     """Single-level candidate peel with the triangle list sharded on ``axis``.
 
     The mesh form of ``peel.local_threshold_peel``'s kernel (the per-k
@@ -409,15 +502,23 @@ def local_threshold_peel_sharded(mesh, sup0, tris, alive0, removable, thresh,
     row, so each shard always fits at least one edge's row and the agreed
     prefix is non-empty — no overflow/resume path.
 
+    With ``axis`` a tuple of names the shards span the flattened product of
+    those mesh axes (DESIGN.md §13) — one huge candidate peel spreads its
+    psum volume across the whole multi-axis mesh.
+
     Returns ``(alive_device_array, cap_f, cap_t)``; the caps feed the
     caller's compile-shape cache key.
     """
-    n_shards = int(mesh.shape[axis])
+    axes = _axes_tuple(axis)
+    n_shards = 1
+    for a in axes:
+        n_shards *= int(mesh.shape[a])
+    spec_axis = axes[0] if len(axes) == 1 else axes
     m = int(sup0.shape[0])
     tris_np = np.asarray(tris)
     indptr_s, tids_s = shard_incidence(tris_np, m, n_shards)
     cap_f, cap_t = _sharded_caps(m, indptr_s, tids_s)
-    fn = _threshold_sharded_fn(mesh, axis, int(cap_f), int(cap_t))
+    fn = _threshold_sharded_fn(mesh, spec_axis, int(cap_f), int(cap_t))
     alive = fn(jnp.asarray(sup0), jnp.asarray(tris_np),
                jnp.asarray(indptr_s), jnp.asarray(tids_s),
                jnp.asarray(alive0), jnp.asarray(removable),

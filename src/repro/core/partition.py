@@ -224,15 +224,38 @@ def random_partition(g: Graph, budget: int, seed: int = 0) -> List[np.ndarray]:
 
 
 # Zone sizing of one locality round: parts are grown until the covered NS
-# cost reaches max(_ZONE_BUDGET_MULT * budget, total_cost / _ZONE_FRACTION).
+# cost reaches max(zone_mult * budget, total_cost / _ZONE_FRACTION).
 # Small multiples keep each round's scan focused on the surviving triangle
 # mass (high per-round capture, DESIGN.md §11); the fraction floor bounds
-# the round count on graphs much larger than the budget.
+# the round count on graphs much larger than the budget.  The multiple
+# adapts to the *observed* capture of the previous round (``prev_locality``
+# below): _ZONE_BUDGET_MULT is the cold-start default, and the adaptive
+# range spans [_ZONE_MULT_MIN, _ZONE_MULT_MAX].
 _ZONE_BUDGET_MULT = 4
 _ZONE_FRACTION = 16
+_ZONE_MULT_MIN = 2.0
+_ZONE_MULT_MAX = 16.0
 
 
-def locality_partition(g: Graph, budget: int) -> List[np.ndarray]:
+def _zone_mult(prev_locality: float | None) -> float:
+    """Zone multiple from the previous round's observed ``tri_locality``.
+
+    High capture means the zoned cover is keeping triangles internal — a
+    larger zone amortizes the per-round NS sweep over more progress; low
+    capture means the zone is spraying triangles across parts, so shrink
+    it back toward the budget and refocus on the dense core.  Linear in
+    the observed fraction, clamped to [_ZONE_MULT_MIN, _ZONE_MULT_MAX];
+    the cold-start round (no observation yet) keeps the historical 4x.
+    """
+    if prev_locality is None:
+        return float(_ZONE_BUDGET_MULT)
+    frac = min(1.0, max(0.0, float(prev_locality)))
+    return _ZONE_MULT_MIN + (_ZONE_MULT_MAX - _ZONE_MULT_MIN) * frac
+
+
+def locality_partition(
+    g: Graph, budget: int, prev_locality: float | None = None,
+) -> List[np.ndarray]:
     """Triangle-aware zoned growth over the adjacency (DESIGN.md §11).
 
     One call partitions the current *zone* — the triangle-densest region of
@@ -286,7 +309,7 @@ def locality_partition(g: Graph, budget: int) -> List[np.ndarray]:
     deg = g.deg.astype(np.int64)
     tri_est = closed_wedge_estimate(g)
     unassigned = cost > 0
-    zone_cost = max(_ZONE_BUDGET_MULT * budget,
+    zone_cost = max(int(_zone_mult(prev_locality) * budget),
                     int(cost[active].sum()) // _ZONE_FRACTION)
     # seeds in descending triangle-volume order (NS cost as tiebreak): the
     # triangle-dense core is captured while the zone is still empty, the
@@ -569,6 +592,8 @@ def build_partition_batch(
     pad_lanes_pow2: bool = True,
     lane_capacity: int | None = None,
     lane_multiple: int = 1,
+    tris: np.ndarray | None = None,
+    shape_ladder: Sequence[tuple[int, int, int]] | None = None,
 ) -> PartitionBatch:
     """Extract, compact, pack and pad every NS(P) of one round.
 
@@ -587,11 +612,46 @@ def build_partition_batch(
     (parts larger than it still get a lane; used to pin shapes externally).
     ``with_incidence=False`` skips the per-lane incidence CSR and supports
     (the triangle-credit support counter only needs the triangle lists).
-    ``lane_multiple`` additionally rounds every bucket's lane count up to a
-    multiple (the mesh device count for the sharded dispatch, DESIGN.md
-    §10, so every shard receives the same number of lanes); the extra dead
-    lanes are counted in ``padded_slots`` and hence in
+
+    ``lane_multiple > 1`` (the mesh device count for the sharded dispatch,
+    DESIGN.md §10, so every shard receives the same number of lanes)
+    switches to *waste-aware* packing: every part goes into ONE capacity
+    class sized to the observed per-lane cap
+    ``pow2_ceil(max(max_part, total / lane_multiple))`` and the lane count
+    is padded only to the device multiple — never pow2 first.  The old
+    order (pow4 size classes, each pow2-lane-padded, each *then* rounded
+    up to the device multiple) charged every occupied class its own
+    ``lane_multiple`` dead-lane tax, which is what pushed
+    ``padding_waste`` from ~0.39 to ~0.67 on the table4shard rows.  The
+    single class keeps FFD dense (leftover per lane is bounded by the
+    largest co-packed part) and aims the lane count at one lane per
+    device, so the dead-lane tax is paid at most once per round.  The
+    remaining padding is counted in ``padded_slots`` and hence in
     ``OocStats.padding_waste``.
+
+    ``shape_ladder`` (sharded packing only) is the round pipeline's SHAPE
+    LADDER (DESIGN.md §13): a list of ``(cap_e, cap_t, lanes)`` shapes the
+    run has already compiled the shard_map peel for.  If the round's
+    natural single-class shape fits inside a ladder entry, the TIGHTEST
+    fitting entry (smallest ``cap_e * cap_t`` footprint) is used verbatim
+    — the dispatch becomes a compile-cache hit instead of a pod-wide
+    re-trace + recompile stall, at the cost of some dead padding whose
+    per-device share is ``1/n_dev``.  A round that fits no entry packs at
+    its natural shape (the caller then adds that shape to the ladder), so
+    unlike a monotone ratchet, small late rounds never pay the widest
+    round's flops.  The single-device packing deliberately has no ladder:
+    with nobody to absorb the padding, the dense per-round shapes minimize
+    flops and the pow2/pow4 lattice already bounds its compile count.
+    The extra padding is charged to ``padded_slots`` like any other
+    padding.
+
+    ``tris`` is a precomputed (T, 3) triangle list of the FULL working
+    graph ``g`` (edge-id triples in ``g``'s numbering): the incremental
+    round pipeline (``bottom_up._partition_rounds``) filters the previous
+    round's list against the surviving edges instead of re-enumerating,
+    and passes it here — the enumeration below is skipped and the list is
+    scope-filtered to the round's NS union so ``tri_total`` keeps meaning
+    "triangles the round read".
     """
     from repro.core.support import (_pow2_ceil, _pow4_ceil, list_triangles,
                                     support_from_triangle_list,
@@ -614,14 +674,19 @@ def build_partition_batch(
         part_of[np.asarray(P, dtype=np.int64)] = i
     e64 = g.edges.astype(np.int64)
     in_ns = (part_of[e64[:, 0]] >= 0) | (part_of[e64[:, 1]] >= 0)
-    if in_ns.all():
-        g_scan, ns_eids = g, None
+    full_scope = bool(in_ns.all())
+    g_scan = g if full_scope else g.remove_edges(~in_ns)
+    if tris is not None:
+        # incremental path: the caller's filtered full-graph list replaces
+        # the enumeration; scope it the way the scoped scan would
+        tris_g = np.asarray(tris, np.int64).reshape(-1, 3)
+        if not full_scope and len(tris_g):
+            tris_g = tris_g[in_ns[tris_g].all(axis=1)]
     else:
-        g_scan = g.remove_edges(~in_ns)
-        ns_eids = np.nonzero(in_ns)[0]
-    tris_g = np.asarray(list_triangles(g_scan), np.int64).reshape(-1, 3)
-    if ns_eids is not None and len(tris_g):
-        tris_g = ns_eids[tris_g]           # back to g's edge ids
+        tris_g = np.asarray(list_triangles(g_scan), np.int64).reshape(-1, 3)
+        if not full_scope and len(tris_g):
+            ns_eids = np.nonzero(in_ns)[0]
+            tris_g = ns_eids[tris_g]       # back to g's edge ids
     tri_part = assign_triangles(g, tris_g, part_of)
     tri_total = int(len(tris_g))
     tri_assigned = int((tri_part >= 0).sum())
@@ -654,12 +719,35 @@ def build_partition_batch(
     # case) does not inflate every small part's lane; the fixed grid also
     # lets shapes recur across rounds
     groups: dict[int, List[int]] = {}
-    for idx, item in enumerate(per_part):
-        if lane_capacity and item[2] <= lane_capacity:
-            key = lane_capacity
-        else:
-            key = _pow4_ceil(item[2])
-        groups.setdefault(key, []).append(idx)
+    floor_t, floor_l = 1, 1
+    if lane_multiple > 1:
+        # waste-aware sharded packing: one observed-cap class (docstring)
+        sizes = [item[2] for item in per_part]
+        tri_lens = [len(item[3]) for item in per_part]
+        cap = max(max(sizes), -(-sum(sizes) // lane_multiple))
+        key = _pow2_ceil(max(cap, lane_capacity or 1))
+        # shape ladder: adopt the tightest already-compiled shape the
+        # round fits inside (trial FFD pack per candidate — part counts
+        # are small); natural shape when none fits
+        for fe, ft, fl in sorted(shape_ladder or (),
+                                 key=lambda s: s[0] * s[1]):
+            if fe < max(max(sizes), lane_capacity or 1):
+                continue
+            trial = _first_fit_decreasing(sizes, fe)
+            if len(trial) > fl:
+                continue
+            if max(sum(tri_lens[i] for i in lane) for lane in trial) > ft:
+                continue
+            key, floor_t, floor_l = fe, ft, fl
+            break
+        groups[key] = list(range(len(per_part)))
+    else:
+        for idx, item in enumerate(per_part):
+            if lane_capacity and item[2] <= lane_capacity:
+                key = lane_capacity
+            else:
+                key = _pow4_ceil(item[2])
+            groups.setdefault(key, []).append(idx)
 
     buckets: List[PartBucket] = []
     total_real = total_pad = max_part = 0
@@ -676,10 +764,18 @@ def build_partition_batch(
         # memory-only (the frontier gather never visits them)
         cap_t = _pow4_ceil(max(max(lane_T), 1))
         n_real_lanes = len(lanes)
-        B = _pow2_ceil(n_real_lanes) if pad_lanes_pow2 else n_real_lanes
         if lane_multiple > 1:
-            # equal lanes per shard when the bucket spans a mesh axis
-            B = round_up_to_multiple(B, lane_multiple)
+            # equal lanes per shard when the bucket spans a mesh axis;
+            # real lane count, device multiple only — no pow2 inflation.
+            # A chosen ladder entry pins the triangle width and lane count
+            # too, so the bucket reproduces the compiled shape exactly.
+            cap_t = max(cap_t, floor_t)
+            B = round_up_to_multiple(max(n_real_lanes, floor_l),
+                                     lane_multiple)
+        elif pad_lanes_pow2:
+            B = _pow2_ceil(n_real_lanes)
+        else:
+            B = n_real_lanes
         sup_b = np.zeros((B, cap_e), np.int32)
         tris_b = np.full((B, cap_t, 3), cap_e, np.int32)
         alive_b = np.zeros((B, cap_e), bool)

@@ -177,13 +177,22 @@ def _bump_stats(stats, nf, j_take, total_t):
 # fixed-capacity kernels (jit / vmap / shard_map compatible)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cap_f", "cap_t", "max_k"))
+@partial(jax.jit, static_argnames=("cap_f", "cap_t", "max_k", "axis"))
 def peel_classes_fixedcap(sup0, tris, tri_indptr, tri_ids, alive0, phi0, k0,
-                          stats0, *, cap_f, cap_t, max_k=None):
+                          stats0, *, cap_f, cap_t, max_k=None, axis=None):
     """Frontier peel to a fixed point (or overflow) at static capacities.
 
     Full state in / full state out so the host wrapper can resume after
     doubling a capacity.  Returns (alive, sup, phi, k, stats, overflow).
+
+    ``axis`` names a mesh axis (or tuple of axes) the caller sharded the
+    triangle list + incidence over: edge state is then replicated, the
+    frontier prefix agreed by pmin and decrements merged by psum
+    (``_frontier_round``'s sharded form) — the remove-vs-jump branch and
+    the k jump depend only on the replicated edge state, so every shard
+    takes the same path.  Used by the multi-axis batched peel
+    (``distributed``, DESIGN.md §13), where lanes live on one mesh axis
+    and each lane's triangles on another.
     """
 
     def cond(state):
@@ -200,7 +209,7 @@ def peel_classes_fixedcap(sup0, tris, tri_indptr, tri_ids, alive0, phi0, k0,
         def do_remove(_):
             alive2, sup2, rm_sub, nf, j_take, total_t, ovf = _frontier_round(
                 alive, sup, rm, tris, tri_indptr, tri_ids,
-                cap_f=cap_f, cap_t=cap_t)
+                cap_f=cap_f, cap_t=cap_t, axis=axis)
             phi2 = jnp.where(rm_sub, k, phi)
             return (alive2, sup2, phi2, k,
                     _bump_stats(stats, nf, j_take, total_t), ovf)
@@ -470,9 +479,17 @@ class PendingPeel:
         return self._out
 
 
+def _mesh_axes(mesh_axis) -> tuple:
+    """Normalize a ``mesh_axis`` knob (one axis name or a sequence of them)
+    to a tuple of axis names; axes[0] is always the lane axis."""
+    if isinstance(mesh_axis, str):
+        return (mesh_axis,)
+    return tuple(mesh_axis)
+
+
 def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
                          *, shape_cache=None, blocking=True,
-                         mesh=None, mesh_axis: str = "data",
+                         mesh=None, mesh_axis="data", kernel: str = "auto",
                          fault_ctx: Optional[dict] = None):
     """Local trussness of every NS lane of one bucket in ONE device call.
 
@@ -500,8 +517,19 @@ def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
     and the peel spans the pod (``distributed.peel_classes_batched_sharded``,
     DESIGN.md §10): the lane count is padded to a multiple of the axis size
     with dead lanes, the dispatch stays asynchronous, and the handle's
-    ``sharded`` flag records the routing.  Triangle-free buckets still
-    short-circuit on host (nothing to shard).
+    ``sharded`` flag records the routing.  ``mesh_axis`` may also be a
+    TUPLE of axis names (DESIGN.md §13): lanes split over the first axis
+    and each lane's triangle list + incidence over the second, so a bucket
+    with few big lanes still uses the whole pod.  Triangle-free buckets
+    still short-circuit on host (nothing to shard).
+
+    ``kernel`` ("pallas" | "xla" | "auto") picks the per-lane peel engine
+    for the single-process dispatch: "pallas" runs the fused
+    one-call-per-round kernel (``kernels.frontier_peel``, interpreted
+    off-TPU) straight off the (B, T, 3) triangle stacks — the incidence CSR
+    inputs are ignored; "auto" routes by backend, VMEM budget and triangle
+    density (``frontier_peel.ops.resolve_kernel``).  A ``mesh`` dispatch
+    always uses the XLA shard_map engines.
 
     ``fault_ctx`` names this call at the ``"dispatch"`` fault-injection
     site (and its handle at ``"finalize"``, DESIGN.md §12); ``None`` (the
@@ -537,14 +565,16 @@ def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
         from repro.core.distributed import peel_classes_batched_sharded
         from repro.core.partition import round_up_to_multiple
 
-        n_dev = int(mesh.shape[mesh_axis])
+        axes = _mesh_axes(mesh_axis)
+        n_lane = int(mesh.shape[axes[0]])
         B = int(sup_b.shape[0])
         # key on the PADDED lane count — that is the shape jit compiles
         # (the counter must stay <= the true number of XLA compiles)
-        B_pad = round_up_to_multiple(B, n_dev)
+        B_pad = round_up_to_multiple(B, n_lane)
         key = ((B_pad,) + tuple(sup_b.shape[1:]),
                (B_pad,) + tuple(tris_b.shape[1:]),
-               cap_f, cap_t, ("mesh", n_dev))
+               cap_f, cap_t,
+               ("mesh",) + tuple(int(mesh.shape[a]) for a in axes))
         new = shape_cache is not None and key not in shape_cache
         if shape_cache is not None:
             shape_cache.add(key)
@@ -562,6 +592,25 @@ def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
                                fault_ctx=fault_ctx)
         phi, st = _finish()
         return phi, st, new
+    from repro.kernels.frontier_peel import ops as frontier_ops
+
+    if frontier_ops.resolve_kernel(kernel, cap_e,
+                                   int(tris_np.shape[1])) == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        bt = frontier_ops.resolve_tile(cap_e, int(tris_np.shape[1]),
+                                       "auto", interpret)
+        key = (sup_b.shape, tris_b.shape, ("pallas", bt))
+        new = shape_cache is not None and key not in shape_cache
+        if shape_cache is not None:
+            shape_cache.add(key)
+        phi_d, st_d = frontier_ops.peel_classes_fused(
+            np.asarray(sup_b), tris_np, np.asarray(alive_b),
+            bt=bt, interpret=interpret)
+        if not blocking:
+            return PendingPeel(
+                lambda: (np.asarray(phi_d), np.asarray(st_d)), new,
+                fault_ctx=fault_ctx)
+        return np.asarray(phi_d), np.asarray(st_d), new
     key = (sup_b.shape, tris_b.shape, cap_f, cap_t)
     new = shape_cache is not None and key not in shape_cache
     if shape_cache is not None:
@@ -578,7 +627,7 @@ def peel_classes_batched(sup_b, tris_b, indptr_b, tids_b, alive_b,
 
 def local_threshold_peel(sup0, tris, removable, thresh, *, alive0=None,
                          shape_cache=None, blocking=True, mesh=None,
-                         mesh_axis: str = "data",
+                         mesh_axis="data", kernel: str = "auto",
                          fault_ctx: Optional[dict] = None):
     """Single-level peel of a COMPACTED candidate subgraph on padded shapes.
 
@@ -604,7 +653,16 @@ def local_threshold_peel(sup0, tris, removable, thresh, *, alive0=None,
     of the axis size) and its per-shard incidence are sharded over
     ``mesh_axis`` and the peel runs pod-wide with replicated edge state
     (``distributed.local_threshold_peel_sharded``, DESIGN.md §10); the
-    handle's ``sharded`` flag records the routing.
+    handle's ``sharded`` flag records the routing.  A TUPLE ``mesh_axis``
+    shards the triangles over the flattened product of the named axes
+    (pmin/psum take tuples of axis names), so one huge candidate peel
+    spreads its psum volume across the whole multi-axis mesh.
+
+    ``kernel`` ("pallas" | "xla" | "auto") picks the single-process peel
+    engine: "pallas" runs the fused one-call-per-round kernel on the padded
+    triangle list directly — no incidence CSR is built at all; "auto"
+    routes by backend/VMEM/density (``frontier_peel.ops.resolve_kernel``).
+    A ``mesh`` dispatch always uses the XLA shard_map engine.
 
     ``fault_ctx`` names this call at the ``"dispatch"`` fault-injection
     site (and its handle at ``"finalize"``, DESIGN.md §12); ``None`` (the
@@ -636,7 +694,27 @@ def local_threshold_peel(sup0, tris, removable, thresh, *, alive0=None,
         from repro.core.distributed import local_threshold_peel_sharded
         from repro.core.partition import round_up_to_multiple
 
-        n_dev = int(mesh.shape[mesh_axis])
+        axes = _mesh_axes(mesh_axis)
+        n_dev = 1
+        for a in axes:
+            n_dev *= int(mesh.shape[a])
+        # shape ladder (DESIGN.md §13): if an already-compiled sharded
+        # shape (read back off the caller's shape_cache keys — stage-2
+        # mesh keys are the int-headed 5-tuples) can hold this candidate,
+        # adopt the tightest one so the dispatch is a cache hit instead of
+        # a pod-wide recompile stall; the extra rows are dead padding
+        # whose per-shard cost is 1/n_dev, and a candidate no entry holds
+        # peels at its natural pow4 shape (adding it to the cache)
+        if shape_cache is not None:
+            best = None
+            for k in shape_cache:
+                if (len(k) == 5 and isinstance(k[0], int)
+                        and k[4] == ("mesh", n_dev)
+                        and k[0] >= cap_e and k[1] >= cap_tri):
+                    if best is None or k[0] * k[1] < best[0] * best[1]:
+                        best = k
+            if best is not None:
+                cap_e, cap_tri = best[0], best[1]
         # contiguous triangle shards need equal row counts per device
         cap_tri = round_up_to_multiple(cap_tri, n_dev)
     tris_p = np.full((cap_tri, 3), cap_e, np.int32)
@@ -664,6 +742,27 @@ def local_threshold_peel(sup0, tris, removable, thresh, *, alive0=None,
             return PendingPeel(_finish_sharded, new, sharded=True,
                                fault_ctx=fault_ctx)
         alive, removed = _finish_sharded()
+        return alive, removed, new
+    from repro.kernels.frontier_peel import ops as frontier_ops
+
+    if frontier_ops.resolve_kernel(kernel, cap_e, cap_tri) == "pallas":
+        interpret = jax.default_backend() != "tpu"
+        bt = frontier_ops.resolve_tile(cap_e, cap_tri, "auto", interpret)
+        key = (cap_e, cap_tri, ("pallas", bt))
+        new = shape_cache is not None and key not in shape_cache
+        if shape_cache is not None:
+            shape_cache.add(key)
+        alive_dev = frontier_ops.peel_threshold_fused(
+            sup_p, tris_p, rem_p, thresh, alive_p,
+            bt=bt, interpret=interpret)
+
+        def _finish_fused():
+            alive = np.asarray(alive_dev)[:m] > 0
+            return alive, alive0 & ~alive
+
+        if not blocking:
+            return PendingPeel(_finish_fused, new, fault_ctx=fault_ctx)
+        alive, removed = _finish_fused()
         return alive, removed, new
     indptr, tids = triangle_incidence_np(tris_p, cap_e)
     tids_p = np.zeros(3 * cap_tri, np.int32)
@@ -822,7 +921,8 @@ def estimate_working_set(g) -> int:
 def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
                     memory_budget=None, partitioner: str = "sequential",
                     partitioner_seed: int = 0, mesh=None,
-                    mesh_axis: str = "data", with_stats: bool = False,
+                    mesh_axis="data", mesh_axes=None,
+                    kernel: str = "auto", with_stats: bool = False,
                     checkpoint_dir=None, checkpoint_every: int = 1,
                     resume: bool = False, max_retries: int = 2):
     """End-to-end decomposition — the unified host entry point.
@@ -844,6 +944,16 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
     (DESIGN.md §10) — bucket lanes split over ``mesh_axis``, per-k candidate
     peels triangle-sharded.  The in-memory engines are single-program and
     ignore it (``distributed.peel_classes_sharded`` is their mesh form).
+    ``mesh_axes`` (a sequence of axis names) overrides ``mesh_axis`` with a
+    MULTI-AXIS layout (DESIGN.md §13): bucket lanes split over the first
+    axis while each lane's triangles shard over the second, and candidate
+    peels spread their psum volume over the flattened product — so late
+    rounds with few lanes still use the whole pod.
+
+    ``kernel`` ("pallas" | "xla" | "auto") picks the out-of-core engines'
+    per-lane peel engine (the fused Pallas round kernel vs the XLA frontier
+    chain — ``peel.peel_classes_batched``); the in-memory engines have
+    their own ``engine=`` dispatch and ignore it.
 
     ``checkpoint_dir`` enables the out-of-core engines' round journal
     (DESIGN.md §12): every ``checkpoint_every``-th completed partition
@@ -869,6 +979,9 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
         raise ValueError(
             f"memory_budget must be a positive number of working-set "
             f"entries, got {memory_budget!r}")
+    if mesh_axes is not None:
+        axes = _mesh_axes(mesh_axes)
+        mesh_axis = axes[0] if len(axes) == 1 else axes
     g = build_graph(n, edges)
     if g.m == 0:
         phi = np.zeros(0, np.int64)
@@ -893,6 +1006,7 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
                                       partitioner=partitioner,
                                       partitioner_seed=partitioner_seed,
                                       mesh=mesh, mesh_axis=mesh_axis,
+                                      kernel=kernel,
                                       checkpoint_dir=checkpoint_dir,
                                       checkpoint_every=checkpoint_every,
                                       resume=resume, max_retries=max_retries)
@@ -903,6 +1017,7 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
                                      partitioner=partitioner,
                                      partitioner_seed=partitioner_seed,
                                      mesh=mesh, mesh_axis=mesh_axis,
+                                     kernel=kernel,
                                      checkpoint_dir=checkpoint_dir,
                                      checkpoint_every=checkpoint_every,
                                      resume=resume, max_retries=max_retries)

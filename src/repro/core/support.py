@@ -201,6 +201,18 @@ def triangle_incidence_np(tris: np.ndarray, m: int) -> tuple[np.ndarray, np.ndar
     return np.cumsum(indptr).astype(np.int32), tri_ids
 
 
+def triangle_density(m: int, n_tris: int) -> float:
+    """Incidence entries per edge slot, 3T / E — the routing statistic the
+    fused frontier-peel kernel shares with the dense-core dispatch
+    (DESIGN.md §13).  Each fused removal round streams the FULL triangle
+    list, so the dense sweep amortizes its one-hot matmuls only when the
+    lane is triangle-dense; below ~1 entry per edge the sparse
+    gather/scatter chain wins."""
+    if m <= 0:
+        return 0.0
+    return 3.0 * n_tris / m
+
+
 # ---------------------------------------------------------------------------
 # JAX path
 # ---------------------------------------------------------------------------

@@ -119,7 +119,8 @@ def top_down_decompose(
     *,
     partitioner_seed: int = 0,
     mesh=None,
-    mesh_axis: str = "data",
+    mesh_axis="data",
+    kernel: str = "auto",
     checkpoint_dir=None,
     checkpoint_every: int = 1,
     resume: bool = False,
@@ -130,8 +131,13 @@ def top_down_decompose(
 
     With a ``mesh``, every per-k candidate peel runs with its triangle
     list sharded over ``mesh_axis`` (DESIGN.md §10); ``OocStats.devices``
-    / ``sharded_rounds`` record the routing.  ``partitioner_seed`` offsets
-    the randomized partitioner's per-round reseed in stage 1.
+    / ``sharded_rounds`` record the routing.  A ``(lane, tri)`` tuple
+    ``mesh_axis`` shards the triangle sweep over the flattened product of
+    both axes (DESIGN.md §13).  ``kernel`` routes the candidate peel
+    engine (``"pallas" | "xla" | "auto"``, forwarded to
+    ``peel.local_threshold_peel``); it never changes φ, so it is not part
+    of the checkpoint run key.  ``partitioner_seed`` offsets the
+    randomized partitioner's per-round reseed in stage 1.
 
     With a ``checkpoint_dir`` the run journals round state (DESIGN.md §12):
     stage-1 partition rounds as ``"sup"`` snapshots and each completed class
@@ -146,9 +152,9 @@ def top_down_decompose(
     m = len(edges)
     phi = np.zeros(m, dtype=np.int64)
     stats = OocStats()
-    eng = _Engine(mesh=mesh, mesh_axis=mesh_axis)
+    eng = _Engine(mesh=mesh, mesh_axis=mesh_axis, kernel=kernel)
     if mesh is not None:
-        stats.devices = int(mesh.shape[mesh_axis])
+        stats.devices = eng.devices
     if m == 0:
         return TopDownResult(edges, phi, [], 2, [], 0, stats)
 
@@ -156,7 +162,7 @@ def top_down_decompose(
     if checkpoint_dir is not None:
         key = _run_key("top_down", n, edges, budget, partitioner,
                        partitioner_seed, t=t, faithful=bool(faithful_proc8),
-                       devices=eng.n_dev)
+                       devices=eng.devices)
         journal = RoundJournal(checkpoint_dir, key, every=checkpoint_every,
                                keep=checkpoint_keep)
         if resume:
@@ -173,7 +179,7 @@ def top_down_decompose(
         stats = OocStats.from_dict(td_snap[1]["stats"])
         stats.resumed_round = int(td_snap[1]["index"])
         if mesh is not None:
-            stats.devices = int(mesh.shape[mesh_axis])
+            stats.devices = eng.devices
     elif budget is None:
         g = glib.build_graph(n, edges)
         sup = edge_support_auto(g)
@@ -306,7 +312,7 @@ def top_down_decompose(
             handle = local_threshold_peel(
                 sup0, tris_loc, tentative[h_l], k - 3, alive0=alive_h,
                 shape_cache=shape_cache, blocking=False, mesh=eng.mesh,
-                mesh_axis=eng.mesh_axis,
+                mesh_axis=eng.mesh_axis, kernel=eng.kernel,
                 fault_ctx={"stage": "td", "k": int(k), "retry": 0})
             stats.compiles += int(handle.new_compile)
             stats.batches += 1
@@ -329,7 +335,7 @@ def top_down_decompose(
                 h = local_threshold_peel(
                     _sup, _tris, _rm, _k - 3, alive0=_alive,
                     shape_cache=shape_cache, blocking=False, mesh=e.mesh,
-                    mesh_axis=e.mesh_axis,
+                    mesh_axis=e.mesh_axis, kernel=e.kernel,
                     fault_ctx={"stage": "td", "k": int(_k), "retry": retry})
                 stats.compiles += int(h.new_compile)
                 stats.batches += 1

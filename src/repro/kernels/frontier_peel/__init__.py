@@ -1,0 +1,33 @@
+"""Fused Pallas frontier-peel kernel (DESIGN.md §13).
+
+One ``pallas_call`` per removal round replaces the XLA dispatch chain of
+``peel._frontier_round`` (compact → gather → dedup → scatter): per-lane edge
+state stays VMEM-resident while the triangle list streams through in tiles.
+``ops`` holds the jit'd outer peel loops and the auto-dispatch helpers used
+by ``peel.peel_classes_batched`` / ``peel.local_threshold_peel``; ``ref`` is
+the pure-jnp oracle the parity suite checks the kernel against.
+"""
+
+from repro.kernels.frontier_peel.kernel import (DEFAULT_TILE_CANDIDATES,
+                                                VMEM_BUDGET_BYTES,
+                                                autotune_tiles, feasible_tiles,
+                                                fused_round,
+                                                kernel_vmem_bytes)
+from repro.kernels.frontier_peel.ops import (peel_classes_fused,
+                                             peel_threshold_fused,
+                                             resolve_kernel)
+from repro.kernels.frontier_peel.ref import fused_round_ref, peel_classes_ref
+
+__all__ = [
+    "DEFAULT_TILE_CANDIDATES",
+    "VMEM_BUDGET_BYTES",
+    "autotune_tiles",
+    "feasible_tiles",
+    "fused_round",
+    "kernel_vmem_bytes",
+    "peel_classes_fused",
+    "peel_threshold_fused",
+    "resolve_kernel",
+    "fused_round_ref",
+    "peel_classes_ref",
+]

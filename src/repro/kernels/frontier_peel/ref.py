@@ -1,0 +1,74 @@
+"""Pure-jnp oracle for the fused frontier-peel kernel.
+
+``fused_round_ref`` states the round's semantics with plain gathers and a
+scatter-add (no one-hot matmuls, no tiling); ``peel_classes_ref`` runs the
+whole lockstep class peel on top of it.  The parity suite checks
+``kernel.fused_round`` / ``ops.peel_classes_fused`` against these, and the
+conformance matrix checks both against the XLA frontier engine.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_BIG = jnp.int32(np.iinfo(np.int32).max // 2)
+
+
+def _pad_drop(x):
+    """Append the per-lane drop slot (id cap_e) padding triangles target."""
+    B = x.shape[0]
+    return jnp.concatenate([x, jnp.zeros((B, 1), x.dtype)], axis=1)
+
+
+def fused_round_ref(sup, alive, rm, tris):
+    """One dense removal round; same contract as ``kernel.fused_round``.
+
+    sup/alive/rm: (B, E) int32 masks/counts; tris: (B, T, 3) int32 with
+    padding rows on the drop slot E.  A triangle dies when all corners were
+    alive and >= 1 was removed; each died triangle decrements each of its
+    surviving corners once.
+    """
+    B, cap_e = sup.shape
+    alive_p = _pad_drop(alive)
+    rm_p = _pad_drop(rm)
+    a = [jnp.take_along_axis(alive_p, tris[:, :, c], axis=1) for c in range(3)]
+    r = [jnp.take_along_axis(rm_p, tris[:, :, c], axis=1) for c in range(3)]
+    tri_alive = a[0] * a[1] * a[2]
+    any_rm = 1 - (1 - r[0]) * (1 - r[1]) * (1 - r[2])
+    died = tri_alive * any_rm                                    # (B, T)
+
+    alive2 = alive * (1 - rm)
+    alive2_p = _pad_drop(alive2)
+    dec = jnp.zeros((B, cap_e + 1), jnp.int32)
+    rows = jnp.arange(B)[:, None]
+    for c in range(3):
+        tgt = tris[:, :, c]
+        contrib = died * jnp.take_along_axis(alive2_p, tgt, axis=1)
+        dec = dec.at[rows, tgt].add(contrib)
+    return sup - dec[:, :cap_e], alive2
+
+
+def peel_classes_ref(sup0, tris, alive0):
+    """Trussness of every lane via lockstep dense rounds (host loop).
+
+    sup0/alive0: (B, E); tris: (B, T, 3).  Returns phi (B, E) int32 — the
+    same fixed point as ``peel.peel_classes`` restricted to the alive mask.
+    """
+    sup = jnp.asarray(sup0, jnp.int32)
+    alive = jnp.asarray(alive0, jnp.int32)
+    tris = jnp.asarray(tris, jnp.int32)
+    B, cap_e = sup.shape
+    phi = jnp.zeros((B, cap_e), jnp.int32)
+    k = jnp.full((B,), 2, jnp.int32)
+    while bool(jnp.any(alive > 0)):
+        rm = alive * (sup <= k[:, None] - 2)
+        lane_alive = alive.sum(axis=1) > 0
+        has_rm = rm.sum(axis=1) > 0
+        min_sup = jnp.min(jnp.where(alive > 0, sup, _BIG), axis=1)
+        jump = jnp.maximum(k + 1, min_sup + 2)
+        k_next = jnp.where(lane_alive & ~has_rm, jump, k)
+        phi = jnp.where(rm > 0, k[:, None], phi)
+        sup, alive = fused_round_ref(sup, alive, rm, tris)
+        k = k_next
+    return phi

@@ -30,13 +30,23 @@ _ORACLE = {name: alg2_truss(n, ce) for name, n, ce in CORPUS}
 
 ENGINES = ("dense", "frontier", "bottom-up", "top-down")
 PARTITIONERS = ("sequential", "random", "locality")
-MESHES = ("none", "devices")
+MESHES = ("none", "devices", "devices2d")
 
 
 def _mesh(kind):
+    """(mesh, mesh_axis) for a matrix row.  "devices2d" factors the same
+    devices into a (lane, tri) grid (DESIGN.md §13) — (2, 4) under the CI
+    step's 8 forced host devices, a degenerate (1, 1) locally."""
     if kind == "none":
-        return None
-    return jax.make_mesh((len(jax.devices()),), ("data",))
+        return None, "data"
+    d = len(jax.devices())
+    if kind == "devices":
+        return jax.make_mesh((d,), ("data",)), "data"
+    d0 = 1
+    while (d0 * 2) ** 2 <= d and d % (d0 * 2) == 0:
+        d0 *= 2
+    return (jax.make_mesh((d0, d // d0), ("data", "tri")),
+            ("data", "tri"))
 
 
 def _check_ooc_stats(stats: OocStats, mesh, tag):
@@ -68,14 +78,16 @@ def test_conformance_matrix(engine, partitioner, mesh_kind):
     in_memory = engine in ("dense", "frontier")
     if in_memory and (partitioner != "sequential" or mesh_kind != "none"):
         pytest.skip("in-memory engines ignore partitioner and mesh")
-    mesh = _mesh(mesh_kind)
+    mesh, axes = _mesh(mesh_kind)
     for name, n, ce in CORPUS:
         oracle = _ORACLE[name]
         tag = (engine, partitioner, mesh_kind, name)
         kwargs = dict(engine=engine, with_stats=True)
         if not in_memory:
             kwargs.update(memory_budget=max(48, len(ce)),
-                          partitioner=partitioner, mesh=mesh)
+                          partitioner=partitioner, mesh=mesh,
+                          mesh_axes=axes if mesh_kind == "devices2d"
+                          else None)
         with warnings.catch_warnings():
             # the star-hub graph legitimately warns at deep budgets
             warnings.simplefilter("ignore", PartitionBudgetWarning)
@@ -95,7 +107,7 @@ def test_conformance_matrix(engine, partitioner, mesh_kind):
 def test_conformance_drivers_direct(partitioner, mesh_kind):
     """The driver entry points (not just the unified dispatch) on a deep
     budget: phi equality plus the cross-driver stats contract."""
-    mesh = _mesh(mesh_kind)
+    mesh, axes = _mesh(mesh_kind)
     for name, n, ce in CORPUS:
         oracle = _ORACLE[name]
         tag = (partitioner, mesh_kind, name)
@@ -103,10 +115,32 @@ def test_conformance_drivers_direct(partitioner, mesh_kind):
         with warnings.catch_warnings():
             warnings.simplefilter("ignore", PartitionBudgetWarning)
             res = bottom_up_decompose(n, ce, budget,
-                                      partitioner=partitioner, mesh=mesh)
+                                      partitioner=partitioner, mesh=mesh,
+                                      mesh_axis=axes)
             td = top_down_decompose(n, ce, budget=budget,
-                                    partitioner=partitioner, mesh=mesh)
+                                    partitioner=partitioner, mesh=mesh,
+                                    mesh_axis=axes)
         assert (res.phi == oracle).all(), tag
         _check_ooc_stats(res.stats, mesh, tag)
         assert (td.phi == oracle).all(), tag
         _check_ooc_stats(td.stats, mesh, tag)
+
+
+@pytest.mark.parametrize("engine", ("bottom-up", "top-down"))
+@pytest.mark.parametrize("kernel", ("pallas", "auto"))
+def test_conformance_kernel_knob(engine, kernel):
+    """``kernel=`` rows of the matrix (DESIGN.md §13): the fused Pallas
+    peel (interpret mode off-TPU) and the auto route against the oracle.
+    Single-device only — the mesh path always takes the XLA shard_map
+    engine, so kernel × mesh is not a meaningful cell."""
+    for name, n, ce in CORPUS:
+        oracle = _ORACLE[name]
+        tag = ("kernel", engine, kernel, name)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", PartitionBudgetWarning)
+            phi, stats = truss_decompose(
+                n, ce, engine=engine, memory_budget=max(48, len(ce)),
+                kernel=kernel, with_stats=True)
+        assert (phi == oracle).all(), tag
+        assert verify_truss(n, ce, phi), tag
+        _check_ooc_stats(stats, None, tag)
