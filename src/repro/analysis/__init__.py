@@ -1,0 +1,77 @@
+"""``trusscheck`` — the repo-native static-analysis pass (DESIGN.md §14).
+
+Codifies the bug classes this reproduction has actually shipped as AST
+rules that gate CI: donation safety (PR 4), falsy-zero config guards
+(PR 3), bare asserts under ``python -O`` (PR 6), recompile hazards
+(PR 7's shape-cache discipline), implicit host syncs in the round loops,
+fault-site coverage (DESIGN.md §12) and Pallas kernel invariants
+(DESIGN.md §5).  Run it with::
+
+    python -m repro.analysis src/repro [--json report.json] [--fix]
+
+Stdlib only — no jax import, so the CI gate runs before any dependency
+install.  The rule catalog:
+
+========  =======================================================
+TRK100    allowlist pragma hygiene (rationale required, no stale
+          pragmas) — emitted by the framework itself
+TRK101    donation safety: reads of a buffer after a
+          jit(donate_argnums=...) call consumed it
+TRK102    falsy-zero guards: numeric config tested for truthiness
+TRK103    bare assert in library code (erased under python -O)
+TRK104    recompile hazards: shape-disciplined APIs called in a
+          loop without shape_cache=/shape_ladder=
+TRK105    implicit host syncs inside the hot round loops
+TRK106    fault-site coverage: unregistered sites, missing hooks,
+          dispatches without fault_ctx=
+TRK107    Pallas invariants: tile divisibility + VMEM budgeting
+========  =======================================================
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.analysis.config import DEFAULT_CONFIG, CheckConfig
+from repro.analysis.framework import (Finding, Module, Report, Rule,
+                                      run)
+from repro.analysis.rules_donation import DonationSafetyRule
+from repro.analysis.rules_faults import FaultSiteCoverageRule
+from repro.analysis.rules_guards import BareAssertRule, FalsyZeroGuardRule
+from repro.analysis.rules_jit import HostSyncRule, RecompileHazardRule
+from repro.analysis.rules_pallas import PallasInvariantRule
+
+ALL_RULES = (
+    DonationSafetyRule,
+    FalsyZeroGuardRule,
+    BareAssertRule,
+    RecompileHazardRule,
+    HostSyncRule,
+    FaultSiteCoverageRule,
+    PallasInvariantRule,
+)
+
+
+def build_rules(only: Optional[Sequence[str]] = None) -> List[Rule]:
+    """Instantiate the catalog, optionally restricted to specific ids."""
+    rules = [cls() for cls in ALL_RULES]
+    if only is None:
+        return rules
+    wanted = {r.strip().upper() for r in only if r.strip()}
+    unknown = wanted - {r.rule_id for r in rules} - {"TRK100"}
+    if unknown:
+        raise ValueError(f"unknown rule ids: {sorted(unknown)}")
+    return [r for r in rules if r.rule_id in wanted]
+
+
+def check_paths(paths: Sequence[str], *,
+                only: Optional[Sequence[str]] = None,
+                config: Optional[CheckConfig] = None) -> Report:
+    """Programmatic entry point (the tests drive this)."""
+    return run(paths, build_rules(only), config or DEFAULT_CONFIG)
+
+
+__all__ = [
+    "ALL_RULES", "CheckConfig", "DEFAULT_CONFIG", "Finding", "Module",
+    "Report", "Rule", "build_rules", "check_paths", "run",
+]

@@ -1,0 +1,107 @@
+"""Repo-native configuration for the trusscheck rules.
+
+The rules are generic AST passes; everything that names THIS repo's
+conventions — which modules are the hot round loops, which callables
+donate their buffers, which APIs carry the shape-cache discipline, where
+the fault-site registry lives — is collected here so adding a module or
+an API is a one-line config change, not a rule rewrite (DESIGN.md §14).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class CheckConfig:
+    # --- TRK102: numeric config names whose 0 is a meaningful value, so
+    # bare truthiness (`if budget:`) silently conflates 0 with None — the
+    # PR-3 `if memory_budget:` fallback class.  Matched as fullmatch
+    # against the identifier (parameters, locals and attribute names);
+    # parameters annotated `int | None` / `Optional[int]` are covered
+    # regardless of name.
+    numeric_config_patterns: Tuple[str, ...] = (
+        r".*budget.*", r".*_every", r"every", r".*multiple", r".*capacity",
+        r".*retries", r".*chunks?", r".*interval", r".*limit", r"max_seq",
+        r".*_seed", r"seed", r"n_devices",
+    )
+
+    # --- TRK103: bare asserts are no-ops under the CI `python -O` lane
+    # (PR 6).  Everything under these roots is library code; tests keep
+    # their asserts.
+    library_roots: Tuple[str, ...] = ("src/repro",)
+
+    # --- TRK101: callables known to donate buffers when the defining
+    # module is out of view (cross-module calls match on the trailing
+    # dotted name).  Module-local `X = jax.jit(..., donate_argnums=...)`
+    # bindings and donating `@partial(jax.jit, ...)` decorators are
+    # discovered from the AST and need no entry here.
+    known_donating_callables: Tuple[str, ...] = (
+        "peel_classes_fused",           # kernels.frontier_peel.ops (arg 0)
+    )
+
+    # --- TRK104: APIs that compile per operand shape and therefore carry
+    # the shape-cache / shape-ladder discipline (PR 7).  A call to one of
+    # these inside a per-round / per-level loop without the keyword is a
+    # recompile hazard: each data-dependent shape re-traces pod-wide.
+    shape_disciplined_apis: Dict[str, Tuple[str, ...]] = dataclasses.field(
+        default_factory=lambda: {
+            "peel_classes_batched": ("shape_cache",),
+            "local_threshold_peel": ("shape_cache",),
+            "build_partition_batch": ("shape_ladder", "lane_capacity"),
+        })
+
+    # --- TRK105: modules whose round loops are the latency-critical path;
+    # host syncs (int()/.item()/np.asarray on device values) inside their
+    # loops stall the dispatch pipeline.
+    hot_modules: Tuple[str, ...] = (
+        "core/bottom_up.py", "core/top_down.py", "core/peel.py",
+    )
+    # Calls whose results live on device (module-local jit bindings are
+    # discovered from the AST; these cover cross-module producers).
+    device_producers: Tuple[str, ...] = (
+        "peel_classes_batched_sharded", "local_threshold_peel_sharded",
+        "peel_classes_fused",
+    )
+
+    # --- TRK106: the fault-site registry module and the functions that
+    # must carry a `faults.check(...)` hook (DESIGN.md §12).  Keyed by
+    # (module suffix, function name) -> required site constant name.
+    faults_module: str = "core/faults.py"
+    required_fault_hooks: Dict[Tuple[str, str], str] = dataclasses.field(
+        default_factory=lambda: {
+            ("core/peel.py", "peel_classes_batched"): "DISPATCH",
+            ("core/peel.py", "local_threshold_peel"): "DISPATCH",
+            ("core/peel.py", "PendingPeel.result"): "FINALIZE",
+            ("core/bottom_up.py", "_partition_rounds"): "PARTITIONER",
+            ("checkpoint/manager.py", "save"): "CHECKPOINT_WRITE",
+        })
+    # Modules whose dispatch-capable peel calls must name themselves at
+    # the fault sites (fault_ctx=) so injection plans can target them.
+    fault_instrumented_modules: Tuple[str, ...] = (
+        "core/bottom_up.py", "core/top_down.py",
+    )
+    fault_instrumented_apis: Tuple[str, ...] = (
+        "peel_classes_batched", "local_threshold_peel",
+    )
+
+    # --- TRK107: Pallas kernel invariants.  Kernel modules must guard
+    # tile divisibility with typed raises (asserts vanish under -O) and
+    # compare a VMEM working-set estimate against the budget constant.
+    kernel_globs: Tuple[str, ...] = ("kernels/",)
+    vmem_helper_pattern: str = r".*vmem_bytes.*"
+    vmem_budget_pattern: str = r".*(VMEM_BUDGET|budget_bytes).*"
+    # Tile-knob parameter names (block sizes fed into BlockSpec shapes).
+    tile_param_pattern: str = r"b[a-z][a-z0-9]*|tile.*|block.*"
+
+    def numeric_config_re(self) -> re.Pattern:
+        return re.compile("|".join(f"(?:{p})"
+                                   for p in self.numeric_config_patterns))
+
+    def tile_param_re(self) -> re.Pattern:
+        return re.compile(self.tile_param_pattern)
+
+
+DEFAULT_CONFIG = CheckConfig()

@@ -1,0 +1,201 @@
+"""TRK101 donation safety.
+
+PR 4's worst bug: a failed ``PendingPeel`` finalize was retried, re-running
+a kernel whose input buffers had been DONATED by ``jax.jit(...,
+donate_argnums=...)`` on the first attempt — the retry read dead device
+memory.  The fix was the consumed/poisoned handle pattern
+(``PendingPeel.result``): clear the callable before invoking it, poison the
+handle on failure, never re-invoke.
+
+The static form of that class: once a variable has been passed in a
+donated position of a donating call, reading it again (including passing
+it to the same call a second time, or looping over the call without
+rebuilding the buffer) is a use of donated memory.  Reassignment clears
+the taint — rebuilding the buffer every round is exactly the discipline
+the peel drivers follow.
+
+Scope and limits (DESIGN.md §14): donating callables are discovered from
+module-level ``X = jax.jit(..., donate_argnums=...)`` bindings, donating
+``@jax.jit`` / ``@partial(jax.jit, ...)`` decorators, and the configured
+cross-module registry; only *bare-name* donated arguments are tracked
+(``f(jnp.asarray(x))`` builds a fresh operand and is always safe);
+statement order approximates control flow, so a read in an earlier
+``except`` branch is out of scope — the runtime consumed/poisoned pattern
+covers that half of the class.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis import framework as fw
+
+
+@dataclasses.dataclass
+class _Donor:
+    name: str                      # callable name (trailing segment)
+    positions: Tuple[int, ...]     # donated positional indices
+
+
+def _donate_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """Donated arg indices of a ``jax.jit(...)`` call, if any."""
+    if fw.call_name(call).split(".")[-1] != "jit":
+        return None
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            val = kw.value
+            if isinstance(val, ast.Constant) and isinstance(val.value, int):
+                return (val.value,)
+            if isinstance(val, (ast.Tuple, ast.List)):
+                out = []
+                for elt in val.elts:
+                    if isinstance(elt, ast.Constant) and isinstance(
+                            elt.value, int):
+                        out.append(elt.value)
+                return tuple(out) if out else (0,)
+            return (0,)            # dynamic spec: assume the convention
+    return None
+
+
+def _decorator_donations(func: ast.AST) -> Optional[Tuple[int, ...]]:
+    """Donations declared by ``@jax.jit(...)`` or ``@partial(jax.jit, ...)``
+    decorators on a function definition."""
+    for dec in getattr(func, "decorator_list", ()):
+        if not isinstance(dec, ast.Call):
+            continue
+        pos = _donate_positions(dec)
+        if pos is not None:
+            return pos
+        if fw.call_name(dec).split(".")[-1] == "partial" and dec.args:
+            inner_name = fw.dotted_name(dec.args[0]).split(".")[-1]
+            if inner_name == "jit":
+                for kw in dec.keywords:
+                    if kw.arg in ("donate_argnums", "donate_argnames"):
+                        fake = ast.Call(func=ast.Name(id="jit",
+                                                      ctx=ast.Load()),
+                                        args=[], keywords=[kw])
+                        return _donate_positions(fake) or (0,)
+    return None
+
+
+def _module_donors(module: fw.Module, config) -> Dict[str, _Donor]:
+    donors: Dict[str, _Donor] = {}
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            pos = _donate_positions(node.value)
+            if pos is not None:
+                for name in fw.assigned_names(node.targets[0]):
+                    donors[name] = _Donor(name, pos)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            pos = _decorator_donations(node)
+            if pos is not None:
+                donors[node.name] = _Donor(node.name, pos)
+    for name in config.known_donating_callables:
+        donors.setdefault(name, _Donor(name, (0,)))
+    return donors
+
+
+class DonationSafetyRule(fw.Rule):
+    """TRK101: reads of a buffer after it was donated to a jitted call."""
+
+    rule_id = "TRK101"
+    summary = ("variable read after being passed in a donated position "
+               "of a jit(donate_argnums=...) call")
+
+    def check(self, module: fw.Module, config) -> List[fw.Finding]:
+        donors = _module_donors(module, config)
+        if not donors:
+            return []
+        findings: List[fw.Finding] = []
+        funcs = [n for n in ast.walk(module.tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        for func in funcs:
+            findings.extend(self._check_scope(module, func, donors))
+        return findings
+
+    def _check_scope(self, module: fw.Module, func: ast.AST,
+                     donors: Dict[str, _Donor]) -> List[fw.Finding]:
+        findings: List[fw.Finding] = []
+        # nodes belonging to nested defs are a different execution time;
+        # exclude them from this scope's linear order
+        own_nodes = []
+        for node in ast.walk(func):
+            if node is func:
+                continue
+            skip = False
+            for p in fw.parents(node):
+                if p is func:
+                    break
+                if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                    skip = True
+                    break
+            if not skip:
+                own_nodes.append(node)
+
+        donating_calls: List[Tuple[ast.Call, _Donor]] = []
+        for node in own_nodes:
+            if isinstance(node, ast.Call):
+                donor = donors.get(fw.call_name(node).split(".")[-1])
+                if donor is not None:
+                    donating_calls.append((node, donor))
+
+        assign_lines: Dict[str, List[int]] = {}
+        for node in own_nodes:
+            targets: List[ast.AST] = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign,
+                                   ast.For, ast.AsyncFor)):
+                targets = [node.target]
+            elif isinstance(node, ast.withitem) and node.optional_vars:
+                targets = [node.optional_vars]
+            for t in targets:
+                lineno = getattr(node, "lineno", None) or t.lineno
+                for name in fw.assigned_names(t):
+                    assign_lines.setdefault(name, []).append(lineno)
+
+        for call, donor in donating_calls:
+            for idx in donor.positions:
+                if idx >= len(call.args):
+                    continue
+                arg = call.args[idx]
+                if not isinstance(arg, ast.Name):
+                    continue  # fresh expression: a new buffer every call
+                name = arg.id
+                rebinds = assign_lines.get(name, [])
+                # (a) donated inside a loop without rebuilding the buffer
+                # in that loop: iteration 2 donates dead memory
+                for loop in fw.enclosing_loops(call):
+                    rebuilt = any(loop.lineno <= ln <= loop.end_lineno
+                                  for ln in rebinds)
+                    if not rebuilt:
+                        findings.append(self.finding(
+                            module, call,
+                            f"`{name}` is donated to `{donor.name}` inside "
+                            f"a loop but never rebuilt in the loop body — "
+                            f"the second iteration re-donates a consumed "
+                            f"buffer; rebuild `{name}` each iteration or "
+                            f"use the consumed/poisoned handle pattern "
+                            f"(PendingPeel.result)"))
+                        break
+                # (b) read after the donating call with no rebind between
+                for node in own_nodes:
+                    if (isinstance(node, ast.Name) and node.id == name
+                            and isinstance(node.ctx, ast.Load)
+                            and node is not arg
+                            and node.lineno > call.lineno):
+                        rebound = any(call.lineno < ln <= node.lineno
+                                      for ln in rebinds)
+                        if not rebound:
+                            findings.append(self.finding(
+                                module, node,
+                                f"`{name}` read after being donated to "
+                                f"`{donor.name}` at line {call.lineno} — "
+                                f"the buffer is consumed; rebuild it or "
+                                f"clear the reference before reuse "
+                                f"(the PR-4 PendingPeel retry bug class)"))
+                            break  # one finding per donated name per call
+        return findings

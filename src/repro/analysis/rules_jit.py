@@ -1,0 +1,144 @@
+"""TRK104 recompilation hazards and TRK105 implicit host syncs.
+
+Both rules police the hot round loops of the out-of-core drivers:
+
+* PR 7 established the shape-cache / shape-ladder discipline — every
+  jitted peel dispatched from a per-round or per-level loop keys its
+  operand shapes through a caller-owned cache (``shape_cache=``) or packs
+  onto an already-compiled shape (``shape_ladder=``), because a
+  data-dependent Python shape re-traces pod-wide (the 14→4 compile-count
+  fix).  TRK104 flags calls to the shape-disciplined APIs from inside a
+  loop that drop the keyword.
+* TRK105 flags host synchronisation (``int()``/``float()``/``bool()``/
+  ``.item()``/``np.asarray``) on device values inside the round loops of
+  the configured hot modules — each one blocks dispatch and serialises
+  the double-buffered pipeline (DESIGN.md §9).  Device values are tracked
+  by taint: names assigned from module-level jit bindings or the
+  configured cross-module producers.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis import framework as fw
+
+_SYNC_BUILTINS = {"int", "float", "bool"}
+
+
+class RecompileHazardRule(fw.Rule):
+    """TRK104: shape-disciplined API called in a loop without its
+    shape-cache/shape-ladder keyword."""
+
+    rule_id = "TRK104"
+    summary = ("jitted peel/pack API called inside a per-round loop "
+               "without shape_cache=/shape_ladder= (recompile hazard)")
+
+    def check(self, module: fw.Module, config) -> List[fw.Finding]:
+        findings: List[fw.Finding] = []
+        apis = config.shape_disciplined_apis
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = fw.call_name(node).split(".")[-1]
+            required = apis.get(name)
+            if required is None:
+                continue
+            if not fw.enclosing_loops(node):
+                continue
+            kwargs = fw.keyword_names(node)
+            if any(kw.arg is None for kw in node.keywords):
+                continue  # **kwargs forwarding: assume the caller threads it
+            if not any(r in kwargs for r in required):
+                findings.append(self.finding(
+                    module, node,
+                    f"`{name}` called inside a loop without "
+                    f"{' / '.join(f'`{r}=`' for r in required)}: each "
+                    f"data-dependent operand shape re-traces and "
+                    f"recompiles (pod-wide under a mesh) — thread the "
+                    f"run's shape cache through this call (PR-7 "
+                    f"discipline, DESIGN.md §13)"))
+        return findings
+
+
+def _module_producers(module: fw.Module, config) -> Set[str]:
+    """Names whose call results live on device: module-level ``jax.jit``
+    bindings, jit-decorated defs, plus the configured cross-module list."""
+    out: Set[str] = set(config.device_producers)
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if fw.call_name(node.value).split(".")[-1] == "jit":
+                out.update(fw.assigned_names(node.targets[0]))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                dn = fw.dotted_name(dec if not isinstance(dec, ast.Call)
+                                    else dec.func).split(".")[-1]
+                if dn == "jit" or (isinstance(dec, ast.Call)
+                                   and dn == "partial" and dec.args
+                                   and fw.dotted_name(dec.args[0])
+                                   .split(".")[-1] == "jit"):
+                    out.add(node.name)
+    return out
+
+
+class HostSyncRule(fw.Rule):
+    """TRK105: host sync on a device value inside a hot round loop."""
+
+    rule_id = "TRK105"
+    summary = ("int()/.item()/np.asarray on a device value inside a hot "
+               "round loop (blocks the dispatch pipeline)")
+
+    def check(self, module: fw.Module, config) -> List[fw.Finding]:
+        norm = module.path.replace("\\", "/")
+        if not any(norm.endswith(suffix) for suffix in config.hot_modules):
+            return []
+        producers = _module_producers(module, config)
+        findings: List[fw.Finding] = []
+        for func in ast.walk(module.tree):
+            if not isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            tainted: Set[str] = set()
+            for node in ast.walk(func):
+                if (isinstance(node, ast.Assign)
+                        and isinstance(node.value, ast.Call)
+                        and fw.call_name(node.value).split(".")[-1]
+                        in producers):
+                    for t in node.targets:
+                        tainted.update(fw.assigned_names(t))
+            if not tainted:
+                continue
+            for node in ast.walk(func):
+                if not isinstance(node, ast.Call):
+                    continue
+                sync_name = self._synced_name(node, tainted)
+                if sync_name and fw.enclosing_loops(node):
+                    findings.append(self.finding(
+                        module, node,
+                        f"host sync on device value `{sync_name}` inside "
+                        f"a round loop: this blocks until the device "
+                        f"catches up and serialises the double-buffered "
+                        f"pipeline — keep the value on device, or sync "
+                        f"once outside the loop (DESIGN.md §9)"))
+        return findings
+
+    @staticmethod
+    def _synced_name(call: ast.Call, tainted: Set[str]) -> str:
+        name = fw.call_name(call)
+        # int(x) / float(x) / bool(x)
+        if name in _SYNC_BUILTINS and call.args:
+            arg = call.args[0]
+            if isinstance(arg, ast.Name) and arg.id in tainted:
+                return arg.id
+        # x.item()
+        if (isinstance(call.func, ast.Attribute)
+                and call.func.attr == "item"
+                and isinstance(call.func.value, ast.Name)
+                and call.func.value.id in tainted):
+            return call.func.value.id
+        # np.asarray(x) / numpy.asarray(x) / np.array(x)
+        if name.split(".")[-1] in ("asarray", "array") and call.args:
+            arg = call.args[0]
+            if isinstance(arg, ast.Name) and arg.id in tainted:
+                return arg.id
+        return ""

@@ -1,0 +1,146 @@
+"""TRK107 Pallas kernel invariants.
+
+The Pallas kernels (DESIGN.md §5, §13) rest on two statically visible
+contracts that have each bitten before:
+
+* **tile divisibility** — every tile knob fed into a ``pl.BlockSpec``
+  shape must be checked to divide the dimension it tiles (or be handled
+  by an explicit padding path).  An undivisible tile doesn't fail loudly
+  on TPU; it reads garbage off the tile edge.  The check must be a typed
+  raise or a candidate *filter* (``feasible_tiles``-style) — a bare
+  ``assert`` is compiled out in the ``python -O`` CI lane (TRK103).
+* **VMEM budgeting** — the working set implied by the block specs must be
+  estimated (a ``*vmem_bytes*`` helper) and *compared against the budget
+  constant* somewhere in the module (``VMEM_BUDGET_BYTES`` /
+  ``budget_bytes``), the ``kernel_vmem_bytes`` discipline of the
+  triangle-count and frontier-peel kernels.  A kernel without the
+  estimate can't be autotuned and OOMs at whatever tile a caller picks.
+
+Static limits (DESIGN.md §14): the rule proves the *discipline* exists —
+a divisibility check per tile knob and a budget comparison per module —
+not that the arithmetic inside them is right; the kernel-vs-ref parity
+suites own that half.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Set
+
+from repro.analysis import framework as fw
+
+
+def _pallas_calls(module: fw.Module) -> List[ast.Call]:
+    return [n for n in ast.walk(module.tree)
+            if isinstance(n, ast.Call)
+            and fw.call_name(n).split(".")[-1] == "pallas_call"]
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _guard_exprs(module: fw.Module) -> List[ast.AST]:
+    """Expressions evaluated as live conditions: if/while/ternary tests
+    and comprehension filters.  Asserts are deliberately excluded — they
+    vanish under ``python -O`` (the TRK103 class)."""
+    out: List[ast.AST] = []
+    for node in ast.walk(module.tree):
+        if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+            out.append(node.test)
+        elif isinstance(node, ast.comprehension):
+            out.extend(node.ifs)
+    return out
+
+
+class PallasInvariantRule(fw.Rule):
+    """TRK107: pallas_call modules must guard tile divisibility and
+    budget-check a VMEM estimate."""
+
+    rule_id = "TRK107"
+    summary = ("Pallas kernel without a live tile-divisibility guard or "
+               "VMEM-budget comparison")
+
+    def check(self, module: fw.Module, config) -> List[fw.Finding]:
+        calls = _pallas_calls(module)
+        if not calls:
+            return []
+        findings: List[fw.Finding] = []
+        tile_re = config.tile_param_re()
+        vmem_re = re.compile(config.vmem_helper_pattern)
+
+        # names that appear inside a % in a live guard expression
+        guarded: Set[str] = set()
+        for expr in _guard_exprs(module):
+            for node in ast.walk(expr):
+                if isinstance(node, ast.BinOp) and isinstance(node.op,
+                                                              ast.Mod):
+                    guarded |= _names_in(node)
+
+        # (a) per kernel function: every tile knob used in the pallas_call
+        # subtree has a divisibility guard somewhere in the module
+        for call in calls:
+            func = fw.enclosing_function(call)
+            if func is None:
+                continue
+            params = {a.arg for a in (func.args.posonlyargs + func.args.args
+                                      + func.args.kwonlyargs)}
+            used = _names_in(call)
+            for p in sorted(params & used):
+                if not tile_re.fullmatch(p):
+                    continue
+                if p not in guarded:
+                    findings.append(self.finding(
+                        module, call,
+                        f"tile knob `{p}` feeds the pallas_call block "
+                        f"specs but no live divisibility check "
+                        f"(`dim % {p}` in an if/raise or candidate "
+                        f"filter) exists in this module — an undivisible "
+                        f"tile reads off the block edge on TPU; guard it "
+                        f"with a typed raise (asserts are erased under "
+                        f"-O) or a feasible_tiles-style filter"))
+
+        # (b) module-level: a VMEM estimate compared against the budget
+        has_helper = any(
+            vmem_re.fullmatch(node.name)
+            for node in ast.walk(module.tree)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ) or any(
+            vmem_re.fullmatch(alias.name.split(".")[-1])
+            for node in ast.walk(module.tree)
+            if isinstance(node, (ast.Import, ast.ImportFrom))
+            for alias in node.names
+        )
+        # names bound to a vmem-estimate call count as the estimate too
+        # (`need = kernel_vmem_bytes(...); if need > BUDGET:`)
+        vmem_names: Set[str] = set()
+        for node in ast.walk(module.tree):
+            if (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Call)
+                    and vmem_re.fullmatch(
+                        fw.call_name(node.value).split(".")[-1])):
+                for name in fw.assigned_names(node.targets[0]):
+                    vmem_names.add(name)
+        has_compare = False
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            sides = [node.left] + list(node.comparators)
+            for side in sides:
+                if (isinstance(side, ast.Call)
+                        and vmem_re.fullmatch(
+                            fw.call_name(side).split(".")[-1])):
+                    has_compare = True
+                elif (isinstance(side, ast.Name)
+                        and side.id in vmem_names):
+                    has_compare = True
+        if not (has_helper and has_compare):
+            findings.append(self.finding(
+                module, calls[0],
+                "pallas_call module without a VMEM working-set estimate "
+                "compared against the budget: define a "
+                "`kernel_vmem_bytes(...)`-style helper for the block "
+                "specs and check it against VMEM_BUDGET_BYTES before "
+                "launching (DESIGN.md §5 discipline)"))
+        return findings

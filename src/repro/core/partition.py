@@ -657,6 +657,11 @@ def build_partition_batch(
                                     support_from_triangle_list,
                                     triangle_incidence_np)
 
+    if lane_capacity is not None and lane_capacity <= 0:
+        raise ValueError(
+            f"lane_capacity must be positive or None, got {lane_capacity!r}; "
+            f"0 is not 'unset' — pass None for natural pow4 size classes")
+
     # ONE skew-aware triangle enumeration per round, scoped to the round's
     # NS union — the subgraph of edges with >= 1 endpoint in some part,
     # i.e. exactly what the paper's round reads.  A triangle needs >= 2
@@ -725,13 +730,14 @@ def build_partition_batch(
         sizes = [item[2] for item in per_part]
         tri_lens = [len(item[3]) for item in per_part]
         cap = max(max(sizes), -(-sum(sizes) // lane_multiple))
-        key = _pow2_ceil(max(cap, lane_capacity or 1))
+        floor_cap = 1 if lane_capacity is None else lane_capacity
+        key = _pow2_ceil(max(cap, floor_cap))
         # shape ladder: adopt the tightest already-compiled shape the
         # round fits inside (trial FFD pack per candidate — part counts
         # are small); natural shape when none fits
         for fe, ft, fl in sorted(shape_ladder or (),
                                  key=lambda s: s[0] * s[1]):
-            if fe < max(max(sizes), lane_capacity or 1):
+            if fe < max(max(sizes), floor_cap):
                 continue
             trial = _first_fit_decreasing(sizes, fe)
             if len(trial) > fl:
@@ -743,7 +749,7 @@ def build_partition_batch(
         groups[key] = list(range(len(per_part)))
     else:
         for idx, item in enumerate(per_part):
-            if lane_capacity and item[2] <= lane_capacity:
+            if lane_capacity is not None and item[2] <= lane_capacity:
                 key = lane_capacity
             else:
                 key = _pow4_ceil(item[2])

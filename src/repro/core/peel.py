@@ -343,6 +343,7 @@ def peel_classes(sup0, tris, edge_alive0, max_k=None, *, incidence=None,
         alive, sup, phi, k, stats, overflow = peel_classes_fixedcap(
             sup, tris_j, indptr_j, tids_j, alive, phi, k, stats,
             cap_f=cap_f, cap_t=cap_t, max_k=max_k)
+        # trusscheck: allow[TRK105] -- capacity-resume: the host must read the overflow flag to decide the recompile-at-2x resume (one sync per resume, not per round)
         if not bool(overflow):
             break
         cap_t *= 2          # host fallback: double and resume
@@ -389,6 +390,7 @@ def peel_threshold(sup0, tris, alive0, removable, thresh, *, incidence=None,
         alive, sup, stats, overflow = peel_threshold_fixedcap(
             sup, tris_j, indptr_j, tids_j, alive, removable, thresh, stats,
             cap_f=cap_f, cap_t=cap_t)
+        # trusscheck: allow[TRK105] -- capacity-resume: the host must read the overflow flag to decide the recompile-at-2x resume (one sync per resume, not per round)
         if not bool(overflow):
             break
         cap_t *= 2

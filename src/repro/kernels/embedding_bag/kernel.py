@@ -21,6 +21,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# VMEM the tile working set may claim; real VMEM is ~16 MiB/core but the
+# pipeliner needs headroom for semaphores/regs, so budget conservatively.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def kernel_vmem_bytes(D: int, in_dtype=jnp.float32) -> int:
+    """Per-step VMEM working set (DESIGN.md §5): the double-buffered
+    (1, D) row and output tiles plus the f32 accumulator scratch."""
+    in_bytes = jnp.dtype(in_dtype).itemsize
+    return 2 * (D * in_bytes + D * in_bytes) + D * 4
+
 
 def _bag_kernel(idx_ref, row_ref, o_ref, acc_ref, *, mode, bag_len):
     l = pl.program_id(1)
@@ -46,9 +57,15 @@ def embedding_bag_kernel(
     mode: str = "mean",
     interpret: bool = False,
 ) -> jnp.ndarray:
-    assert mode in ("sum", "mean")
+    if mode not in ("sum", "mean"):
+        raise ValueError(f"mode must be 'sum' or 'mean', got {mode!r}")
     B, L = idx.shape
     V, D = table.shape
+    need = kernel_vmem_bytes(D, table.dtype)
+    if need > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"row working set {need} B exceeds the VMEM budget "
+            f"{VMEM_BUDGET_BYTES} B; shard the embedding dim D={D}")
     kernel = functools.partial(_bag_kernel, mode=mode, bag_len=L)
     return pl.pallas_call(
         kernel,

@@ -27,6 +27,23 @@ from jax.experimental.pallas import tpu as pltpu
 
 _NEG_INF = -1e30
 
+# VMEM the tile working set may claim; real VMEM is ~16 MiB/core but the
+# pipeliner needs headroom for semaphores/regs, so budget conservatively.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def kernel_vmem_bytes(bq: int, bk: int, d: int, in_dtype=jnp.float32) -> int:
+    """Per-step VMEM working set (DESIGN.md §5).
+
+    Double-buffered q (bq, d), k and v (bk, d) input tiles and output
+    tile, plus the single-instance f32 scratch: acc (bq, d) and the
+    (m, l) running-softmax columns (bq, 1) each.
+    """
+    in_bytes = jnp.dtype(in_dtype).itemsize
+    tiles_io = (bq * d + 2 * bk * d + bq * d) * in_bytes * 2
+    scratch = (bq * d + 2 * bq) * 4
+    return tiles_io + scratch
+
 
 def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                  *, scale, causal, window, bq, bk):
@@ -94,11 +111,21 @@ def flash_attention_kernel(
 ) -> jnp.ndarray:
     b, hq, s, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
-    assert hq % hkv == 0, (hq, hkv)
+    if hq % hkv:
+        raise ValueError(f"q heads must be a multiple of kv heads for GQA, "
+                         f"got hq={hq}, hkv={hkv}")
     group = hq // hkv
     bq = min(bq, s)
     bk = min(bk, skv)
-    assert s % bq == 0 and skv % bk == 0, (s, bq, skv, bk)
+    if s % bq or skv % bk:
+        raise ValueError(f"block sizes must divide the sequence lengths: "
+                         f"s={s} %% bq={bq}, skv={skv} %% bk={bk}")
+    need = kernel_vmem_bytes(bq, bk, d, q.dtype)
+    if need > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"tile working set {need} B exceeds the VMEM budget "
+            f"{VMEM_BUDGET_BYTES} B; shrink bq/bk (got bq={bq}, bk={bk}, "
+            f"d={d}, dtype={q.dtype})")
     scale = 1.0 / (d ** 0.5)
     grid = (b, hq, s // bq, skv // bk)
     kernel = functools.partial(

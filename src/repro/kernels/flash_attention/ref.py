@@ -15,7 +15,9 @@ def mha_reference(
 ) -> jnp.ndarray:
     b, hq, s, d = q.shape
     hkv = k.shape[1]
-    assert hq % hkv == 0
+    if hq % hkv:
+        raise ValueError(f"q heads must be a multiple of kv heads for GQA, "
+                         f"got hq={hq}, hkv={hkv}")
     group = hq // hkv
     kf = jnp.repeat(k, group, axis=1)
     vf = jnp.repeat(v, group, axis=1)
@@ -30,7 +32,6 @@ def mha_reference(
     if window is not None:
         mask &= kj > qi - window
     logits = jnp.where(mask[None, None], logits, -jnp.inf)
-    p = jax._src_unused if False else None  # noqa: keep module import-light
     probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
     probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
     out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf.astype(jnp.float32))

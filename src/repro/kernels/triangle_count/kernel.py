@@ -86,10 +86,14 @@ def triangle_count_kernel(
     below 2^24 triangles per edge.
     """
     n = A.shape[0]
-    assert A.shape == (n, n)
-    assert A.dtype in (jnp.float32, jnp.bfloat16), A.dtype
+    if A.shape != (n, n):
+        raise ValueError(f"adjacency must be square, got {A.shape}")
+    if A.dtype not in (jnp.float32, jnp.bfloat16):
+        raise TypeError(f"adjacency dtype must be f32 or bf16, got {A.dtype}")
     bm, bn, bk = (min(b, n) for b in (bm, bn, bk))
-    assert n % bm == 0 and n % bn == 0 and n % bk == 0, (n, bm, bn, bk)
+    if n % bm or n % bn or n % bk:
+        raise ValueError(f"tile shapes must divide n={n}, got "
+                         f"(bm, bn, bk)=({bm}, {bn}, {bk})")
     grid = (n // bm, n // bn, n // bk)
     return pl.pallas_call(
         _kernel,

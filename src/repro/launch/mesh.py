@@ -22,12 +22,15 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_host_mesh(n: int | None = None, axes=("data", "model")):
     """Small mesh over whatever devices exist (tests / examples)."""
-    nd = n or len(jax.devices())
+    if n is not None and n <= 0:
+        raise ValueError(f"mesh device count must be positive or None "
+                         f"(= all local devices), got {n!r}")
+    total = len(jax.devices()) if n is None else n
+    nd = total
     if len(axes) == 1:
         return jax.make_mesh((nd,), axes)
     d = 1
     while nd % 2 == 0 and d * d < nd:   # largest power-of-two split
         d *= 2
         nd //= 2
-    total = n or len(jax.devices())
     return jax.make_mesh((d, total // d), axes)

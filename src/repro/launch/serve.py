@@ -58,7 +58,9 @@ def main():
           f"{args.new_tokens} decode steps in {t_decode*1e3:.1f} ms "
           f"({args.requests*args.new_tokens/max(t_decode,1e-9):.0f} tok/s)")
     print("[serve] first request generation:", gen[0].tolist())
-    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    if not np.isfinite(np.asarray(logits, np.float32)).all():
+        raise RuntimeError("non-finite logits in the final decode step — "
+                           "the served checkpoint or kernel path is broken")
 
 
 if __name__ == "__main__":

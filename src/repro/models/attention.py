@@ -45,7 +45,10 @@ def chunked_attention(q, k, v, *, causal=True, q_chunk=512, k_chunk=1024,
     skv = k.shape[1]
     q_chunk = min(q_chunk, sq)
     k_chunk = min(k_chunk, skv)
-    assert sq % q_chunk == 0 and skv % k_chunk == 0
+    if sq % q_chunk or skv % k_chunk:
+        raise ValueError(f"chunk sizes must divide the sequence lengths: "
+                         f"sq={sq} %% q_chunk={q_chunk}, "
+                         f"skv={skv} %% k_chunk={k_chunk}")
     nq, nk = sq // q_chunk, skv // k_chunk
     scale = 1.0 / math.sqrt(d)
     qg, kg, vg, g = _gqa_split(q, k, v)
@@ -96,7 +99,9 @@ def banded_attention(q, k, v, *, window, q_chunk=512):
     """Sliding-window causal attention: q chunk i sees k[i*bq - W, i*bq + bq)."""
     b, s, hq, d = q.shape
     q_chunk = min(q_chunk, s)
-    assert s % q_chunk == 0
+    if s % q_chunk:
+        raise ValueError(f"q_chunk={q_chunk} must divide the sequence "
+                         f"length s={s}")
     nq = s // q_chunk
     scale = 1.0 / math.sqrt(d)
     qg, kg, vg, g = _gqa_split(q, k, v)

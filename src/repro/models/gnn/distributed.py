@@ -52,7 +52,9 @@ def bucket_edges_by_owner(
     and dst_pos (P, P, Eb, 3).  n_pad must be divisible by n_devices.
     """
     Pn = n_devices
-    assert n_pad % Pn == 0
+    if n_pad % Pn:
+        raise ValueError(f"n_pad={n_pad} must be divisible by "
+                         f"n_devices={Pn}; pad the vertex count first")
     W = n_pad // Pn
     src = edge_index[:, 0].astype(np.int64)
     dst = edge_index[:, 1].astype(np.int64)

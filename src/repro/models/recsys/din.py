@@ -116,7 +116,9 @@ def din_retrieval(params, batch, cfg: DINConfig):
     cand_cats = batch["cand_cats"]
     n = cand_items.shape[0]
     k = cfg.cand_chunks
-    assert n % k == 0, (n, k)
+    if n % k:
+        raise ValueError(f"candidate count n={n} must be divisible by "
+                         f"cfg.cand_chunks={k}")
 
     def chunk(carry, ids):
         ci, cc = ids

@@ -42,7 +42,9 @@ def sharded_lookup(table: jnp.ndarray, ids: jnp.ndarray,
         return jnp.take(table, ids, axis=0)
     p = mesh.shape[axis]
     V = table.shape[0]
-    assert V % p == 0, (V, p)
+    if V % p:
+        raise ValueError(f"vocab rows V={V} must be divisible by the "
+                         f"{p}-way '{axis}' mesh axis for row sharding")
     rows = V // p
     other = tuple(a for a in mesh.axis_names if a != axis)
 

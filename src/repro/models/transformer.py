@@ -464,7 +464,11 @@ def cache_specs(cfg: LMConfig, long_context: bool = False):
 def prefill(params, tokens, cfg: LMConfig, max_seq: Optional[int] = None):
     """Returns (cache filled for s positions, last-token logits)."""
     b, s = tokens.shape
-    max_seq = max_seq or s
+    if max_seq is None:
+        max_seq = s
+    elif max_seq < s:
+        raise ValueError(f"max_seq={max_seq} is shorter than the prompt "
+                         f"(s={s}); the cache would truncate live tokens")
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
     x = params["embed"].astype(cfg.compute_dtype)[tokens]
     x = shard(x, _residual_spec(cfg))
