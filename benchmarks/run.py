@@ -451,6 +451,77 @@ def table4_resilience(smoke: bool = False):
              slowdown_vs_clean=usf / usb)
 
 
+def table4_disk(smoke: bool = False):
+    """Out-of-core graph STORAGE rows (DESIGN.md §15): the batched
+    bottom-up engine with every graph array behind a ChunkedDiskStore
+    capped at 1/8 of the packed graph's bytes, vs the same run with the
+    graph host-resident.
+
+    The acceptance row: phi bit-identical, store-resident graph bytes
+    never exceed the budget, bytes actually spilled (the chunk-wise
+    ``remove_edges`` makes aliased chunks free), and the background
+    prefetcher serving at least half of all chunk requests — the counters
+    land in the ``table4disk`` rows of ``BENCH_ooc.json``.
+    """
+    import shutil
+    import tempfile
+
+    from benchmarks.datasets import load
+    from repro.core.bottom_up import bottom_up_decompose
+    from repro.core.graph import build_graph
+    from repro.core.store import ChunkedDiskStore
+
+    names = ["hep-like"] if smoke else ["hep-like", "amazon-like",
+                                        "wiki-like"]
+    for name in names:
+        jax.clear_caches()      # per-graph cold-run isolation
+        n, edges = load(name)
+        budget = max(len(edges) // 32, 1024)
+        g = build_graph(n, edges)
+        graph_bytes = sum(
+            int(getattr(g, a).nbytes)
+            for a in ("edges", "deg", "rank", "src", "dst", "indptr",
+                      "nbrs", "nbr_eid"))
+        host_budget = graph_bytes // 8          # the paper's regime: RAM
+        chunk_bytes = max(host_budget // 16, 4096)   # keep a real window
+        usb, res_b = _time(lambda: bottom_up_decompose(n, edges, budget))
+        d = tempfile.mkdtemp(prefix="bench_store_")
+        try:
+            store = ChunkedDiskStore(d, host_memory_budget=host_budget,
+                                     chunk_bytes=chunk_bytes)
+            with store:
+                usd, res_d = _time(lambda: bottom_up_decompose(
+                    n, edges, budget, store=store))
+                peak = store.stats.peak_resident_bytes
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+        assert (res_d.phi == res_b.phi).all()
+        st = res_d.stats
+        hit_rate = st.prefetch_hit_rate
+        assert st.bytes_spilled > 0, st
+        assert peak <= host_budget, (peak, host_budget)
+        assert hit_rate >= 0.5, (hit_rate, st)
+        emit(f"table4disk_{name}_TDbottomup_diskstore", usd,
+             f"graph_bytes={graph_bytes};host_budget={host_budget};"
+             f"spilled={st.bytes_spilled};reads={st.chunk_reads};"
+             f"writes={st.chunk_writes};hit_rate={hit_rate:.3f};"
+             f"peak_resident={peak};slowdown_vs_inmem={usd/usb:.2f};"
+             f"budget={budget}",
+             m=len(edges), budget=budget, graph_bytes=graph_bytes,
+             host_memory_budget=host_budget, chunk_bytes=chunk_bytes,
+             chunk_reads=st.chunk_reads, chunk_writes=st.chunk_writes,
+             bytes_spilled=st.bytes_spilled,
+             prefetch_hits=st.prefetch_hits,
+             prefetch_misses=st.prefetch_misses,
+             prefetch_hit_rate=hit_rate, peak_resident_bytes=peak,
+             rounds=res_d.rounds, checkpoints=st.checkpoints,
+             slowdown_vs_inmem=usd / usb)
+        emit(f"table4disk_{name}_TDbottomup_inmem_ref", usb,
+             f"rounds={res_b.rounds};graph_bytes={graph_bytes}",
+             m=len(edges), budget=budget, graph_bytes=graph_bytes,
+             rounds=res_b.rounds)
+
+
 def table5_top_down():
     from benchmarks.datasets import MEDIUM, load
     from repro.core.bottom_up import bottom_up_decompose
@@ -620,6 +691,7 @@ TABLES = {
     "table4shard": table4_sharded,
     "table4kernel": table4_kernel,
     "table4resil": table4_resilience,
+    "table4disk": table4_disk,
     "table5": table5_top_down,
     "table6": table6_truss_vs_core,
     "peel": peel_engines,
@@ -629,7 +701,7 @@ TABLES = {
 
 # tables that accept smoke= (smallest-dataset variant); shared with hillclimb
 SMOKE_TABLES = ("peel", "table4", "table4part", "table4shard",
-                "table4kernel", "table4resil")
+                "table4kernel", "table4resil", "table4disk")
 
 
 def main(argv=None) -> None:

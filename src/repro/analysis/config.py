@@ -58,6 +58,7 @@ class CheckConfig:
     # loops stall the dispatch pipeline.
     hot_modules: Tuple[str, ...] = (
         "core/bottom_up.py", "core/top_down.py", "core/peel.py",
+        "core/store.py",
     )
     # Calls whose results live on device (module-local jit bindings are
     # discovered from the AST; these cover cross-module producers).
@@ -76,7 +77,12 @@ class CheckConfig:
             ("core/peel.py", "local_threshold_peel"): "DISPATCH",
             ("core/peel.py", "PendingPeel.result"): "FINALIZE",
             ("core/bottom_up.py", "_partition_rounds"): "PARTITIONER",
+            ("core/bottom_up.py", "_support_credit_triples"): "SUPPORT",
             ("checkpoint/manager.py", "save"): "CHECKPOINT_WRITE",
+            ("core/store.py",
+             "ChunkedDiskStore._read_chunk"): "CHUNK_READ",
+            ("core/store.py",
+             "ChunkedDiskStore._write_chunk"): "CHUNK_WRITE",
         })
     # Modules whose dispatch-capable peel calls must name themselves at
     # the fault sites (fault_ctx=) so injection plans can target them.

@@ -39,33 +39,78 @@ class _Donor:
     positions: Tuple[int, ...]     # donated positional indices
 
 
-def _donate_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
-    """Donated arg indices of a ``jax.jit(...)`` call, if any."""
+def _positional_params(args_obj: ast.arguments) -> Tuple[str, ...]:
+    """Positional parameter names of a def/lambda, call-position order."""
+    return tuple(a.arg for a in (*args_obj.posonlyargs, *args_obj.args))
+
+
+def _names_from_spec(val: ast.AST) -> Optional[Tuple[str, ...]]:
+    """String literal(s) of a ``donate_argnames=`` spec, or None when any
+    element is dynamic."""
+    if isinstance(val, ast.Constant) and isinstance(val.value, str):
+        return (val.value,)
+    if isinstance(val, (ast.Tuple, ast.List)):
+        out = []
+        for elt in val.elts:
+            if not (isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, str)):
+                return None
+            out.append(elt.value)
+        return tuple(out) if out else None
+    return None
+
+
+def _donate_positions(
+        call: ast.Call,
+        params: Optional[Tuple[str, ...]] = None,
+) -> Optional[Tuple[int, ...]]:
+    """Donated arg indices of a ``jax.jit(...)`` call, if any.
+
+    ``donate_argnames`` donates by *name*; ``params`` carries the wrapped
+    callable's positional parameter names (from the decorated def, the
+    module-level def bound in the same module, or an inline lambda) so the
+    names resolve to call positions.  Only when no parameter list is in
+    view does the rule fall back to the repo's position-0 convention.
+    """
     if fw.call_name(call).split(".")[-1] != "jit":
         return None
     for kw in call.keywords:
-        if kw.arg in ("donate_argnums", "donate_argnames"):
-            val = kw.value
-            if isinstance(val, ast.Constant) and isinstance(val.value, int):
-                return (val.value,)
-            if isinstance(val, (ast.Tuple, ast.List)):
-                out = []
-                for elt in val.elts:
-                    if isinstance(elt, ast.Constant) and isinstance(
-                            elt.value, int):
-                        out.append(elt.value)
-                return tuple(out) if out else (0,)
-            return (0,)            # dynamic spec: assume the convention
+        if kw.arg not in ("donate_argnums", "donate_argnames"):
+            continue
+        val = kw.value
+        if kw.arg == "donate_argnames":
+            names = _names_from_spec(val)
+            if params is None and call.args and isinstance(call.args[0],
+                                                           ast.Lambda):
+                params = _positional_params(call.args[0].args)
+            if names is not None and params is not None:
+                resolved = tuple(i for i, p in enumerate(params)
+                                 if p in names)
+                if resolved:
+                    return resolved
+            return (0,)        # unresolvable: assume the convention
+        if isinstance(val, ast.Constant) and isinstance(val.value, int):
+            return (val.value,)
+        if isinstance(val, (ast.Tuple, ast.List)):
+            out = []
+            for elt in val.elts:
+                if isinstance(elt, ast.Constant) and isinstance(
+                        elt.value, int):
+                    out.append(elt.value)
+            return tuple(out) if out else (0,)
+        return (0,)            # dynamic spec: assume the convention
     return None
 
 
 def _decorator_donations(func: ast.AST) -> Optional[Tuple[int, ...]]:
     """Donations declared by ``@jax.jit(...)`` or ``@partial(jax.jit, ...)``
-    decorators on a function definition."""
+    decorators on a function definition.  ``donate_argnames`` resolves
+    against the decorated def's own parameter list."""
+    params = _positional_params(func.args)
     for dec in getattr(func, "decorator_list", ()):
         if not isinstance(dec, ast.Call):
             continue
-        pos = _donate_positions(dec)
+        pos = _donate_positions(dec, params=params)
         if pos is not None:
             return pos
         if fw.call_name(dec).split(".")[-1] == "partial" and dec.args:
@@ -76,15 +121,25 @@ def _decorator_donations(func: ast.AST) -> Optional[Tuple[int, ...]]:
                         fake = ast.Call(func=ast.Name(id="jit",
                                                       ctx=ast.Load()),
                                         args=[], keywords=[kw])
-                        return _donate_positions(fake) or (0,)
+                        return _donate_positions(fake,
+                                                 params=params) or (0,)
     return None
 
 
 def _module_donors(module: fw.Module, config) -> Dict[str, _Donor]:
     donors: Dict[str, _Donor] = {}
+    # module-level defs, so X = jax.jit(fn, donate_argnames=("b",)) can
+    # resolve the names against fn's parameter list
+    defs: Dict[str, ast.AST] = {
+        n.name: n for n in module.tree.body
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
     for node in ast.walk(module.tree):
         if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
-            pos = _donate_positions(node.value)
+            params = None
+            wrapped = node.value.args[0] if node.value.args else None
+            if isinstance(wrapped, ast.Name) and wrapped.id in defs:
+                params = _positional_params(defs[wrapped.id].args)
+            pos = _donate_positions(node.value, params=params)
             if pos is not None:
                 for name in fw.assigned_names(node.targets[0]):
                     donors[name] = _Donor(name, pos)

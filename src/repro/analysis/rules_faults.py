@@ -37,6 +37,9 @@ _BUILTIN_SITES: Dict[str, str] = {
     "FINALIZE": "finalize",
     "CHECKPOINT_WRITE": "checkpoint-write",
     "PARTITIONER": "partitioner",
+    "SUPPORT": "support",
+    "CHUNK_READ": "chunk-read",
+    "CHUNK_WRITE": "chunk-write",
 }
 
 

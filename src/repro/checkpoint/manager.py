@@ -87,6 +87,22 @@ def _flatten_with_paths(tree):
     return paths, leaves, treedef
 
 
+def atomic_file_write(path: str, payload: bytes) -> None:
+    """Single-file half of the checkpoint atomicity contract: write to
+    ``<path>.tmp`` then ``os.replace``.
+
+    A crash (or SIGKILL) at any point leaves either the previous intact
+    file or a stale ``.tmp`` — never a torn ``path``.  The graph store's
+    chunk spills ride this exact primitive so chunk I/O and checkpoint I/O
+    share one durability story (DESIGN.md §15); :func:`save` applies the
+    same tmp+rename discipline at directory granularity.
+    """
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, path)
+
+
 def save(ckpt_dir: str, step: int, tree: Any, metadata: Optional[dict] = None,
          keep: int = 3) -> str:
     """Atomic save of a pytree; prunes to the newest ``keep`` checkpoints.

@@ -54,8 +54,10 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import inspect
+import re
+import time
 import warnings
-from typing import Callable, Dict, Iterator, List, Optional, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -64,8 +66,10 @@ from repro.checkpoint import manager as ckpt
 from repro.core import faults
 from repro.core import graph as glib
 from repro.core import partition as plib
+from repro.core.store import GraphStore
 from repro.core.peel import (local_threshold_peel, peel_classes,
                              peel_classes_batched, peel_threshold)
+from repro.core import support as sup_lib
 from repro.core.support import (list_triangles, list_triangles_np,
                                 support_from_triangle_list)
 
@@ -252,6 +256,21 @@ class OocStats:
     checkpoints: int = 0      # journal snapshots written this run
     resumed_round: int = -1   # round/level index of the snapshot this run
     #                           resumed from (-1: started fresh)
+    chunk_reads: int = 0      # graph-store chunks read back (DESIGN.md §15)
+    chunk_writes: int = 0     # graph-store chunks written (spilled)
+    bytes_spilled: int = 0    # bytes written to the chunked store; chunks
+    #                           aliased by the chunk-wise remove_edges cost 0
+    prefetch_hits: int = 0    # chunk requests served by the background
+    #                           prefetch thread (scheduled before requested)
+    prefetch_misses: int = 0  # chunk requests that fell back to a
+    #                           synchronous disk read at request time
+
+    @property
+    def prefetch_hit_rate(self) -> float:
+        """Fraction of chunk requests the prefetcher hid the latency of —
+        the overlap quality metric the ooc-disk smoke gates on (≥ 0.5)."""
+        total = self.prefetch_hits + self.prefetch_misses
+        return self.prefetch_hits / total if total else 1.0
 
     @property
     def tri_routes(self) -> int:
@@ -343,6 +362,30 @@ def _run_key(driver: str, n: int, edges: np.ndarray, budget,
     return h.hexdigest()[:16]
 
 
+def _parse_every(every: Union[int, str]) -> Tuple[str, float]:
+    """Normalize a ``checkpoint_every`` knob to ``(mode, value)``.
+
+    Integers are the historical event-count gate (``("events", k)``, floored
+    at 1).  Strings are wall-clock budgets — ``"30s"``, ``"500ms"``,
+    ``"5m"``, ``"1h"`` — yielding ``("time", seconds)``: long decompositions
+    bound *time at risk* rather than rounds, since round durations vary by
+    orders of magnitude across the shrink (DESIGN.md §12).
+    """
+    if isinstance(every, str):
+        match = re.fullmatch(r"\s*(\d+(?:\.\d+)?)\s*(ms|s|m|h)\s*", every)
+        if match is None:
+            raise ValueError(
+                f"checkpoint_every={every!r}: expected an event count or a "
+                f"duration like '30s', '500ms', '5m', '1h'")
+        secs = float(match.group(1)) * {"ms": 1e-3, "s": 1.0, "m": 60.0,
+                                        "h": 3600.0}[match.group(2)]
+        if secs <= 0:
+            raise ValueError(
+                f"checkpoint_every={every!r}: duration must be positive")
+        return "time", secs
+    return "events", float(max(1, int(every)))
+
+
 class RoundJournal:
     """Round-granular snapshot journal over ``checkpoint.manager`` (§12).
 
@@ -354,29 +397,51 @@ class RoundJournal:
     monotone sequence continued across resumes (the constructor seeds the
     counter from the directory), and ``run_key`` is verified at load so a
     ``checkpoint_dir`` can never silently resume a different run.
+
+    ``every`` gates writes by event count (int) or wall clock (a duration
+    string, :func:`_parse_every`); ``clock`` injects the monotonic time
+    source so time-gated tests stay deterministic.  ``store`` ties the
+    journal to the run's graph store: each snapshot first absorbs the
+    store's I/O counters into ``stats`` (so a resumed run's counters
+    include pre-crash I/O), and the snapshot payload is reserved against
+    the store's :class:`~repro.core.store.IoAccount` while it serializes —
+    checkpoint I/O and chunk I/O share one budget (DESIGN.md §15).
     """
 
-    def __init__(self, ckpt_dir: str, run_key: str, *, every: int = 1,
-                 keep: int = 3):
+    def __init__(self, ckpt_dir: str, run_key: str, *,
+                 every: Union[int, str] = 1, keep: int = 3,
+                 clock: Callable[[], float] = time.monotonic,
+                 store: Optional[GraphStore] = None):
         self.ckpt_dir = ckpt_dir
         self.run_key = run_key
-        self.every = max(1, int(every))
+        self.mode, self.every = _parse_every(every)
         self.keep = keep
+        self.store = store
+        self._clock = clock
+        self._last_write = clock()
         self.seq = int(ckpt.latest_step(ckpt_dir) or 0)
         self._events = 0
+
+    def _due(self) -> bool:
+        if self.mode == "time":
+            return self._clock() - self._last_write >= self.every
+        return self._events % int(self.every) == 0
 
     def record(self, stage: str, index: int, arrays: Dict[str, np.ndarray],
                stats: OocStats, **extra) -> bool:
         """Journal one completed unit of work (a partition round or class
-        level); writes every ``every``-th call.  Returns whether a snapshot
-        was written.  The write is synchronous — the device pipeline is
-        already overlapped with host work, and an async journal would leave
-        a window where "completed" rounds are lost on crash."""
+        level); writes when the ``every`` gate (events or wall clock) is
+        due.  Returns whether a snapshot was written.  The write is
+        synchronous — the device pipeline is already overlapped with host
+        work, and an async journal would leave a window where "completed"
+        rounds are lost on crash."""
         self._events += 1
-        if self._events % self.every:
+        if not self._due():
             return False
         self.seq += 1
         stats.checkpoints += 1
+        if self.store is not None:
+            self.store.absorb_into(stats)
         meta = {"stage": stage, "index": int(index),
                 "run_key": self.run_key, "stats": stats.as_dict(), **extra}
         # narrow i64 -> i32 on the way out (phi/lb/sup are all < 2^31; the
@@ -384,8 +449,17 @@ class RoundJournal:
         arrays = {k: (np.asarray(v).astype(np.int32)
                       if np.asarray(v).dtype == np.int64 else np.asarray(v))
                   for k, v in arrays.items()}
-        ckpt.save(self.ckpt_dir, self.seq, dict(arrays), metadata=meta,
-                  keep=self.keep)
+        account = getattr(self.store, "io_account", None)
+        payload = sum(int(a.nbytes) for a in arrays.values())
+        if account is not None:
+            with account.hold(payload, "checkpoint"):
+                ckpt.save(self.ckpt_dir, self.seq, dict(arrays),
+                          metadata=meta, keep=self.keep)
+        else:
+            ckpt.save(self.ckpt_dir, self.seq, dict(arrays), metadata=meta,
+                      keep=self.keep)
+        if self.mode == "time":
+            self._last_write = self._clock()
         return True
 
     def load_latest(self):
@@ -445,6 +519,7 @@ def lower_bounding(
     restored=None,
     max_retries: int = 2,
     engine_state: Optional[_Engine] = None,
+    store: Optional[GraphStore] = None,
 ) -> LowerBoundResult:
     """Algorithm 3: per-edge lower bounds + exact round-1 Phi_2.
 
@@ -465,6 +540,12 @@ def lower_bounding(
     into stage 2.  Both engines compute identical bounds, but only the
     batched engine journals — its per-round state lives in flat host
     arrays; the per-part seed path is the benchmark baseline.
+
+    ``store`` (batched engine only) routes the round loop's working graph
+    through a :class:`~repro.core.store.GraphStore` — with a
+    ``ChunkedDiskStore`` the graph lives on disk between rounds and the
+    store's prefetch thread overlaps the chunk reads with the device peel
+    (DESIGN.md §15); φ is bit-identical either way.
     """
     part_fn = _resolve_partitioner(partitioner, seed=partitioner_seed)
     edges = glib.canonical_edges(edges, n)
@@ -475,6 +556,10 @@ def lower_bounding(
             raise ValueError(
                 "checkpointing requires the batched engine "
                 "(engine='perpart' is the uninstrumented seed baseline)")
+        if store is not None:
+            raise ValueError(
+                "store= requires the batched engine "
+                "(engine='perpart' is the uninstrumented seed baseline)")
         return _lower_bounding_perpart(n, edges, budget, part_fn)
     if engine != "batched":
         raise ValueError(f"unknown engine {engine!r}")
@@ -483,13 +568,14 @@ def lower_bounding(
                                    kernel=kernel,
                                    journal=journal, restored=restored,
                                    max_retries=max_retries,
-                                   engine_state=engine_state)
+                                   engine_state=engine_state, store=store)
 
 
 def _partition_rounds(
     n: int, edges: np.ndarray, budget: int, part_fn, stats: OocStats,
     *, with_incidence: bool = True, lane_multiple: int = 1,
     start_ids: Optional[np.ndarray] = None,
+    store: Optional[GraphStore] = None,
 ) -> Iterator[Tuple[int, "plib.PartitionBatch", np.ndarray, int]]:
     """Producer side of the double-buffered round pipeline (DESIGN.md §9).
 
@@ -523,15 +609,27 @@ def _partition_rounds(
     covers pay one full scan up front instead of one zone scan per round,
     and ``build_partition_batch`` re-scopes the passed list so
     ``tri_total`` / ``tri_locality`` semantics are unchanged.
+
+    With a ``store``, the working graph and the incremental triangle list
+    are **spilled between rounds** (DESIGN.md §15): after each
+    ``remove_edges`` the successor graph spills chunk-wise (untouched
+    chunks alias the predecessor's files), the predecessor's chunks are
+    released, and the next round's arrays are prefetched before the yield
+    — so the background reads overlap the consumer's device peel exactly
+    like the batch pipeline overlaps the host build.
     """
     if start_ids is None:
-        g = glib.build_graph(n, edges)
+        g = glib.build_graph(n, edges, store=store)
         cur_ids = np.arange(g.m, dtype=np.int64)
     else:
         cur_ids = np.asarray(start_ids, dtype=np.int64)
-        g = glib.build_graph(n, edges[cur_ids])
+        g = glib.build_graph(n, edges[cur_ids], store=store)
+    if store is not None:
+        g.spill()
+        g.prefetch()
     cur_budget = budget
     tris_cur = None      # full triangle list of g, g-local edge ids
+    tris_key = None      # store key the spilled triangle list lives under
     # shape ladder (sharded packing only, DESIGN.md §13): the shapes this
     # run has already compiled the shard_map peel for; a round that fits
     # an entry reuses it verbatim (compile-cache hit), one that doesn't
@@ -548,6 +646,8 @@ def _partition_rounds(
         parts = part_fn(g, cur_budget, stats.rounds)
         if not parts:
             break
+        if tris_cur is None and tris_key is not None:
+            tris_cur = sup_lib.load_triangles(store, tris_key)
         if tris_cur is None:
             tris_cur = np.asarray(list_triangles(g), np.int64).reshape(-1, 3)
         else:
@@ -576,11 +676,25 @@ def _partition_rounds(
             continue
         ids_snapshot = cur_ids
         cur_ids = cur_ids[~removed]
-        g = g.remove_edges(removed)
+        g_prev, g = g, g.remove_edges(removed)
         if len(tris_cur):
             keep = ~removed[tris_cur].any(axis=1)
             remap = np.cumsum(~removed) - 1      # old id -> compacted id
             tris_cur = remap[tris_cur[keep]]
+        if store is not None:
+            # spill the successor BEFORE releasing the predecessor: the
+            # chunk-wise filter aliases untouched chunk files, and the
+            # refcounts must see them registered before the old graph's
+            # release decrements them
+            g.spill()
+            g_prev.release()
+            if tris_key is None:
+                tris_key = store.graph_key() + "/tris"
+            sup_lib.spill_triangles(store, tris_key, tris_cur)
+            tris_cur = None
+            # warm the next round's reads while the consumer peels this one
+            g.prefetch()
+            store.prefetch([tris_key])
         yield stats.rounds, batch, ids_snapshot, cur_budget
 
 
@@ -656,6 +770,7 @@ def _lower_bounding_batched(n, edges, budget, part_fn, mesh=None,
                             journal: Optional[RoundJournal] = None,
                             restored=None, max_retries: int = 2,
                             engine_state: Optional[_Engine] = None,
+                            store: Optional[GraphStore] = None,
                             ) -> LowerBoundResult:
     m = len(edges)
     phi = np.zeros(m, dtype=np.int64)
@@ -740,7 +855,8 @@ def _lower_bounding_batched(n, edges, budget, part_fn, mesh=None,
         try:
             for round_idx, batch, ids, cur_b in _partition_rounds(
                     n, edges, start_budget, part_fn, stats,
-                    lane_multiple=eng.n_dev, start_ids=start_ids):
+                    lane_multiple=eng.n_dev, start_ids=start_ids,
+                    store=store):
                 try:
                     handles = []
                     for bi, bucket in enumerate(batch.buckets):
@@ -782,6 +898,8 @@ def _lower_bounding_batched(n, edges, budget, part_fn, mesh=None,
         except _RestartRounds as r:
             start_budget = r.budget
 
+    if store is not None:
+        store.absorb_into(stats)
     return LowerBoundResult(
         edges=edges, phi=phi, lb=lb, in_gnew=in_gnew, rounds=stats.rounds,
         scans=stats.scans, max_part_edges=stats.max_part_edges, stats=stats,
@@ -890,10 +1008,11 @@ def bottom_up_decompose(
     mesh_axis="data",
     kernel: str = "auto",
     checkpoint_dir: Optional[str] = None,
-    checkpoint_every: int = 1,
+    checkpoint_every: Union[int, str] = 1,
     resume: bool = False,
     checkpoint_keep: int = 3,
     max_retries: int = 2,
+    store: Optional[GraphStore] = None,
 ) -> BottomUpResult:
     """Algorithm 4: full decomposition under a working-set budget.
 
@@ -912,14 +1031,27 @@ def bottom_up_decompose(
     ``checkpoint_dir`` enables the round journal (DESIGN.md §12): every
     ``checkpoint_every``-th completed stage-1 round ("lb" snapshots) and
     stage-2 level ("s2" snapshots) is written through the atomic
-    checkpoint path, keeping the newest ``checkpoint_keep``; with
+    checkpoint path, keeping the newest ``checkpoint_keep``
+    (``checkpoint_every`` also takes a duration string — ``"30s"`` — to
+    gate snapshots by wall clock instead of event count); with
     ``resume=True`` the newest intact snapshot whose run_key matches this
     configuration is restored and the run continues — φ is bit-identical
     to an uninterrupted run.  ``max_retries`` bounds the lane-split
     retries a retryable dispatch failure gets before the engine degrades
     (mesh drop, then budget halving); ``OocStats.retries / degraded /
     checkpoints / resumed_round`` record all of it.
+
+    ``store`` (batched engine only) runs stage 1's working graph through a
+    :class:`~repro.core.store.GraphStore` (DESIGN.md §15); the store's I/O
+    counters land in ``OocStats``.  Neither the store nor
+    ``checkpoint_every``'s gating mode enters the run key — they change
+    I/O behavior, never φ or the round trajectory, so a crashed disk-backed
+    run may resume in-memory and vice versa.
     """
+    if store is not None and engine != "batched":
+        raise ValueError(
+            "store= requires the batched engine "
+            "(engine='perpart' is the uninstrumented seed baseline)")
     journal = None
     snap = None
     if checkpoint_dir is not None:
@@ -932,7 +1064,7 @@ def bottom_up_decompose(
                        partitioner_seed,
                        devices=_mesh_devices(mesh, mesh_axis))
         journal = RoundJournal(checkpoint_dir, key, every=checkpoint_every,
-                               keep=checkpoint_keep)
+                               keep=checkpoint_keep, store=store)
         if resume:
             snap = journal.load_latest()
 
@@ -958,7 +1090,7 @@ def bottom_up_decompose(
             mesh_axis=mesh_axis, journal=journal,
             restored=snap if snap is not None
             and snap[1]["stage"] == "lb" else None,
-            max_retries=max_retries, engine_state=eng)
+            max_retries=max_retries, engine_state=eng, store=store)
         edges = lbres.edges
         phi = lbres.phi.copy()
         lb = lbres.lb
@@ -1103,10 +1235,87 @@ def bottom_up_decompose(
         k += 1
 
     kmax = int(phi.max()) if len(phi) else 2
+    if store is not None:
+        store.absorb_into(stats)    # delta-based: journal absorbs mid-run
     return BottomUpResult(
         edges=edges, phi=phi, kmax=kmax, rounds=stats.rounds,
         scans=stats.scans, candidate_sizes=cand_sizes, stats=stats,
     )
+
+
+def _support_credit_triples(bucket, round_idx: int, bi: int, sub_idx: int,
+                            retry: int) -> np.ndarray:
+    """Flat parent-edge-id triples of one bucket's captured triangles —
+    the compute half of a ``partitioned_support`` round, kept PURE (no
+    scatter into the global ``sup``).
+
+    Unlike the stage-1 folds, triangle credits (``np.add.at``) are **not**
+    idempotent, so the retry ladder must be able to recompute a failed
+    bucket from its host arrays and fold exactly once afterwards; the
+    ``"support"`` fault site fires here, before any credit exists.
+    """
+    faults.check(faults.SUPPORT, stage=1, round=round_idx, bucket=bi,
+                 sub=sub_idx, retry=retry)
+    B = bucket.n_lanes
+    # local triangle ids -> parent edge ids, lane-wise; the drop slot
+    # cap_e maps to -1, so padding rows vanish with the mask
+    eid_pad = np.concatenate(
+        [bucket.edge_ids, np.full((B, 1), -1, np.int64)], axis=1)
+    lane = np.arange(B)[:, None, None]
+    parent = eid_pad[lane, bucket.tris]              # (B, cap_t, 3)
+    real = parent[:, :, 0] >= 0
+    return parent[real].reshape(-1)
+
+
+def _retry_support_round(eng: _Engine, stats: OocStats, round_idx: int,
+                         batch, exc, cur_budget: int,
+                         max_retries: int) -> List[np.ndarray]:
+    """Retry ladder for a failed triangle-credit round — the
+    ``partitioned_support`` sibling of :func:`_retry_stage1_round`
+    (DESIGN.md §12), engaged only for retryable failures:
+
+    1. lane-split retries — recompute each bucket as
+       ``split_bucket_lanes`` sub-buckets (split 2, then 4, … up to
+       ``max_retries`` doublings; every triangle lives in exactly one lane
+       of one bucket, so the union of sub-bucket triples is exactly the
+       whole batch's);
+    2. mesh drop — ``eng.mesh = None`` for the rest of the run (the
+       credit scatters are host-side, but the shared engine state carries
+       the degrade into any later device stage the caller runs);
+    3. budget halving — raise :class:`_RestartRounds`; the un-credited
+       round's internal edges are all still alive, so the restarted rounds
+       re-credit exactly the unfinished triangles (the exactly-once
+       invariant is per-working-graph).
+
+    Returns the per-(sub-)bucket triple arrays; the caller folds them
+    once, after the whole round has been recomputed successfully.
+    """
+    split = 1
+    while True:
+        if not faults.is_retryable(exc):
+            raise exc
+        stats.retries += 1
+        if split < (1 << max_retries):
+            split *= 2
+        elif eng.mesh is not None:
+            eng.mesh = None
+            stats.degraded += 1
+        else:
+            if cur_budget <= _MIN_ROUND_BUDGET:
+                raise exc
+            stats.degraded += 1
+            raise _RestartRounds(max(cur_budget // 2, _MIN_ROUND_BUDGET))
+        try:
+            trips = []
+            for bi, bucket in enumerate(batch.buckets):
+                for si, sub in enumerate(
+                        plib.split_bucket_lanes(bucket, split)):
+                    trips.append(
+                        _support_credit_triples(sub, round_idx, bi, si,
+                                                split))
+            return trips
+        except Exception as e:
+            exc = e
 
 
 def partitioned_support(
@@ -1122,6 +1331,8 @@ def partitioned_support(
     mesh_axis="data",
     journal: Optional[RoundJournal] = None,
     restored=None,
+    max_retries: int = 2,
+    store: Optional[GraphStore] = None,
 ):
     """Exact sup(e) w.r.t. the FULL graph, computed under a working-set
     budget (triangle-credit variant of Algorithm 3 used by the top-down
@@ -1146,6 +1357,14 @@ def partitioned_support(
     is per-working-graph, so restarting the rounds from the journaled
     ``alive`` mask re-credits nothing — rounds after the snapshot were
     never folded into the journaled ``sup``.
+
+    A failed round (the ``"support"`` fault site) drives the same
+    degradation ladder as stage 1 — lane splits, mesh drop, budget-halving
+    restart (:func:`_retry_support_round`); because the credits are not
+    idempotent, a round's triples are all computed before any is folded,
+    so a mid-round failure never half-credits.  ``max_retries`` bounds the
+    lane-split rungs; ``store`` routes the working graph through a
+    :class:`~repro.core.store.GraphStore` (batched engine only).
     """
     part_fn = _resolve_partitioner(partitioner, seed=partitioner_seed)
     edges = glib.canonical_edges(edges, n)
@@ -1157,6 +1376,10 @@ def partitioned_support(
         if engine == "perpart":
             raise ValueError("mesh= requires the batched engine")
         stats.devices = _mesh_devices(mesh, mesh_axis)
+    if store is not None and engine == "perpart":
+        raise ValueError(
+            "store= requires the batched engine "
+            "(engine='perpart' is the uninstrumented seed baseline)")
     cur_budget = budget
     if restored is not None:
         if engine == "perpart":
@@ -1206,27 +1429,43 @@ def partitioned_support(
     # The triangle-credit counter is all host-side scatters (no device
     # peel), so the shared round generator is consumed directly — same
     # incremental maintenance and stall fallback as the peeling driver.
-    start_ids = np.nonzero(alive)[0]
-    if len(start_ids):
-        for round_idx, batch, ids, cur_b in _partition_rounds(
-                n, edges, cur_budget, part_fn, stats, with_incidence=False,
-                start_ids=start_ids):
-            for bucket in batch.buckets:
-                B = bucket.n_lanes
-                # local triangle ids -> parent edge ids, lane-wise; the drop
-                # slot cap_e maps to -1, so padding rows vanish with the mask
-                eid_pad = np.concatenate(
-                    [bucket.edge_ids, np.full((B, 1), -1, np.int64)], axis=1)
-                lane = np.arange(B)[:, None, None]
-                parent = eid_pad[lane, bucket.tris]          # (B, cap_t, 3)
-                real = parent[:, :, 0] >= 0
-                trip = parent[real]
-                if len(trip):
-                    np.add.at(sup, ids[trip.reshape(-1)], 1)
-                alive[ids[bucket.edge_ids[bucket.internal]]] = False
-            if journal is not None:
-                journal.record("sup", round_idx,
-                               {"sup": sup, "alive": alive}, stats,
-                               cur_budget=int(cur_b))
+    # The outer loop is the budget-degrade restart (DESIGN.md §12): the
+    # ladder raises _RestartRounds and the generator is rebuilt from the
+    # credit state's alive mask at the smaller budget — un-credited rounds'
+    # internal edges are all still alive, so nothing double-credits.
+    eng = _Engine(mesh=mesh, mesh_axis=mesh_axis)
+    while True:
+        start_ids = np.nonzero(alive)[0]
+        if not len(start_ids):
+            break
+        try:
+            for round_idx, batch, ids, cur_b in _partition_rounds(
+                    n, edges, cur_budget, part_fn, stats,
+                    with_incidence=False, start_ids=start_ids, store=store):
+                try:
+                    trips = [
+                        _support_credit_triples(bucket, round_idx, bi, 0, 0)
+                        for bi, bucket in enumerate(batch.buckets)]
+                except Exception as exc:
+                    trips = _retry_support_round(eng, stats, round_idx,
+                                                 batch, exc, cur_b,
+                                                 max_retries)
+                # fold only after EVERY bucket's triples exist: the credits
+                # are not idempotent, so a failed round must never be
+                # partially folded (the ladder recomputes it whole)
+                for trip in trips:
+                    if len(trip):
+                        np.add.at(sup, ids[trip], 1)
+                for bucket in batch.buckets:
+                    alive[ids[bucket.edge_ids[bucket.internal]]] = False
+                if journal is not None:
+                    journal.record("sup", round_idx,
+                                   {"sup": sup, "alive": alive}, stats,
+                                   cur_budget=int(cur_b))
+            break
+        except _RestartRounds as r:
+            cur_budget = r.budget
 
+    if store is not None:
+        store.absorb_into(stats)
     return (sup, stats) if with_stats else sup

@@ -16,6 +16,15 @@ drifts; this module instead names the injection sites once —
   array payload is on disk but before the manifest/rename commit point;
 * ``"partitioner"``   — start of each partition round, before the
   partitioner runs (the natural host-side "crash between rounds" site)
+* ``"support"``       — entry of a triangle-credit fold in
+  ``partitioned_support`` (per bucket, before any credit is scattered into
+  the global ``sup`` — the credits are NOT idempotent, so the retry ladder
+  must recompute a failed bucket from scratch rather than re-fold);
+* ``"chunk-read"``    — inside ``store.ChunkedDiskStore._read_chunk``,
+  before a graph chunk is read back from disk;
+* ``"chunk-write"``   — inside ``store.ChunkedDiskStore._write_chunk``,
+  before a graph chunk spill commits (tmp+rename, same atomicity contract
+  as the checkpoint writer — a ``kill`` here is the crash-mid-spill case)
 
 — and lets a test describe failures declaratively as a :class:`FaultPlan`:
 *at the 2nd stage-1 dispatch of round 3, raise a device OOM, twice*.  Rules
@@ -66,6 +75,9 @@ DISPATCH = "dispatch"
 FINALIZE = "finalize"
 CHECKPOINT_WRITE = "checkpoint-write"
 PARTITIONER = "partitioner"
+SUPPORT = "support"
+CHUNK_READ = "chunk-read"
+CHUNK_WRITE = "chunk-write"
 
 _RETRYABLE_MARKERS = ("RESOURCE_EXHAUSTED", "OUT_OF_MEMORY", "out of memory",
                       "Out of memory")

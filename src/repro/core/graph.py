@@ -19,8 +19,7 @@ JAX algorithms:
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -66,7 +65,6 @@ def degrees(n: int, edges: np.ndarray) -> np.ndarray:
     return deg
 
 
-@dataclasses.dataclass
 class Graph:
     """Static-shape packed graph (all arrays numpy; moved to device lazily).
 
@@ -80,28 +78,156 @@ class Graph:
       nbrs: (m,) concatenated out-neighbor lists, each row sorted by vertex id.
       nbr_eid: (m,) edge id of each (row_vertex, nbrs[i]) entry.
       max_out_deg: max oriented out-degree (static bound for wedge enumeration).
+
+    With a :class:`~repro.core.store.GraphStore` attached (``store=``), the
+    array attributes become *views through the store*: :meth:`spill` moves
+    them out (to disk, for ``ChunkedDiskStore``) and each attribute access
+    re-materializes lazily via ``store.get`` — the out-of-core round loop
+    spills the working graph between rounds so the host never holds it
+    whole (DESIGN.md §15).  ``store=None`` keeps today's behavior exactly:
+    arrays are plain resident ndarrays and every store method is a no-op.
     """
 
-    n: int
-    edges: np.ndarray
-    deg: np.ndarray
-    rank: np.ndarray
-    src: np.ndarray
-    dst: np.ndarray
-    indptr: np.ndarray
-    nbrs: np.ndarray
-    nbr_eid: np.ndarray
-    max_out_deg: int
+    # the spillable payload, in spill order (scalars n/max_out_deg stay)
+    _ARRAYS = ("edges", "deg", "rank", "src", "dst", "indptr", "nbrs",
+               "nbr_eid")
+
+    def __init__(self, *, n: int, edges: np.ndarray, deg: np.ndarray,
+                 rank: np.ndarray, src: np.ndarray, dst: np.ndarray,
+                 indptr: np.ndarray, nbrs: np.ndarray, nbr_eid: np.ndarray,
+                 max_out_deg: int, store=None,
+                 spill_plan: Optional[Dict[str, Tuple]] = None):
+        self.n = int(n)
+        self.max_out_deg = int(max_out_deg)
+        self._m = len(edges)
+        self._store = store
+        self._key: Optional[str] = None
+        self._spill_plan = spill_plan
+        self._spilled: set = set()
+        self._arrays: Dict[str, np.ndarray] = {
+            "edges": edges, "deg": deg, "rank": rank, "src": src,
+            "dst": dst, "indptr": indptr, "nbrs": nbrs, "nbr_eid": nbr_eid,
+        }
+
+    # -- store-routed array access ------------------------------------------
+    def _fetch(self, name: str) -> np.ndarray:
+        arr = self._arrays.get(name)
+        if arr is None:
+            if self._store is None or self._key is None:
+                raise RuntimeError(
+                    f"graph array {name!r} was dropped without a store to "
+                    f"reload it from")
+            arr = self._store.get(f"{self._key}/{name}")
+            self._arrays[name] = arr
+        return arr
+
+    @property
+    def edges(self) -> np.ndarray:
+        return self._fetch("edges")
+
+    @property
+    def deg(self) -> np.ndarray:
+        return self._fetch("deg")
+
+    @property
+    def rank(self) -> np.ndarray:
+        return self._fetch("rank")
+
+    @property
+    def src(self) -> np.ndarray:
+        return self._fetch("src")
+
+    @property
+    def dst(self) -> np.ndarray:
+        return self._fetch("dst")
+
+    @property
+    def indptr(self) -> np.ndarray:
+        return self._fetch("indptr")
+
+    @property
+    def nbrs(self) -> np.ndarray:
+        return self._fetch("nbrs")
+
+    @property
+    def nbr_eid(self) -> np.ndarray:
+        return self._fetch("nbr_eid")
 
     @property
     def m(self) -> int:
-        return len(self.edges)
+        return self._m
 
+    @property
+    def store(self):
+        return self._store
+
+    # -- spill lifecycle (all no-ops without a store) ------------------------
+    def spill(self) -> None:
+        """Move the packed arrays into the store and drop the host refs.
+
+        A graph produced by :meth:`remove_edges` carries a *spill plan*:
+        filtered arrays go through ``store.put_filtered`` (chunk-wise —
+        source chunks whose rows are all kept are aliased, not rewritten)
+        and the reused ``rank`` through ``store.alias`` (zero write I/O,
+        the PR-2 rank-reuse discipline made visible on disk).  Arrays
+        already spilled once are never rewritten — re-materialized copies
+        are just dropped.
+        """
+        if self._store is None:
+            return
+        if self._key is None:
+            self._key = self._store.graph_key()
+        plan = self._spill_plan or {}
+        for name in self._ARRAYS:
+            if name in self._spilled:
+                continue
+            arr = self._arrays.get(name)
+            if arr is None:
+                continue
+            dst_key = f"{self._key}/{name}"
+            step = plan.get(name)
+            if step is None:
+                self._store.put(dst_key, arr)
+            elif step[0] == "alias":
+                self._store.alias(dst_key, step[1], arr)
+            else:  # ("filter", src_key, keep_mask)
+                self._store.put_filtered(dst_key, step[1], step[2], arr)
+            self._spilled.add(name)
+        self._spill_plan = None
+        self._arrays = {}
+
+    def prefetch(self, names: Optional[Sequence[str]] = None) -> None:
+        """Hint the store to warm this graph's arrays for the next round."""
+        if self._store is None or self._key is None:
+            return
+        self._store.prefetch([f"{self._key}/{nm}"
+                              for nm in (names or self._ARRAYS)
+                              if nm in self._spilled])
+
+    def unload(self) -> None:
+        """Drop re-materialized host copies of already-spilled arrays."""
+        if self._store is None:
+            return
+        for name in list(self._arrays):
+            if name in self._spilled:
+                del self._arrays[name]
+
+    def release(self) -> None:
+        """Drop this graph's chunks from the store (refcounted: chunk files
+        aliased into a successor graph survive)."""
+        if self._store is not None and self._key is not None:
+            self._store.release(self._key)
+        self._arrays = {}
+        self._spilled = set()
+        self._key = None
+
+    # -- structural ops ------------------------------------------------------
     def subgraph(self, edge_mask: np.ndarray) -> "Graph":
         """Graph induced by the kept edges (vertex ids preserved)."""
         return build_graph(self.n, self.edges[edge_mask])
 
-    def remove_edges(self, remove_mask: np.ndarray) -> "Graph":
+    def remove_edges(self, remove_mask: np.ndarray, *,
+                     detach: bool = False) -> "Graph":
         """Incremental maintenance: drop the masked edges without a rebuild.
 
         ``build_graph`` pays a full lexsort (ranks) plus a lexsort of the
@@ -119,6 +245,13 @@ class Graph:
         Total cost O(n + m) with no sort.  Edge ids are renumbered densely;
         old id ``i`` maps to ``cumsum(keep)[i] - 1`` (order preserved, so the
         canonical lex order of ``edges`` is intact).
+
+        Store-backed graphs hand the successor a *spill plan* (which mask
+        filters which array, plus the ``rank`` alias) so its :meth:`spill`
+        rewrites only the chunks the filter actually touched.
+        ``detach=True`` produces a plain in-memory graph instead — for
+        short-lived scoped graphs (the partition batch builder) that must
+        never allocate store namespaces.
         """
         remove_mask = np.asarray(remove_mask, dtype=bool)
         if remove_mask.shape != (self.m,):
@@ -141,17 +274,34 @@ class Graph:
             np.add.at(counts, rows[keep_entry] + 1, 1)
         indptr = np.cumsum(counts).astype(Int)
         out_deg = indptr[1:] - indptr[:-1]
+        store = None if detach else self._store
+        plan = None
+        if store is not None and self._key is not None:
+            plan = {
+                "edges": ("filter", f"{self._key}/edges", keep),
+                "src": ("filter", f"{self._key}/src", keep),
+                "dst": ("filter", f"{self._key}/dst", keep),
+                "nbrs": ("filter", f"{self._key}/nbrs", keep_entry),
+                "rank": ("alias", f"{self._key}/rank"),
+                # deg / indptr / nbr_eid are recomputed, not filtered: they
+                # take plain puts (no plan entry)
+            }
         return Graph(
             n=self.n, edges=new_edges, deg=deg, rank=self.rank,
             src=self.src[keep], dst=self.dst[keep], indptr=indptr,
             nbrs=self.nbrs[keep_entry],
             nbr_eid=new_id[self.nbr_eid[keep_entry]].astype(Int),
             max_out_deg=int(out_deg.max()) if self.n and len(new_edges) else 0,
+            store=store, spill_plan=plan,
         )
 
 
-def build_graph(n: int, edges: np.ndarray) -> Graph:
-    """Build the oriented CSR package from a canonical edge list."""
+def build_graph(n: int, edges: np.ndarray, store=None) -> Graph:
+    """Build the oriented CSR package from a canonical edge list.
+
+    ``store`` attaches a :class:`~repro.core.store.GraphStore`; the graph
+    stays fully resident until its first :meth:`Graph.spill`.
+    """
     edges = canonical_edges(edges, n)
     m = len(edges)
     deg = degrees(n, edges)
@@ -164,7 +314,7 @@ def build_graph(n: int, edges: np.ndarray) -> Graph:
             n=n, edges=edges, deg=deg, rank=rank,
             src=np.zeros(0, Int), dst=np.zeros(0, Int),
             indptr=np.zeros(n + 1, Int), nbrs=np.zeros(0, Int),
-            nbr_eid=np.zeros(0, Int), max_out_deg=0,
+            nbr_eid=np.zeros(0, Int), max_out_deg=0, store=store,
         )
     u, v = edges[:, 0], edges[:, 1]
     u_first = rank[u] < rank[v]
@@ -182,7 +332,7 @@ def build_graph(n: int, edges: np.ndarray) -> Graph:
     return Graph(
         n=n, edges=edges, deg=deg, rank=rank, src=src, dst=dst,
         indptr=indptr, nbrs=nbrs, nbr_eid=nbr_eid,
-        max_out_deg=int(out_deg.max()) if n else 0,
+        max_out_deg=int(out_deg.max()) if n else 0, store=store,
     )
 
 

@@ -680,7 +680,9 @@ def build_partition_batch(
     e64 = g.edges.astype(np.int64)
     in_ns = (part_of[e64[:, 0]] >= 0) | (part_of[e64[:, 1]] >= 0)
     full_scope = bool(in_ns.all())
-    g_scan = g if full_scope else g.remove_edges(~in_ns)
+    # detach: the scoped scan graph is transient (one batch build) and must
+    # never allocate store namespaces or spill plans of its own
+    g_scan = g if full_scope else g.remove_edges(~in_ns, detach=True)
     if tris is not None:
         # incremental path: the caller's filtered full-graph list replaces
         # the enumeration; scope it the way the scoped scan would

@@ -925,8 +925,9 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
                     partitioner_seed: int = 0, mesh=None,
                     mesh_axis="data", mesh_axes=None,
                     kernel: str = "auto", with_stats: bool = False,
-                    checkpoint_dir=None, checkpoint_every: int = 1,
-                    resume: bool = False, max_retries: int = 2):
+                    checkpoint_dir=None, checkpoint_every=1,
+                    resume: bool = False, max_retries: int = 2,
+                    store=None, host_memory_budget=None):
     """End-to-end decomposition — the unified host entry point.
 
     ``engine``:
@@ -967,6 +968,18 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
     degrades (mesh drop, then smaller rounds).  The in-memory engines run
     in one device call and have nothing to journal — a ``checkpoint_dir``
     that ends up routed to them warns and is ignored.
+    ``checkpoint_every`` also accepts a duration string (``"30s"``) to
+    gate snapshots by wall clock.
+
+    ``store`` / ``host_memory_budget`` make the out-of-core engines'
+    working graph itself non-resident (DESIGN.md §15): pass a
+    :class:`~repro.core.store.GraphStore`, or just a byte budget —
+    ``host_memory_budget=`` alone builds a ``ChunkedDiskStore`` in a fresh
+    temp directory capping retained graph chunks at that many bytes.  φ is
+    bit-identical to the in-memory run; ``OocStats`` gains the chunk I/O
+    and prefetch counters.  Like ``checkpoint_dir``, both warn and are
+    ignored when the run routes to an in-memory engine.  A non-positive
+    ``host_memory_budget`` raises.
 
     With ``with_stats`` the second return value is a :class:`PeelStats`
     (in-memory frontier), ``None`` (dense), or an ``OocStats`` (out-of-core).
@@ -981,6 +994,10 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
         raise ValueError(
             f"memory_budget must be a positive number of working-set "
             f"entries, got {memory_budget!r}")
+    if host_memory_budget is not None and host_memory_budget <= 0:
+        raise ValueError(
+            f"host_memory_budget must be a positive byte count, got "
+            f"{host_memory_budget!r}")
     if mesh_axes is not None:
         axes = _mesh_axes(mesh_axes)
         mesh_axis = axes[0] if len(axes) == 1 else axes
@@ -992,6 +1009,14 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
     if engine == "auto" and memory_budget is not None and est > memory_budget:
         engine = "bottom-up"
     if engine in ("bottom-up", "top-down"):
+        if store is None and host_memory_budget is not None:
+            import tempfile
+
+            from repro.core.store import ChunkedDiskStore
+
+            store = ChunkedDiskStore(
+                tempfile.mkdtemp(prefix="truss-store-"),
+                host_memory_budget=host_memory_budget)
         if memory_budget is not None:
             # memory_budget is in working-set ENTRIES; the partitioners'
             # budget is in NS edge cost (sum of incident degrees, 2m
@@ -1011,7 +1036,8 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
                                       kernel=kernel,
                                       checkpoint_dir=checkpoint_dir,
                                       checkpoint_every=checkpoint_every,
-                                      resume=resume, max_retries=max_retries)
+                                      resume=resume, max_retries=max_retries,
+                                      store=store)
         else:
             from repro.core.top_down import top_down_decompose
 
@@ -1022,7 +1048,8 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
                                      kernel=kernel,
                                      checkpoint_dir=checkpoint_dir,
                                      checkpoint_every=checkpoint_every,
-                                     resume=resume, max_retries=max_retries)
+                                     resume=resume, max_retries=max_retries,
+                                     store=store)
         phi = np.asarray(res.phi).astype(np.int64)
         return (phi, res.stats) if with_stats else phi
     if checkpoint_dir is not None:
@@ -1030,6 +1057,13 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
             "checkpoint_dir is ignored by the in-memory engines (one device "
             "call, nothing to journal); pass a memory_budget that routes to "
             "an out-of-core engine, or engine='bottom-up'/'top-down'",
+            stacklevel=2)
+    if store is not None or host_memory_budget is not None:
+        warnings.warn(
+            "store=/host_memory_budget= are ignored by the in-memory "
+            "engines (the whole graph is resident by construction); pass a "
+            "memory_budget that routes to an out-of-core engine, or "
+            "engine='bottom-up'/'top-down'",
             stacklevel=2)
     tris = list_triangles_np(g)
     sup = support_from_triangle_list(tris, g.m).astype(np.int32)

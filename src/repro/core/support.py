@@ -416,3 +416,20 @@ def edge_support_auto(
             n_act, compact, use_kernel=use_kernel, interpret=not use_kernel
         )
     return np.asarray(edge_support_jax(g)).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Graph-store triangle spilling (DESIGN.md §15): the incremental per-round
+# triangle list is the largest single array the out-of-core round loop holds
+# across a yield, so it rides the same chunked store as the graph arrays.
+# ---------------------------------------------------------------------------
+
+def spill_triangles(store, key: str, tris: np.ndarray) -> None:
+    """Spill a round's triangle list (local edge-id triples) to ``store``
+    under ``key``; an existing list under the key is replaced."""
+    store.put(key, np.ascontiguousarray(tris, dtype=np.int64).reshape(-1, 3))
+
+
+def load_triangles(store, key: str) -> np.ndarray:
+    """Reload a triangle list spilled by :func:`spill_triangles`."""
+    return np.asarray(store.get(key), dtype=np.int64).reshape(-1, 3)

@@ -122,10 +122,11 @@ def top_down_decompose(
     mesh_axis="data",
     kernel: str = "auto",
     checkpoint_dir=None,
-    checkpoint_every: int = 1,
+    checkpoint_every: "int | str" = 1,
     resume: bool = False,
     checkpoint_keep: int = 3,
     max_retries: int = 2,
+    store=None,
 ) -> TopDownResult:
     """Algorithm 7: top-t k-classes (all classes if t is None).
 
@@ -146,7 +147,15 @@ def top_down_decompose(
     derived level structure (psi, G_new, its triangle list) is recomputed
     deterministically from the journaled supports rather than stored.
     Failed candidate peels walk the retry ladder of
-    ``bottom_up._retry_candidate_peel``.
+    ``bottom_up._retry_candidate_peel``; failed stage-1 credit rounds walk
+    ``bottom_up._retry_support_round`` (``max_retries`` bounds both).
+    ``checkpoint_every`` also accepts a duration string (``"30s"``).
+
+    ``store`` routes stage 1's working graph through a
+    :class:`~repro.core.store.GraphStore` (requires a ``budget`` — the
+    unbudgeted whole-graph support path is in-memory by construction);
+    the per-k class walk operates on G_new, which the top-down algorithm
+    assumes host-resident (DESIGN.md §15).
     """
     edges = glib.canonical_edges(edges, n)
     m = len(edges)
@@ -155,6 +164,10 @@ def top_down_decompose(
     eng = _Engine(mesh=mesh, mesh_axis=mesh_axis, kernel=kernel)
     if mesh is not None:
         stats.devices = eng.devices
+    if store is not None and budget is None:
+        raise ValueError(
+            "store= requires a working-set budget (the unbudgeted support "
+            "path computes over the whole resident graph)")
     if m == 0:
         return TopDownResult(edges, phi, [], 2, [], 0, stats)
 
@@ -164,7 +177,7 @@ def top_down_decompose(
                        partitioner_seed, t=t, faithful=bool(faithful_proc8),
                        devices=eng.devices)
         journal = RoundJournal(checkpoint_dir, key, every=checkpoint_every,
-                               keep=checkpoint_keep)
+                               keep=checkpoint_keep, store=store)
         if resume:
             snap = journal.load_latest()
     td_snap = snap if snap is not None and snap[1].get("stage") == "td" else None
@@ -191,7 +204,8 @@ def top_down_decompose(
             mesh=mesh, mesh_axis=mesh_axis,
             with_stats=True, journal=journal,
             restored=snap if snap is not None
-            and snap[1].get("stage") == "sup" else None)
+            and snap[1].get("stage") == "sup" else None,
+            max_retries=max_retries, store=store)
     phi[sup == 0] = 2
     alive = sup > 0                      # G_new
     psi = upper_bounds(n, edges, sup)

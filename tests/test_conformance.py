@@ -127,6 +127,58 @@ def test_conformance_drivers_direct(partitioner, mesh_kind):
 
 
 @pytest.mark.parametrize("engine", ("bottom-up", "top-down"))
+@pytest.mark.parametrize("store_kind", ("memory", "disk"))
+@pytest.mark.parametrize("partitioner", ("sequential", "locality"))
+def test_conformance_store_matrix(tmp_path, engine, store_kind,
+                                  partitioner):
+    """``store=`` rows of the matrix (DESIGN.md §15): the same drivers over
+    an InMemoryStore (behavioral no-op) and a ChunkedDiskStore (graph
+    arrays spilled chunk-wise) must stay phi bit-identical to the oracle,
+    and the disk rows must show real chunk I/O in the OocStats counters."""
+    from repro.core.store import ChunkedDiskStore, InMemoryStore
+
+    for i, (name, n, ce) in enumerate(CORPUS):
+        oracle = _ORACLE[name]
+        tag = ("store", engine, store_kind, partitioner, name)
+        if store_kind == "memory":
+            store = InMemoryStore()
+        else:
+            store = ChunkedDiskStore(str(tmp_path / f"s{i}"),
+                                     chunk_bytes=1 << 10)
+        with store, warnings.catch_warnings():
+            warnings.simplefilter("ignore", PartitionBudgetWarning)
+            phi, stats = truss_decompose(
+                n, ce, engine=engine, memory_budget=max(48, len(ce)),
+                partitioner=partitioner, store=store, with_stats=True)
+        assert (phi == oracle).all(), tag
+        assert verify_truss(n, ce, phi), tag
+        _check_ooc_stats(stats, None, tag)
+        if store_kind == "disk":
+            assert stats.chunk_writes > 0, tag
+            assert stats.bytes_spilled > 0, tag
+            assert stats.chunk_reads > 0, tag
+            total = stats.prefetch_hits + stats.prefetch_misses
+            assert total > 0, tag
+        else:
+            assert stats.chunk_writes == stats.chunk_reads == 0, tag
+            assert stats.bytes_spilled == 0, tag
+
+
+def test_conformance_host_memory_budget_knob():
+    """The one-knob spelling: ``host_memory_budget=`` builds a scratch
+    ChunkedDiskStore internally and must reproduce the oracle."""
+    for name, n, ce in CORPUS:
+        oracle = _ORACLE[name]
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", PartitionBudgetWarning)
+            phi, stats = truss_decompose(
+                n, ce, engine="bottom-up", memory_budget=max(48, len(ce)),
+                host_memory_budget=1 << 16, with_stats=True)
+        assert (phi == oracle).all(), name
+        assert stats.chunk_writes > 0, name
+
+
+@pytest.mark.parametrize("engine", ("bottom-up", "top-down"))
 @pytest.mark.parametrize("kernel", ("pallas", "auto"))
 def test_conformance_kernel_knob(engine, kernel):
     """``kernel=`` rows of the matrix (DESIGN.md §13): the fused Pallas

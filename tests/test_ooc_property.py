@@ -115,6 +115,40 @@ def test_stage2_pipeline_property(g, partitioner, budget_frac):
     assert res.stats.tri_est_error >= 0.0
 
 
+@settings(max_examples=10, deadline=None)
+@given(graphs(), st.sampled_from([0.15, 0.4]),
+       st.sampled_from([1 << 9, 1 << 12, 1 << 16, None]),
+       st.sampled_from([1 << 8, 1 << 11]))
+def test_disk_store_budget_sweep(g, budget_frac, host_budget, chunk_bytes):
+    """DESIGN.md §15: for ANY host_memory_budget (down to refusing every
+    chunk admission) and chunk size, the disk-backed driver reproduces the
+    oracle bit-for-bit, the store never retains more than the budget, and
+    the prefetch counters stay consistent."""
+    import tempfile
+
+    from repro.core.store import ChunkedDiskStore
+
+    n, edges = g
+    ce = glib.canonical_edges(edges, n)
+    if len(ce) < 3:
+        return
+    oracle = alg2_truss(n, ce)
+    budget = max(4, int(len(ce) * budget_frac))
+    with tempfile.TemporaryDirectory() as d:
+        with ChunkedDiskStore(d, host_memory_budget=host_budget,
+                              chunk_bytes=chunk_bytes) as store:
+            res = bottom_up_decompose(n, ce, budget, store=store)
+            peak = store.stats.peak_resident_bytes
+        assert (res.phi == oracle).all()
+        s = res.stats
+        assert s.chunk_writes > 0 and s.chunk_reads > 0
+        assert s.bytes_spilled > 0
+        assert s.prefetch_hits + s.prefetch_misses > 0
+        assert 0.0 <= s.prefetch_hit_rate <= 1.0
+        if host_budget is not None:
+            assert peak <= host_budget
+
+
 @settings(max_examples=8, deadline=None)
 @given(graphs(), st.sampled_from([0.2, 0.5]), st.integers(0, 2**31 - 1))
 def test_wrong_triangle_estimate_keeps_phi(g, budget_frac, est_seed):

@@ -179,16 +179,21 @@ np.save(ckpt_dir + "/phi.npy", res.phi)
 """
 
 
-def test_sigkill_crash_and_resume(tmp_path):
-    """The real thing: SIGKILL the worker between stage-1 rounds, resume in
-    a second process, phi must match the oracle bit-for-bit."""
-    d = str(tmp_path / "ckpt")
-    os.makedirs(d)
+def _subprocess_env():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(os.path.dirname(__file__), "..", "src"),
          os.path.join(os.path.dirname(__file__), ".."),
          env.get("PYTHONPATH", "")])
+    return env
+
+
+def test_sigkill_crash_and_resume(tmp_path):
+    """The real thing: SIGKILL the worker between stage-1 rounds, resume in
+    a second process, phi must match the oracle bit-for-bit."""
+    d = str(tmp_path / "ckpt")
+    os.makedirs(d)
+    env = _subprocess_env()
     kill = subprocess.run([sys.executable, "-c", _KILL_DRIVER, d, "2"],
                           env=env, capture_output=True, text=True,
                           timeout=600)
@@ -197,6 +202,55 @@ def test_sigkill_crash_and_resume(tmp_path):
     resume = subprocess.run([sys.executable, "-c", _KILL_DRIVER, d, "-1"],
                             env=env, capture_output=True, text=True,
                             timeout=600)
+    assert resume.returncode == 0, resume.stderr[-2000:]
+    phi = np.load(d + "/phi.npy")
+    name, n, ce = CORPUS[0]
+    assert (phi == _ORACLE[name]).all()
+
+
+_SPILL_KILL_DRIVER = r"""
+import sys
+import numpy as np
+from repro.core import faults
+from repro.core.bottom_up import bottom_up_decompose
+from repro.core.store import ChunkedDiskStore
+from tests.conftest import conformance_corpus
+
+ckpt_dir, store_dir, nth = sys.argv[1], sys.argv[2], int(sys.argv[3])
+name, n, ce = conformance_corpus()[0]
+if nth >= 0:
+    faults.install(faults.FaultPlan([faults.FaultRule(
+        site=faults.CHUNK_WRITE, kind="kill", nth=nth)]))
+import warnings
+warnings.simplefilter("ignore")
+with ChunkedDiskStore(store_dir, chunk_bytes=1 << 10) as store:
+    res = bottom_up_decompose(n, ce, budget=64, checkpoint_dir=ckpt_dir,
+                              checkpoint_every=1, resume=True, store=store)
+np.save(ckpt_dir + "/phi.npy", res.phi)
+"""
+
+
+def test_sigkill_mid_chunk_spill_and_resume(tmp_path):
+    """SIGKILL delivered INSIDE a chunk spill (the chunk-write fault site,
+    DESIGN.md §15): the journaled snapshot must survive the torn store
+    state, the restarted store must sweep the dead process's spill files,
+    and the resumed run must reproduce the oracle bit-for-bit."""
+    d = str(tmp_path / "ckpt")
+    sd = str(tmp_path / "store")
+    os.makedirs(d)
+    env = _subprocess_env()
+    # write 25 of ~40 chunk spills, then die: mid-run, past several
+    # journaled rounds, in the middle of one graph's spill
+    kill = subprocess.run([sys.executable, "-c", _SPILL_KILL_DRIVER,
+                           d, sd, "25"], env=env, capture_output=True,
+                          text=True, timeout=600)
+    assert kill.returncode == -9, (kill.returncode, kill.stderr[-2000:])
+    assert not os.path.exists(d + "/phi.npy")
+    leftovers = [f for f in os.listdir(sd) if f.endswith(".bin")]
+    assert leftovers                      # the dead run's torn spill state
+    resume = subprocess.run([sys.executable, "-c", _SPILL_KILL_DRIVER,
+                             d, sd, "-1"], env=env, capture_output=True,
+                            text=True, timeout=600)
     assert resume.returncode == 0, resume.stderr[-2000:]
     phi = np.load(d + "/phi.npy")
     name, n, ce = CORPUS[0]

@@ -1,0 +1,332 @@
+"""GraphStore unit contract (DESIGN.md §15): chunk roundtrips, filter
+aliasing, the shared I/O budget account, prefetch accounting, refcounted
+file lifecycle, the chunk-I/O fault sites, and the wall-clock checkpoint
+gate with an injected monotonic clock.
+
+End-to-end store-backed decomposition lives in the conformance matrix
+(test_conformance.py) and the hypothesis sweep (test_ooc_property.py);
+this file pins the store's own invariants in isolation.
+"""
+
+import glob
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import faults
+from repro.core import graph as glib
+from repro.core.bottom_up import OocStats, RoundJournal, _parse_every
+from repro.core.store import (ChunkedDiskStore, InMemoryStore, IoAccount,
+                              StoreError, StoreStats)
+
+
+def _disk(tmp_path, **kw):
+    kw.setdefault("chunk_bytes", 256)   # many chunks even for tiny arrays
+    return ChunkedDiskStore(str(tmp_path / "store"), **kw)
+
+
+# ---------------------------------------------------------------------------
+# roundtrips
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [InMemoryStore, _disk],
+                         ids=["memory", "disk"])
+def test_put_get_roundtrip(tmp_path, make):
+    store = make(tmp_path) if make is _disk else make()
+    with store:
+        cases = {
+            "g1/edges": np.arange(1000, dtype=np.int64).reshape(-1, 2),
+            "g1/deg": np.arange(37, dtype=np.int32),
+            "g1/flags": np.array([True, False, True]),
+            "g1/tris": np.arange(99, dtype=np.int64).reshape(-1, 3),
+            "g1/empty": np.zeros((0, 2), dtype=np.int64),
+        }
+        for key, arr in cases.items():
+            store.put(key, arr)
+        for key, arr in cases.items():
+            got = store.get(key)
+            assert got.dtype == arr.dtype, key
+            assert got.shape == arr.shape, key
+            assert (got == arr).all(), key
+
+
+def test_disk_get_unknown_key_raises(tmp_path):
+    with _disk(tmp_path) as store:
+        with pytest.raises(StoreError, match="unknown"):
+            store.get("g1/edges")
+
+
+def test_put_overwrites_and_frees_old_chunks(tmp_path):
+    with _disk(tmp_path) as store:
+        store.put("g1/x", np.arange(500, dtype=np.int64))
+        first = set(glob.glob(str(tmp_path / "store" / "*.bin")))
+        store.put("g1/x", np.arange(5, dtype=np.int64))
+        assert (store.get("g1/x") == np.arange(5)).all()
+        # the overwritten chunks are gone from disk
+        assert not (first & set(glob.glob(str(tmp_path / "store"
+                                              / "*.bin"))))
+
+
+def test_inmemory_counters_stay_zero(tmp_path):
+    with InMemoryStore() as store:
+        store.put("g1/x", np.arange(100))
+        store.get("g1/x")
+        store.prefetch(["g1/x"])
+        store.release("g1/x")
+        assert store.stats.as_dict() == StoreStats().as_dict()
+
+
+# ---------------------------------------------------------------------------
+# chunk-wise filter + aliasing (the remove_edges spill path)
+# ---------------------------------------------------------------------------
+
+def test_put_filtered_rewrites_only_touched_chunks(tmp_path):
+    with _disk(tmp_path, chunk_bytes=800) as store:   # 100 i64 rows/chunk
+        src = np.arange(400, dtype=np.int64)
+        store.put("g1/x", src)
+        spilled0 = store.stats.bytes_spilled
+        writes0 = store.stats.chunk_writes
+        # drop rows only from the second chunk: chunks 0, 2, 3 are aliased
+        keep = np.ones(400, dtype=bool)
+        keep[150:160] = False
+        store.put_filtered("g2/x", "g1/x", keep, src[keep])
+        assert (store.get("g2/x") == src[keep]).all()
+        assert store.stats.chunk_writes == writes0 + 1
+        assert store.stats.bytes_spilled == spilled0 + 90 * 8
+        # the filtered key survives release of its source (refcounts)
+        store.release("g1/x")
+        assert (store.get("g2/x") == src[keep]).all()
+        store.release("g2/x")
+        assert not glob.glob(str(tmp_path / "store" / "*.bin"))
+
+
+def test_alias_costs_zero_write_io(tmp_path):
+    with _disk(tmp_path) as store:
+        rank = np.arange(1000, dtype=np.int64)
+        store.put("g1/rank", rank)
+        spilled = store.stats.bytes_spilled
+        store.alias("g2/rank", "g1/rank", rank)
+        assert store.stats.bytes_spilled == spilled
+        store.release("g1/rank")
+        assert (store.get("g2/rank") == rank).all()
+
+
+def test_put_filtered_mask_mismatch_raises(tmp_path):
+    with _disk(tmp_path) as store:
+        src = np.arange(100, dtype=np.int64)
+        store.put("g1/x", src)
+        keep = np.ones(100, dtype=bool)
+        keep[:10] = False
+        with pytest.raises(StoreError, match="keeps"):
+            store.put_filtered("g2/x", "g1/x", keep, src)  # wrong length
+
+
+def test_put_filtered_without_source_falls_back_to_put(tmp_path):
+    with _disk(tmp_path) as store:
+        arr = np.arange(50, dtype=np.int64)
+        store.put_filtered("g2/x", "g1/x", np.ones(99, bool), arr)
+        assert (store.get("g2/x") == arr).all()
+
+
+# ---------------------------------------------------------------------------
+# budget + prefetch accounting
+# ---------------------------------------------------------------------------
+
+def test_prefetch_hits_on_streamed_get(tmp_path):
+    with _disk(tmp_path, lookahead=4) as store:
+        store.put("g1/x", np.arange(2000, dtype=np.int64))
+        n_chunks = len(store._manifests["g1/x"].chunks)
+        assert n_chunks > 4
+        store.prefetch(["g1/x"])
+        store.get("g1/x")
+        s = store.stats
+        assert s.prefetch_hits + s.prefetch_misses == n_chunks
+        # head was warmed and the window stays ahead: everything hits
+        assert s.prefetch_misses == 0
+        assert s.prefetch_hit_rate == 1.0
+
+
+def test_cold_get_first_chunk_misses(tmp_path):
+    with _disk(tmp_path) as store:
+        store.put("g1/x", np.arange(2000, dtype=np.int64))
+        store.get("g1/x")     # no prefetch hint: chunk 0 reads sync
+        assert store.stats.prefetch_misses >= 1
+        assert store.stats.prefetch_hits >= 1
+
+
+def test_budget_caps_resident_bytes(tmp_path):
+    budget = 600
+    with _disk(tmp_path, host_memory_budget=budget, chunk_bytes=256,
+               lookahead=8) as store:
+        arr = np.arange(4000, dtype=np.int64)
+        store.put("g1/x", arr)
+        assert (store.get("g1/x") == arr).all()
+        assert store.stats.peak_resident_bytes <= budget
+        assert store.io_account.peak <= budget
+        assert store.resident_bytes == 0    # read-once: drained after get
+
+
+def test_tight_budget_still_correct(tmp_path):
+    # budget below one chunk: every admission is refused, every read is a
+    # synchronous miss, the data still comes back bit-identical (1024 rows
+    # chunk evenly, so no undersized tail chunk slips under the budget)
+    with _disk(tmp_path, host_memory_budget=64, chunk_bytes=256) as store:
+        arr = np.arange(1024, dtype=np.int64)
+        store.put("g1/x", arr)
+        assert (store.get("g1/x") == arr).all()
+        assert store.stats.prefetch_hits == 0
+        assert store.stats.prefetch_misses > 0
+
+
+def test_io_account_shared_with_checkpoint_hold(tmp_path):
+    account = IoAccount(budget_bytes=512)
+    with _disk(tmp_path, io_account=account, chunk_bytes=256) as store:
+        store.put("g1/x", np.arange(500, dtype=np.int64))
+        with account.hold(512, "checkpoint"):
+            # a checkpoint in flight fills the budget: no chunk admitted
+            store.prefetch(["g1/x"])
+            assert store.resident_bytes == 0
+            arr = store.get("g1/x")     # all synchronous misses
+        assert (arr == np.arange(500)).all()
+        assert store.stats.prefetch_hits == 0
+        assert account.checkpoint_bytes_total == 512
+        assert account.reserved == 0
+
+
+def test_ctor_validation(tmp_path):
+    for bad in ({"host_memory_budget": 0}, {"host_memory_budget": -1},
+                {"chunk_bytes": 0}, {"lookahead": 0}):
+        with pytest.raises(ValueError):
+            ChunkedDiskStore(str(tmp_path / "s"), **bad)
+
+
+def test_init_sweeps_stale_spill_files(tmp_path):
+    d = tmp_path / "store"
+    d.mkdir()
+    (d / "dead-00000001.bin").write_bytes(b"x" * 64)
+    (d / "dead-00000002.bin.tmp").write_bytes(b"y")
+    (d / "keep.npz").write_bytes(b"z")      # not a spill artifact
+    with ChunkedDiskStore(str(d)):
+        pass
+    assert sorted(os.listdir(d)) == ["keep.npz"]
+
+
+# ---------------------------------------------------------------------------
+# fault sites
+# ---------------------------------------------------------------------------
+
+def test_chunk_write_fault_injects(tmp_path):
+    plan = faults.FaultPlan([faults.FaultRule(
+        site=faults.CHUNK_WRITE, kind="error", nth=2)])
+    with _disk(tmp_path) as store, faults.active(plan):
+        with pytest.raises(faults.InjectedFault):
+            store.put("g1/x", np.arange(500, dtype=np.int64))
+    assert len(plan.log) == 1
+
+
+def test_chunk_read_fault_injects_with_context(tmp_path):
+    with _disk(tmp_path) as store:
+        store.put("g1/x", np.arange(500, dtype=np.int64))
+        plan = faults.FaultPlan([faults.FaultRule(
+            site=faults.CHUNK_READ, kind="error",
+            where={"key": "g1/x"}, nth=1)])
+        with faults.active(plan):
+            with pytest.raises(faults.InjectedFault):
+                store.get("g1/x")
+        assert len(plan.log) == 1
+
+
+def test_torn_chunk_detected(tmp_path):
+    with _disk(tmp_path) as store:
+        store.put("g1/x", np.arange(500, dtype=np.int64))
+        chunk = store._manifests["g1/x"].chunks[1]
+        with open(chunk.path, "wb") as f:
+            f.write(b"\0" * (chunk.nbytes - 8))     # truncated payload
+        with pytest.raises(StoreError, match="torn"):
+            store.get("g1/x")
+
+
+# ---------------------------------------------------------------------------
+# Graph integration + counter absorption
+# ---------------------------------------------------------------------------
+
+def test_graph_spill_roundtrip_and_release(tmp_path):
+    rng = np.random.default_rng(7)
+    n = 40
+    iu = np.triu_indices(n, 1)
+    keep = rng.random(len(iu[0])) < 0.3
+    ce = glib.canonical_edges(np.stack(iu, 1)[keep], n)
+    ref = glib.build_graph(n, ce)
+    with _disk(tmp_path) as store:
+        g = glib.build_graph(n, ce, store=store)
+        g.spill()
+        g2 = g.remove_edges(np.arange(g.m) % 3 == 0)
+        g2.spill()
+        g.release()
+        ref2 = ref.remove_edges(np.arange(ref.m) % 3 == 0)
+        for name in ("edges", "deg", "rank", "src", "dst", "indptr",
+                     "nbrs", "nbr_eid"):
+            assert (getattr(g2, name) == getattr(ref2, name)).all(), name
+        g2.release()
+        assert not glob.glob(str(tmp_path / "store" / "*.bin"))
+
+
+def test_absorb_into_is_delta_based(tmp_path):
+    with _disk(tmp_path) as store:
+        store.put("g1/x", np.arange(500, dtype=np.int64))
+        stats = OocStats()
+        store.absorb_into(stats)
+        mid = stats.chunk_writes
+        assert mid == store.stats.chunk_writes > 0
+        store.absorb_into(stats)                 # no new I/O: no change
+        assert stats.chunk_writes == mid
+        store.get("g1/x")
+        store.absorb_into(stats)
+        assert stats.chunk_reads == store.stats.chunk_reads > 0
+
+
+# ---------------------------------------------------------------------------
+# wall-clock checkpoint gate (_parse_every + injected clock)
+# ---------------------------------------------------------------------------
+
+def test_parse_every_accepts_counts_and_durations():
+    assert _parse_every(3) == ("events", 3)
+    assert _parse_every("30s") == ("time", 30.0)
+    assert _parse_every("500ms") == ("time", 0.5)
+    assert _parse_every("2m") == ("time", 120.0)
+    assert _parse_every("1.5h") == ("time", 5400.0)
+    for bad in ("", "30", "s", "30 sec", "-5s", "0s"):
+        with pytest.raises(ValueError):
+            _parse_every(bad)
+
+
+def test_round_journal_wall_clock_gate(tmp_path):
+    now = [0.0]
+    journal = RoundJournal(str(tmp_path / "ckpt"), "rk", every="30s",
+                           clock=lambda: now[0])
+    stats = OocStats()
+    arrays = {"phi": np.arange(8, dtype=np.int64)}
+    assert not journal.record("s1", 0, arrays, stats)     # t=0: not due
+    now[0] = 29.9
+    assert not journal.record("s1", 1, arrays, stats)
+    now[0] = 31.0
+    assert journal.record("s1", 2, arrays, stats)         # 31s elapsed
+    assert not journal.record("s1", 3, arrays, stats)     # window reset
+    now[0] = 62.0
+    assert journal.record("s1", 4, arrays, stats)
+    assert stats.checkpoints == 2
+
+
+def test_round_journal_charges_store_account(tmp_path):
+    with _disk(tmp_path) as store:
+        store.put("g1/x", np.arange(64, dtype=np.int64))
+        journal = RoundJournal(str(tmp_path / "ckpt"), "rk", every=1,
+                               store=store)
+        stats = OocStats()
+        assert journal.record("s1", 0,
+                              {"phi": np.arange(8, dtype=np.int64)}, stats)
+        assert store.io_account.checkpoint_bytes_total > 0
+        assert store.io_account.reserved == 0       # released after save
+        # the journal absorbed the store counters into the snapshot stats
+        assert stats.chunk_writes == store.stats.chunk_writes > 0

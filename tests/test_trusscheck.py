@@ -202,6 +202,56 @@ def test_trk101_fresh_expression_arguments_are_safe(tmp_path):
     assert _ids(report) == []
 
 
+def test_trk101_donate_argnames_resolves_to_position(tmp_path):
+    # donate_argnames names a position-1 parameter; the read-after-donation
+    # must be caught at that position, not at the position-0 convention
+    _, report = _check(tmp_path, """
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, donate_argnames=("state",))
+        def advance(cfg, state):
+            return state
+
+        def drive(cfg, state):
+            out = advance(cfg, state)
+            return out + state.sum()   # state was donated at position 1
+    """, only=["TRK101"])
+    assert _ids(report) == ["TRK101"]
+    assert "state" in report.active[0].message
+
+
+def test_trk101_donate_argnames_no_false_positive_at_position_0(tmp_path):
+    # only `state` (position 1) donates; reading the position-0 arg after
+    # the call is safe — the old (0,) fallback would flag `cfg` here
+    _, report = _check(tmp_path, """
+        import jax
+
+        def advance(cfg, state):
+            return state
+
+        advance_j = jax.jit(advance, donate_argnames="state")
+
+        def drive(cfg, state):
+            out = advance_j(cfg, state)
+            return out + cfg.sum()   # cfg (position 0) is NOT donated
+    """, only=["TRK101"])
+    assert _ids(report) == []
+
+
+def test_trk101_donate_argnames_resolves_lambda_params(tmp_path):
+    _, report = _check(tmp_path, """
+        import jax
+
+        step = jax.jit(lambda cfg, buf: buf, donate_argnames=("buf",))
+
+        def drive(cfg, buf):
+            out = step(cfg, buf)
+            return out + buf.sum()   # buf donated at position 1
+    """, only=["TRK101"])
+    assert _ids(report) == ["TRK101"]
+
+
 # ---------------------------------------------------------------------------
 # TRK104 recompile hazards (the PR-7 shape discipline)
 # ---------------------------------------------------------------------------
