@@ -543,6 +543,68 @@ def table5_top_down():
              f"top5_speedup_vs_bottomup={usb/ust:.2f}")
 
 
+def table5_maintenance(smoke: bool = False):
+    """Incremental maintenance vs full recompute (DESIGN.md §16).
+
+    For each rmat benchmark graph and edit-batch size b, a random batch of
+    b edits (half deletions of existing edges, the rest insertions of new
+    ones; b=1 is the paper's streaming single-insert case) is applied with
+    :func:`truss_maintain` against a precomputed phi, and the wall-clock is
+    compared with the fastest recompute available (the in-memory bulk
+    peel) on the final edge set.  phi is asserted bit-identical to the
+    recompute — the differential suite pins the same equality across the
+    conformance corpus, this row pins it at benchmark scale and prices it.
+
+    The acceptance row: ``speedup_vs_recompute >= 5`` at b=1 (gated in
+    CI from ``BENCH_maint.json``).  Speedup decays with b — maintenance
+    is sequential-exact, so cost is linear in b while the recompute is
+    flat — and the crossover batch size is exactly what the column
+    communicates.
+    """
+    from benchmarks.datasets import load
+    from repro.core.maintain import truss_maintain
+    from repro.core.peel import truss_decompose
+
+    names = ["hep-like"] if smoke else ["hep-like", "amazon-like"]
+    batches = (1, 8) if smoke else (1, 8, 64)
+    for name in names:
+        jax.clear_caches()
+        n, edges = load(name)
+        # the maintained state: NOT timed into either side of the row
+        phi0 = truss_decompose(n, edges)
+        present = {tuple(e) for e in np.asarray(edges).tolist()}
+        rng = np.random.default_rng(9)
+        for b in batches:
+            n_del = b // 2
+            steps = [("delete", int(u), int(v))
+                     for u, v in (edges[i] for i in rng.choice(
+                         len(edges), n_del, replace=False))]
+            while len(steps) < b:
+                u, v = (int(x) for x in rng.integers(0, n, 2))
+                lo, hi = min(u, v), max(u, v)
+                if lo == hi or (lo, hi) in present:
+                    continue
+                present.add((lo, hi))
+                steps.append(("insert", lo, hi))
+            us_m, res = _time(lambda: truss_maintain((n, edges), phi0,
+                                                     steps))
+            us_r, phi_r = _time(
+                lambda: truss_decompose(res.graph.n, res.graph.edges))
+            assert (res.phi == phi_r).all()
+            st = res.stats
+            emit(f"table5maint_{name}_maintain_b{b}", us_m,
+                 f"m={len(edges)};edits={st.edits_applied};"
+                 f"levels={st.maintain_levels};"
+                 f"affected={st.affected_edges};"
+                 f"speedup_vs_recompute={us_r/us_m:.2f}",
+                 m=len(edges), batch=b, edits_applied=st.edits_applied,
+                 maintain_levels=st.maintain_levels,
+                 affected_edges=st.affected_edges,
+                 speedup_vs_recompute=us_r / us_m)
+            emit(f"table5maint_{name}_recompute_b{b}", us_r,
+                 f"m={res.graph.m}", m=res.graph.m, batch=b)
+
+
 def table6_truss_vs_core():
     from benchmarks.datasets import MEDIUM, SMALL, load
     from repro.core.graph import clustering_coefficient, incident_vertices
@@ -693,6 +755,7 @@ TABLES = {
     "table4resil": table4_resilience,
     "table4disk": table4_disk,
     "table5": table5_top_down,
+    "table5maint": table5_maintenance,
     "table6": table6_truss_vs_core,
     "peel": peel_engines,
     "kernel": kernel_micro,
@@ -701,7 +764,7 @@ TABLES = {
 
 # tables that accept smoke= (smallest-dataset variant); shared with hillclimb
 SMOKE_TABLES = ("peel", "table4", "table4part", "table4shard",
-                "table4kernel", "table4resil", "table4disk")
+                "table4kernel", "table4resil", "table4disk", "table5maint")
 
 
 def main(argv=None) -> None:

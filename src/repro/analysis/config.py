@@ -58,7 +58,7 @@ class CheckConfig:
     # loops stall the dispatch pipeline.
     hot_modules: Tuple[str, ...] = (
         "core/bottom_up.py", "core/top_down.py", "core/peel.py",
-        "core/store.py",
+        "core/store.py", "core/maintain.py",
     )
     # Calls whose results live on device (module-local jit bindings are
     # discovered from the AST; these cover cross-module producers).
@@ -78,6 +78,7 @@ class CheckConfig:
             ("core/peel.py", "PendingPeel.result"): "FINALIZE",
             ("core/bottom_up.py", "_partition_rounds"): "PARTITIONER",
             ("core/bottom_up.py", "_support_credit_triples"): "SUPPORT",
+            ("core/maintain.py", "truss_maintain"): "MAINTAIN",
             ("checkpoint/manager.py", "save"): "CHECKPOINT_WRITE",
             ("core/store.py",
              "ChunkedDiskStore._read_chunk"): "CHUNK_READ",

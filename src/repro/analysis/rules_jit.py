@@ -27,9 +27,33 @@ from repro.analysis import framework as fw
 _SYNC_BUILTINS = {"int", "float", "bool"}
 
 
+def _loop_varying_names(loops) -> Set[str]:
+    """Names rebound somewhere inside the given loop statements: the loop
+    targets themselves plus every assignment in their bodies.  An argument
+    built from one of these can change shape between iterations."""
+    out: Set[str] = set()
+    for loop in loops:
+        if isinstance(loop, (ast.For, ast.AsyncFor)):
+            out.update(fw.assigned_names(loop.target))
+        for node in ast.walk(loop):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    out.update(fw.assigned_names(t))
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                out.update(fw.assigned_names(node.target))
+            elif isinstance(node, ast.withitem) and node.optional_vars:
+                out.update(fw.assigned_names(node.optional_vars))
+    return out
+
+
+def _names_in(expr: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(expr) if isinstance(n, ast.Name)}
+
+
 class RecompileHazardRule(fw.Rule):
     """TRK104: shape-disciplined API called in a loop without its
-    shape-cache/shape-ladder keyword."""
+    shape-cache/shape-ladder keyword — or a locally defined jitted
+    callable called in a loop with loop-varying arguments."""
 
     rule_id = "TRK104"
     summary = ("jitted peel/pack API called inside a per-round loop "
@@ -38,27 +62,48 @@ class RecompileHazardRule(fw.Rule):
     def check(self, module: fw.Module, config) -> List[fw.Finding]:
         findings: List[fw.Finding] = []
         apis = config.shape_disciplined_apis
+        # module-local jit products: `x = jax.jit(f)` bindings and
+        # `@jit`-decorated defs of THIS file (the configured cross-module
+        # producers are covered by the API table, not this branch)
+        local_jitted = (_module_producers(module, config)
+                        - set(config.device_producers) - set(apis))
         for node in ast.walk(module.tree):
             if not isinstance(node, ast.Call):
                 continue
             name = fw.call_name(node).split(".")[-1]
             required = apis.get(name)
-            if required is None:
+            loops = fw.enclosing_loops(node)
+            if not loops:
                 continue
-            if not fw.enclosing_loops(node):
-                continue
-            kwargs = fw.keyword_names(node)
-            if any(kw.arg is None for kw in node.keywords):
-                continue  # **kwargs forwarding: assume the caller threads it
-            if not any(r in kwargs for r in required):
-                findings.append(self.finding(
-                    module, node,
-                    f"`{name}` called inside a loop without "
-                    f"{' / '.join(f'`{r}=`' for r in required)}: each "
-                    f"data-dependent operand shape re-traces and "
-                    f"recompiles (pod-wide under a mesh) — thread the "
-                    f"run's shape cache through this call (PR-7 "
-                    f"discipline, DESIGN.md §13)"))
+            if required is not None:
+                kwargs = fw.keyword_names(node)
+                if any(kw.arg is None for kw in node.keywords):
+                    continue  # **kwargs forwarding: caller threads it
+                if not any(r in kwargs for r in required):
+                    findings.append(self.finding(
+                        module, node,
+                        f"`{name}` called inside a loop without "
+                        f"{' / '.join(f'`{r}=`' for r in required)}: each "
+                        f"data-dependent operand shape re-traces and "
+                        f"recompiles (pod-wide under a mesh) — thread the "
+                        f"run's shape cache through this call (PR-7 "
+                        f"discipline, DESIGN.md §13)"))
+            elif name in local_jitted:
+                varying = _loop_varying_names(loops)
+                args = list(node.args) + [kw.value for kw in node.keywords]
+                hot = sorted(set().union(*[_names_in(a) for a in args])
+                             & varying) if args else []
+                if hot:
+                    findings.append(self.finding(
+                        module, node,
+                        f"locally jitted `{name}` called inside a loop "
+                        f"with loop-varying argument(s) "
+                        f"{', '.join(f'`{h}`' for h in hot)}: if their "
+                        f"shapes differ between iterations every call "
+                        f"re-traces and recompiles — pad the operands to "
+                        f"a fixed shape, hoist the call, or allowlist "
+                        f"with the shape invariant as rationale "
+                        f"(DESIGN.md §13)"))
         return findings
 
 

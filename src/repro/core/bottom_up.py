@@ -180,6 +180,27 @@ class _AdaptiveLocality:
             self.prev_locality = batch.tri_locality
 
 
+def _zone_state(part_fn):
+    """Journal payload of the partitioner's adaptive zone state.
+
+    The locality partitioner (:class:`_AdaptiveLocality`) carries one
+    float of cross-round feedback — the previous round's observed triangle
+    locality, which sizes the next round's zone cap.  A journal snapshot
+    that omits it makes a resumed run re-plan its rounds from the cold
+    default instead of reproducing the original sequence (φ stays exact
+    either way, but perf and the round/locality counters diverge —
+    DESIGN.md §16).  Stateless partitioners snapshot as None.
+    """
+    state = getattr(part_fn, "prev_locality", None)
+    return None if state is None else float(state)
+
+
+def _restore_zone_state(part_fn, state) -> None:
+    """Reinstall a journaled :func:`_zone_state` into the partitioner."""
+    if state is not None and hasattr(part_fn, "prev_locality"):
+        part_fn.prev_locality = float(state)
+
+
 def _resolve_partitioner(partitioner, seed: int = 0):
     """Normalize to fn(graph, budget, round_idx) -> parts.
 
@@ -264,6 +285,15 @@ class OocStats:
     #                           prefetch thread (scheduled before requested)
     prefetch_misses: int = 0  # chunk requests that fell back to a
     #                           synchronous disk read at request time
+    tri_spill_rows: int = 0   # largest triangle list (rows) spilled to the
+    #                           store across partition rounds
+    tri_reload_peak_rows: int = 0  # peak triangle rows resident at once
+    #                           while CONSUMING a spilled list (chunk-
+    #                           streamed: must stay far below
+    #                           tri_spill_rows, DESIGN.md §16)
+    edits_applied: int = 0    # maintenance edits applied (maintain.py)
+    maintain_levels: int = 0  # per-level region peels run by maintenance
+    affected_edges: int = 0   # Σ candidate edges over maintenance levels
 
     @property
     def prefetch_hit_rate(self) -> float:
@@ -579,11 +609,13 @@ def _partition_rounds(
 ) -> Iterator[Tuple[int, "plib.PartitionBatch", np.ndarray, int]]:
     """Producer side of the double-buffered round pipeline (DESIGN.md §9).
 
-    Yields ``(round_idx, batch, cur_ids, cur_budget)`` per partition round,
-    with ``cur_ids`` mapping the batch's current-graph edge ids to original
-    edge ids and ``cur_budget`` the working-set budget the round was built
-    at (the value a resumed run must restart from, since the stall fallback
-    below mutates it).  Which edges a round removes is known at batch-build
+    Yields ``(round_idx, batch, cur_ids, cur_budget, zone_state)`` per
+    partition round, with ``cur_ids`` mapping the batch's current-graph
+    edge ids to original edge ids, ``cur_budget`` the working-set budget
+    the round was built at (the value a resumed run must restart from,
+    since the stall fallback below mutates it), and ``zone_state`` the
+    locality partitioner's adaptive state as of this round's feedback
+    (``None`` for stateless partitioners).  Which edges a round removes is known at batch-build
     time (a round's internal edges leave the working graph regardless of
     their peel results), so the generator applies ``Graph.remove_edges``
     and repartitions immediately — the consumer can keep the device busy
@@ -646,16 +678,28 @@ def _partition_rounds(
         parts = part_fn(g, cur_budget, stats.rounds)
         if not parts:
             break
-        if tris_cur is None and tris_key is not None:
-            tris_cur = sup_lib.load_triangles(store, tris_key)
-        if tris_cur is None:
+        spilled_round = tris_cur is None and tris_key is not None
+        if spilled_round:
+            # chunk-stream the spilled list through the batch builder
+            # (DESIGN.md §16): the builder retains only the rows assigned
+            # into some part, so the host's peak triangle working set is
+            # the round's bucket payload plus one store chunk — never the
+            # whole 3·T list the old whole-array reload materialized
+            stats.tri_rescans_avoided += 1
+            tris_in = sup_lib.iter_triangle_chunks(store, tris_key)
+        elif tris_cur is None:
             tris_cur = np.asarray(list_triangles(g), np.int64).reshape(-1, 3)
+            tris_in = tris_cur
         else:
             stats.tri_rescans_avoided += 1
+            tris_in = tris_cur
         batch = plib.build_partition_batch(
             g, parts, with_incidence=with_incidence,
-            lane_multiple=lane_multiple, tris=tris_cur,
+            lane_multiple=lane_multiple, tris=tris_in,
             shape_ladder=ladder if lane_multiple > 1 else None)
+        if spilled_round:
+            stats.tri_reload_peak_rows = max(stats.tri_reload_peak_rows,
+                                             batch.tri_peak_rows)
         if lane_multiple > 1:
             for b in batch.buckets:
                 shape = (b.cap_e, b.cap_t, b.n_lanes)
@@ -677,9 +721,9 @@ def _partition_rounds(
         ids_snapshot = cur_ids
         cur_ids = cur_ids[~removed]
         g_prev, g = g, g.remove_edges(removed)
-        if len(tris_cur):
+        remap = np.cumsum(~removed) - 1          # old id -> compacted id
+        if tris_cur is not None and len(tris_cur):
             keep = ~removed[tris_cur].any(axis=1)
-            remap = np.cumsum(~removed) - 1      # old id -> compacted id
             tris_cur = remap[tris_cur[keep]]
         if store is not None:
             # spill the successor BEFORE releasing the predecessor: the
@@ -688,14 +732,41 @@ def _partition_rounds(
             # release decrements them
             g.spill()
             g_prev.release()
-            if tris_key is None:
-                tris_key = store.graph_key() + "/tris"
-            sup_lib.spill_triangles(store, tris_key, tris_cur)
+            if spilled_round:
+                # stream-filter the old spilled list into a fresh key: one
+                # chunk resident at a time, and the writer must not clobber
+                # the key it is still reading from, so the key alternates
+                # per round and the predecessor is released after close
+                new_key = store.graph_key() + "/tris"
+                with sup_lib.stream_spill_triangles(store, new_key) as w:
+                    for chunk in sup_lib.iter_triangle_chunks(store,
+                                                              tris_key):
+                        stats.tri_reload_peak_rows = max(
+                            stats.tri_reload_peak_rows, int(len(chunk)))
+                        keep = ~removed[chunk].any(axis=1)
+                        w.append(remap[chunk[keep]])
+                    spilled_rows = w.rows
+                if new_key != tris_key:
+                    store.release(tris_key)
+                tris_key = new_key
+            else:
+                if tris_key is None:
+                    tris_key = store.graph_key() + "/tris"
+                sup_lib.spill_triangles(store, tris_key, tris_cur)
+                spilled_rows = len(tris_cur)
+            stats.tri_spill_rows = max(stats.tri_spill_rows,
+                                       int(spilled_rows))
             tris_cur = None
             # warm the next round's reads while the consumer peels this one
             g.prefetch()
             store.prefetch([tris_key])
-        yield stats.rounds, batch, ids_snapshot, cur_budget
+        # zone state as of THIS round's observe — the value the next
+        # round's planning reads, hence the one a resume from this round's
+        # snapshot must restore.  Captured here because the double-buffered
+        # consumer journals one round late, by which time the producer has
+        # already observed the following round's batch.
+        yield (stats.rounds, batch, ids_snapshot, cur_budget,
+               _zone_state(part_fn))
 
 
 def _retry_stage1_round(eng: _Engine, stats: OocStats, shape_cache,
@@ -796,6 +867,7 @@ def _lower_bounding_batched(n, edges, budget, part_fn, mesh=None,
         stats.resumed_round = int(meta["index"])
         stats.devices = eng.devices
         start_budget = int(meta.get("cur_budget", budget))
+        _restore_zone_state(part_fn, meta.get("zone_state"))
     shape_cache: set = set()
 
     def fold_bucket(round_idx, bucket, ids, phi_b):
@@ -821,7 +893,7 @@ def _lower_bounding_batched(n, edges, budget, part_fn, mesh=None,
     def consume(pending):
         """Blocking half: land one round's folds, retrying on failure,
         then journal the completed round."""
-        round_idx, batch, ids, handles, cur_b = pending
+        round_idx, batch, ids, handles, cur_b, zs = pending
         try:
             for bucket, handle in zip(batch.buckets, handles):
                 phi_b, _ = handle.result()
@@ -833,7 +905,7 @@ def _lower_bounding_batched(n, edges, budget, part_fn, mesh=None,
             journal.record("lb", round_idx,
                            {"phi": phi, "lb": lb, "in_gnew": in_gnew,
                             "alive": alive},
-                           stats, cur_budget=int(cur_b))
+                           stats, cur_budget=int(cur_b), zone_state=zs)
 
     # Double-buffered rounds: dispatch round r non-blocking, then let the
     # generator build round r + 1 (NS sweep, triangle routing, lane packing)
@@ -853,7 +925,7 @@ def _lower_bounding_batched(n, edges, budget, part_fn, mesh=None,
             break
         pending = None
         try:
-            for round_idx, batch, ids, cur_b in _partition_rounds(
+            for round_idx, batch, ids, cur_b, zs in _partition_rounds(
                     n, edges, start_budget, part_fn, stats,
                     lane_multiple=eng.n_dev, start_ids=start_ids,
                     store=store):
@@ -886,12 +958,13 @@ def _lower_bounding_batched(n, edges, budget, part_fn, mesh=None,
                         journal.record("lb", round_idx,
                                        {"phi": phi, "lb": lb,
                                         "in_gnew": in_gnew, "alive": alive},
-                                       stats, cur_budget=int(cur_b))
+                                       stats, cur_budget=int(cur_b),
+                                       zone_state=zs)
                     continue
                 if pending is not None:
                     stats.overlapped += 1
                     consume(pending)
-                pending = (round_idx, batch, ids, handles, cur_b)
+                pending = (round_idx, batch, ids, handles, cur_b, zs)
             if pending is not None:
                 consume(pending)
             break
@@ -1244,7 +1317,8 @@ def bottom_up_decompose(
 
 
 def _support_credit_triples(bucket, round_idx: int, bi: int, sub_idx: int,
-                            retry: int) -> np.ndarray:
+                            retry: int, *,
+                            chunk_rows: int = 1 << 16) -> np.ndarray:
     """Flat parent-edge-id triples of one bucket's captured triangles —
     the compute half of a ``partitioned_support`` round, kept PURE (no
     scatter into the global ``sup``).
@@ -1253,6 +1327,11 @@ def _support_credit_triples(bucket, round_idx: int, bi: int, sub_idx: int,
     idempotent, so the retry ladder must be able to recompute a failed
     bucket from its host arrays and fold exactly once afterwards; the
     ``"support"`` fault site fires here, before any credit exists.
+
+    The lane-wise gather walks ``bucket.tris`` in slabs of ``chunk_rows``
+    triangle slots so the padded ``(B, cap_t, 3)`` parent intermediate is
+    never materialized whole — its peak is ``B * chunk_rows * 3`` — while
+    the returned array still holds only the real (unpadded) triples.
     """
     faults.check(faults.SUPPORT, stage=1, round=round_idx, bucket=bi,
                  sub=sub_idx, retry=retry)
@@ -1262,9 +1341,14 @@ def _support_credit_triples(bucket, round_idx: int, bi: int, sub_idx: int,
     eid_pad = np.concatenate(
         [bucket.edge_ids, np.full((B, 1), -1, np.int64)], axis=1)
     lane = np.arange(B)[:, None, None]
-    parent = eid_pad[lane, bucket.tris]              # (B, cap_t, 3)
-    real = parent[:, :, 0] >= 0
-    return parent[real].reshape(-1)
+    cap_t = bucket.tris.shape[1]
+    step = max(1, int(chunk_rows))
+    out: List[np.ndarray] = []
+    for lo in range(0, cap_t, step):
+        parent = eid_pad[lane, bucket.tris[:, lo:lo + step]]
+        real = parent[:, :, 0] >= 0
+        out.append(parent[real].reshape(-1))
+    return np.concatenate(out) if out else np.zeros(0, np.int64)
 
 
 def _retry_support_round(eng: _Engine, stats: OocStats, round_idx: int,
@@ -1394,6 +1478,7 @@ def partitioned_support(
         stats.resumed_round = int(meta["index"])
         stats.devices = dev
         cur_budget = int(meta.get("cur_budget", budget))
+        _restore_zone_state(part_fn, meta.get("zone_state"))
 
     if engine == "perpart":
         alive = np.ones(m, dtype=bool)
@@ -1439,7 +1524,7 @@ def partitioned_support(
         if not len(start_ids):
             break
         try:
-            for round_idx, batch, ids, cur_b in _partition_rounds(
+            for round_idx, batch, ids, cur_b, zs in _partition_rounds(
                     n, edges, cur_budget, part_fn, stats,
                     with_incidence=False, start_ids=start_ids, store=store):
                 try:
@@ -1461,7 +1546,7 @@ def partitioned_support(
                 if journal is not None:
                     journal.record("sup", round_idx,
                                    {"sup": sup, "alive": alive}, stats,
-                                   cur_budget=int(cur_b))
+                                   cur_budget=int(cur_b), zone_state=zs)
             break
         except _RestartRounds as r:
             cur_budget = r.budget

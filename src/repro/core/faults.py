@@ -25,6 +25,10 @@ drifts; this module instead names the injection sites once —
 * ``"chunk-write"``   — inside ``store.ChunkedDiskStore._write_chunk``,
   before a graph chunk spill commits (tmp+rename, same atomicity contract
   as the checkpoint writer — a ``kill`` here is the crash-mid-spill case)
+* ``"maintain"``      — start of each single-edit step inside
+  ``maintain.truss_maintain``, after the previous edit's φ committed to the
+  journal but before the next edit mutates the working graph (the
+  crash-mid-maintenance site of DESIGN.md §16)
 
 — and lets a test describe failures declaratively as a :class:`FaultPlan`:
 *at the 2nd stage-1 dispatch of round 3, raise a device OOM, twice*.  Rules
@@ -78,6 +82,7 @@ PARTITIONER = "partitioner"
 SUPPORT = "support"
 CHUNK_READ = "chunk-read"
 CHUNK_WRITE = "chunk-write"
+MAINTAIN = "maintain"
 
 _RETRYABLE_MARKERS = ("RESOURCE_EXHAUSTED", "OUT_OF_MEMORY", "out of memory",
                       "Out of memory")

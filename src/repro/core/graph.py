@@ -190,6 +190,8 @@ class Graph:
                 self._store.put(dst_key, arr)
             elif step[0] == "alias":
                 self._store.alias(dst_key, step[1], arr)
+            elif step[0] == "insert":  # ("insert", src_key, is_new_mask)
+                self._store.put_inserted(dst_key, step[1], step[2], arr)
             else:  # ("filter", src_key, keep_mask)
                 self._store.put_filtered(dst_key, step[1], step[2], arr)
             self._spilled.add(name)
@@ -292,6 +294,107 @@ class Graph:
             nbrs=self.nbrs[keep_entry],
             nbr_eid=new_id[self.nbr_eid[keep_entry]].astype(Int),
             max_out_deg=int(out_deg.max()) if self.n and len(new_edges) else 0,
+            store=store, spill_plan=plan,
+        )
+
+    def add_edges(self, new_edges: np.ndarray, *,
+                  detach: bool = False) -> "Graph":
+        """Incremental maintenance: splice new edges in without a rebuild.
+
+        The mirror image of :meth:`remove_edges`, under the same
+        rank-reuse / no-lexsort discipline (DESIGN.md §16):
+
+        * ``rank`` is REUSED — it stays a total order over the fixed
+          vertex set, so every existing edge keeps its orientation and the
+          inserted edges are oriented by the same ranks (the forward
+          algorithm only needs *some* fixed acyclic orientation).  Ranks
+          go stale w.r.t. the grown degrees; the O(sqrt(m)) out-degree
+          bound degrades gracefully, correctness does not.
+        * the canonical lex order of ``edges`` is preserved by a
+          searchsorted SPLICE: old edge id ``i`` maps to ``i + (#inserted
+          keys < key_i)`` and the inserted edges take the gap ids — the m
+          existing edges are never re-sorted.  Each CSR row absorbs its
+          new entries the same way (a merge of two sorted runs keyed by
+          ``row * n + nbr``); only the k inserted entries are ever sorted.
+
+        Inserted pairs are canonicalized against ``self.n`` (self loops,
+        duplicates and edges already present are dropped); when nothing
+        remains, ``self`` is returned unchanged.  Total cost O(n + m +
+        k log k) with no sort of existing data.
+
+        Store-backed graphs hand the successor an *insertion-preserving*
+        spill plan (``store.put_inserted``): source chunks with no
+        interior splice point are aliased, so a small edit batch costs
+        write I/O proportional to the chunks it touches, not the graph
+        (the insertion side of the chunk-wise ``remove_edges`` filter).
+        ``detach=True`` produces a plain in-memory graph instead.
+        """
+        ins = canonical_edges(new_edges, self.n)
+        if len(ins):
+            ins = ins[edge_id_lookup(self, ins[:, 0], ins[:, 1]) < 0]
+        if len(ins) == 0:
+            return self
+        n, m, k = self.n, self.m, len(ins)
+        old_keys = (self.edges[:, 0].astype(np.int64) * np.int64(n)
+                    + self.edges[:, 1])
+        ins_keys = ins[:, 0].astype(np.int64) * np.int64(n) + ins[:, 1]
+        # splice position of each inserted edge within the OLD edge list;
+        # old id i shifts by the number of inserted keys before it and
+        # inserted edge j lands at pos[j] + j (keys are unique, pos sorted)
+        pos = np.searchsorted(old_keys, ins_keys)
+        shift = np.searchsorted(ins_keys, old_keys)
+        new_id_old = np.arange(m, dtype=np.int64) + shift
+        new_id_ins = pos.astype(np.int64) + np.arange(k, dtype=np.int64)
+        edges = np.insert(self.edges, pos, ins, axis=0)
+        is_new = np.zeros(m + k, dtype=bool)
+        is_new[new_id_ins] = True
+        deg = self.deg.copy()
+        np.add.at(deg, ins[:, 0], 1)
+        np.add.at(deg, ins[:, 1], 1)
+        rank = self.rank
+        u_first = rank[ins[:, 0]] < rank[ins[:, 1]]
+        ins_src = np.where(u_first, ins[:, 0], ins[:, 1]).astype(Int)
+        ins_dst = np.where(u_first, ins[:, 1], ins[:, 0]).astype(Int)
+        src = np.insert(self.src, pos, ins_src)
+        dst = np.insert(self.dst, pos, ins_dst)
+        # CSR merge: the existing entries are already sorted by the
+        # composite key row * n + nbr (rows ascending, each row sorted by
+        # neighbor id); sort just the k new entries and splice them at
+        # their searchsorted positions
+        out_deg_old = (self.indptr[1:] - self.indptr[:-1]).astype(np.int64)
+        rows_old = np.repeat(np.arange(n, dtype=np.int64), out_deg_old)
+        key_old = rows_old * np.int64(n) + self.nbrs
+        order = np.lexsort((ins_dst, ins_src))
+        e_src, e_dst = ins_src[order], ins_dst[order]
+        e_eid = new_id_ins[order]
+        key_new = e_src.astype(np.int64) * np.int64(n) + e_dst
+        cpos = np.searchsorted(key_old, key_new)
+        nbrs = np.insert(self.nbrs, cpos, e_dst)
+        nbr_eid = np.insert(new_id_old[self.nbr_eid], cpos,
+                            e_eid).astype(Int)
+        is_new_entry = np.zeros(len(nbrs), dtype=bool)
+        is_new_entry[cpos + np.arange(k, dtype=np.int64)] = True
+        counts = np.zeros(n + 1, dtype=np.int64)
+        counts[1:] = out_deg_old + np.bincount(
+            e_src.astype(np.int64), minlength=n)
+        indptr = np.cumsum(counts).astype(Int)
+        out_deg = indptr[1:] - indptr[:-1]
+        store = None if detach else self._store
+        plan = None
+        if store is not None and self._key is not None:
+            plan = {
+                "edges": ("insert", f"{self._key}/edges", is_new),
+                "src": ("insert", f"{self._key}/src", is_new),
+                "dst": ("insert", f"{self._key}/dst", is_new),
+                "nbrs": ("insert", f"{self._key}/nbrs", is_new_entry),
+                "rank": ("alias", f"{self._key}/rank"),
+                # deg / indptr / nbr_eid are recomputed, not spliced: they
+                # take plain puts (no plan entry)
+            }
+        return Graph(
+            n=n, edges=edges.astype(Int), deg=deg, rank=rank, src=src,
+            dst=dst, indptr=indptr, nbrs=nbrs, nbr_eid=nbr_eid,
+            max_out_deg=int(out_deg.max()) if n and len(edges) else 0,
             store=store, spill_plan=plan,
         )
 

@@ -1,0 +1,394 @@
+"""Incremental truss maintenance for evolving graphs (DESIGN.md §16).
+
+Every engine in this repo recomputes φ from scratch; the massive networks
+the paper targets arrive as *edge streams*.  Zhou et al., "Efficient Truss
+Maintenance in Evolving Networks" (arxiv 1402.2807) observe that a single
+edge edit changes any trussness by at most 1, and only inside a small
+triangle-connected region around the edited edge.  :func:`truss_maintain`
+applies a batch of edits one at a time, computes each edit's affected
+region on the host, and re-peels only that region with the existing
+:func:`~repro.core.peel.local_threshold_peel` machinery — the padded-shape
+device peel the out-of-core engines already use, honoring the same
+``kernel=`` / ``mesh=`` / ``store=`` knobs.
+
+Why sequential single edits: the ±1 bound that makes per-level processing
+*exact* holds per edit, not per batch (two inserts can raise a trussness
+by 2, which no single-level pass reproduces).  Each edit is O(m) host work
+(id splice + one undirected CSR) plus peels over regions usually orders of
+magnitude smaller than the graph — the recompute it replaces is the full
+O(m^1.5) enumeration plus a full peel (``table5maint`` measures the gap).
+
+Per-edit algorithm (both directions share the region machinery):
+
+* **Deletion** of ``e0``: each destroyed triangle ``(e0, f, f')`` seeds
+  ``f`` at level ``k = φ(f)`` iff ``min(φ(e0), φ(f')) >= k`` (the triangle
+  counted toward f's level-k support).  Per level k ≥ 3 — levels are
+  independent, a k→k−1 drop never changes another level's counts — the
+  candidates are the triangle-connected closure of the seeds over φ=k
+  edges through triangles whose other two edges have φ_old ≥ k; partners
+  with φ_old > k are *frozen* (they keep φ′ ≥ k: a single delete drops
+  them at most to k).  Peeling the region at threshold k−3 (an edge stays
+  in the k-truss with ≥ k−2 surviving triangles) demotes exactly the
+  candidates whose support structure collapsed: ``φ′ = k−1``.
+
+* **Insertion** of ``e0``: φ′(e0) is bounded by the largest k with
+  ``|{triangles of e0 : min φ_old(partners) ≥ k−1}| ≥ k−2`` (a partner
+  supporting level k needs φ′ ≥ k, hence φ_old ≥ k−1).  Per level
+  k in 3..k2, candidates are e0 plus the closure of φ_old = k−1 edges
+  reachable from e0 through triangles whose partners have φ_old ≥ k−1
+  (e0 qualifying at every level); frozen partners are φ_old ≥ k edges
+  (insertion never lowers φ).  Candidates surviving the k−3 peel are
+  promoted to k; φ′(e0) is the largest level it survived (≥ 2).  An edge
+  not triangle-connected to e0 gains no triangle, so the closure is the
+  complete affected set (the maximality argument of Zhou et al.).
+
+Crash safety rides the PR-7 :class:`~repro.core.bottom_up.RoundJournal`:
+each committed edit snapshots ``(edges, φ)`` under the ``"maint"`` stage,
+and ``resume=True`` rebuilds the working graph from the newest intact
+snapshot and replays only the remaining edits.  The ``"maintain"`` fault
+site fires between edits (DESIGN.md §12), so the kill-9 smoke can die
+mid-batch and the differential tests can pin resumed φ to the oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Iterable, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import faults
+from repro.core import graph as glib
+from repro.core.bottom_up import OocStats, RoundJournal, _run_key
+from repro.core.graph import Graph, build_graph, edge_id_lookup, undirected_csr
+
+# a qualification value larger than any real trussness (m bounds φ)
+_PHI_INF = np.int64(1) << 40
+
+
+@dataclasses.dataclass(frozen=True)
+class EditBatch:
+    """One batch of edge edits; deletions apply before insertions.
+
+    Each array is an (k, 2) vertex-pair list.  Order inside a batch does
+    not affect the final φ — every edit is applied exactly, so the result
+    always equals a full recompute on the final edge set — but
+    delete-first keeps the working graph smallest.
+    """
+
+    inserts: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0, 2), np.int64))
+    deletes: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0, 2), np.int64))
+
+
+@dataclasses.dataclass
+class MaintainResult:
+    graph: Graph             # the maintained graph (edits applied)
+    phi: np.ndarray          # trussness per edge of ``graph.edges``
+    stats: OocStats
+
+
+def _normalize_edits(edits) -> list:
+    """Flatten ``edits`` to an ordered [(op, u, v), ...] list.
+
+    Accepts an :class:`EditBatch` (deletes first) or any sequence of
+    ``(op, u, v)`` tuples with op in {"insert", "delete"}.
+    """
+    steps = []
+    if isinstance(edits, EditBatch):
+        for u, v in np.asarray(edits.deletes, np.int64).reshape(-1, 2):
+            steps.append(("delete", int(u), int(v)))
+        for u, v in np.asarray(edits.inserts, np.int64).reshape(-1, 2):
+            steps.append(("insert", int(u), int(v)))
+        return steps
+    for step in edits:
+        op, u, v = step
+        if op not in ("insert", "delete"):
+            raise ValueError(
+                f"edit op must be 'insert' or 'delete', got {op!r}")
+        steps.append((op, int(u), int(v)))
+    return steps
+
+
+def _edits_digest(steps: Sequence[Tuple[str, int, int]]) -> str:
+    h = hashlib.sha256()
+    for op, u, v in steps:
+        h.update(f"{op}:{u}:{v};".encode())
+    return h.hexdigest()[:16]
+
+
+def _tri_partners(g: Graph, indptr: np.ndarray, nbrs: np.ndarray,
+                  eid: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Edge ids (e_aw, e_bw) of the two partner edges of every triangle
+    containing edge ``eid``, via common-neighbor intersection on the
+    undirected CSR (one binary-merge per query edge)."""
+    a, b = (int(x) for x in g.edges[eid])
+    wa = nbrs[indptr[a]:indptr[a + 1]]
+    wb = nbrs[indptr[b]:indptr[b + 1]]
+    w = np.intersect1d(wa, wb, assume_unique=True)
+    if not len(w):
+        z = np.zeros(0, np.int64)
+        return z, z
+    ea = edge_id_lookup(g, np.full(len(w), a, np.int64), w).astype(np.int64)
+    eb = edge_id_lookup(g, np.full(len(w), b, np.int64), w).astype(np.int64)
+    return ea, eb
+
+
+def _grow_region(g: Graph, indptr: np.ndarray, nbrs: np.ndarray,
+                 phi_q: np.ndarray, q: int, cand_mask: np.ndarray,
+                 seeds: Iterable[int]):
+    """Triangle-connected closure of candidate edges from ``seeds``.
+
+    A triangle ``(e, a, b)`` of a candidate ``e`` *qualifies* when both
+    partners have ``phi_q >= q``; qualifying partners that satisfy
+    ``cand_mask`` join the closure, the rest are frozen (their φ′ is
+    guaranteed ≥ the level under maintenance, so the peel may count but
+    never remove them).  Returns ``(cand_ids, frozen_ids, tris)`` with
+    ``tris`` a set of sorted edge-id triples — every qualifying triangle
+    of every candidate, each exactly once.
+    """
+    in_c = np.zeros(g.m, dtype=bool)
+    stack = []
+    for s in seeds:
+        s = int(s)
+        if cand_mask[s] and not in_c[s]:
+            in_c[s] = True
+            stack.append(s)
+    frozen = set()
+    tris = set()
+    while stack:
+        e = stack.pop()
+        ea, eb = _tri_partners(g, indptr, nbrs, e)
+        if not len(ea):
+            continue
+        qual = (phi_q[ea] >= q) & (phi_q[eb] >= q)
+        for a, b in zip(ea[qual], eb[qual]):
+            a, b = int(a), int(b)
+            tris.add(tuple(sorted((e, a, b))))
+            for p in (a, b):
+                if cand_mask[p]:
+                    if not in_c[p]:
+                        in_c[p] = True
+                        stack.append(p)
+                else:
+                    frozen.add(p)
+    cand_ids = np.nonzero(in_c)[0].astype(np.int64)
+    frozen_ids = np.fromiter(sorted(frozen), np.int64, len(frozen))
+    return cand_ids, frozen_ids, tris
+
+
+def _peel_region(cand_ids: np.ndarray, frozen_ids: np.ndarray, tris,
+                 thresh: int, peel_kwargs: dict,
+                 fault_ctx: Optional[dict]) -> np.ndarray:
+    """Peel one level's region; returns the candidate edge ids removed
+    (deletion: demoted; insertion: NOT promoted)."""
+    from repro.core.peel import local_threshold_peel
+
+    lids = np.concatenate([cand_ids, frozen_ids])
+    loc = np.zeros(int(lids.max()) + 1 if len(lids) else 1, np.int64)
+    loc[lids] = np.arange(len(lids), dtype=np.int64)
+    if tris:
+        tris_local = loc[np.asarray(sorted(tris), np.int64)].astype(np.int32)
+    else:
+        tris_local = np.zeros((0, 3), np.int32)
+    sup = np.bincount(tris_local.reshape(-1),
+                      minlength=len(lids)).astype(np.int64)
+    removable = np.zeros(len(lids), dtype=bool)
+    removable[:len(cand_ids)] = True
+    _, removed, _ = local_threshold_peel(
+        sup, tris_local, removable, thresh, fault_ctx=fault_ctx,
+        **peel_kwargs)
+    return cand_ids[removed[:len(cand_ids)]]
+
+
+def _apply_delete(g: Graph, phi: np.ndarray, u: int, v: int,
+                  peel_kwargs: dict, stats: OocStats, edit_idx: int):
+    """One exact single-edge deletion; returns (graph', phi', applied)."""
+    e0 = int(edge_id_lookup(g, np.asarray([u], np.int64),
+                            np.asarray([v], np.int64))[0])
+    if e0 < 0:
+        return g, phi, False   # edge absent: no-op
+    indptr, nbrs = undirected_csr(g)
+    ea, eb = _tri_partners(g, indptr, nbrs, e0)   # destroyed triangles
+    k0 = int(phi[e0])
+    seeds: dict = {}
+    for f, other in ((ea, eb), (eb, ea)):
+        if not len(f):
+            continue
+        kf = phi[f]
+        hit = (np.minimum(k0, phi[other]) >= kf) & (kf >= 3)
+        for i in np.nonzero(hit)[0]:
+            seeds.setdefault(int(kf[i]), set()).add(int(f[i]))
+    rm = np.zeros(g.m, dtype=bool)
+    rm[e0] = True
+    g1 = g.remove_edges(rm)
+    new_id = np.cumsum(~rm) - 1            # old -> new ids (survivors)
+    phi_old = phi[~rm]                     # levels read φ as of before
+    phi_new = phi_old.copy()
+    indptr1, nbrs1 = undirected_csr(g1)
+    for k in sorted(seeds):
+        sd = [int(new_id[e]) for e in seeds[k]]
+        cand, frozen, tris = _grow_region(
+            g1, indptr1, nbrs1, phi_old, k, phi_old == k, sd)
+        if not len(cand):
+            continue
+        demoted = _peel_region(
+            cand, frozen, tris, k - 3, peel_kwargs,
+            {"stage": "maint", "edit": edit_idx, "k": int(k), "retry": 0})
+        phi_new[demoted] = k - 1
+        stats.maintain_levels += 1
+        stats.affected_edges += int(len(cand))
+    return g1, phi_new, True
+
+
+def _apply_insert(g: Graph, phi: np.ndarray, u: int, v: int,
+                  peel_kwargs: dict, stats: OocStats, edit_idx: int):
+    """One exact single-edge insertion; returns (graph', phi', applied)."""
+    pair = np.asarray([[u, v]], np.int64)
+    g1 = g.add_edges(pair)
+    if g1 is g:
+        return g, phi, False   # present / self-loop: no-op
+    e0 = int(edge_id_lookup(g1, np.asarray([u], np.int64),
+                            np.asarray([v], np.int64))[0])
+    phi_old = np.insert(phi, e0, 2)
+    phi_new = phi_old.copy()
+    phi_q = phi_old.copy()
+    phi_q[e0] = _PHI_INF     # e0 qualifies as a partner at every level
+    indptr1, nbrs1 = undirected_csr(g1)
+    ea, eb = _tri_partners(g1, indptr1, nbrs1, e0)  # the created triangles
+    phi_e0 = 2
+    if len(ea):
+        tmin = np.sort(np.minimum(phi_old[ea], phi_old[eb]))[::-1]
+        # k2: largest k with >= k-2 triangles whose partners allow level k
+        k2 = 2
+        for j in range(len(tmin)):   # j+1 triangles have tmin >= tmin[j]
+            k2 = max(k2, min(int(tmin[j]) + 1, j + 3))
+        for k in range(3, k2 + 1):
+            cand_mask = phi_old == k - 1
+            cand_mask[e0] = True
+            cand, frozen, tris = _grow_region(
+                g1, indptr1, nbrs1, phi_q, k - 1, cand_mask, [e0])
+            not_promoted = _peel_region(
+                cand, frozen, tris, k - 3, peel_kwargs,
+                {"stage": "maint", "edit": edit_idx, "k": int(k),
+                 "retry": 0})
+            keep = np.ones(len(cand), dtype=bool)
+            keep[np.searchsorted(cand, not_promoted)] = False
+            promoted = cand[keep]
+            if e0 in promoted:
+                phi_e0 = max(phi_e0, k)
+            others = promoted[promoted != e0]
+            phi_new[others] = k
+            stats.maintain_levels += 1
+            stats.affected_edges += int(len(cand))
+    phi_new[e0] = phi_e0
+    return g1, phi_new, True
+
+
+def truss_maintain(graph: Union[Graph, Tuple[int, np.ndarray]],
+                   phi: np.ndarray, edits, *, kernel: str = "auto",
+                   mesh=None, mesh_axis="data", store=None,
+                   checkpoint_dir: Optional[str] = None,
+                   checkpoint_every: Union[int, str] = 1,
+                   resume: bool = False) -> MaintainResult:
+    """Maintain a truss decomposition under a batch of edge edits.
+
+    Args:
+      graph: the current :class:`Graph` (or an ``(n, edges)`` pair), whose
+        decomposition ``phi`` is being maintained.
+      phi: (m,) trussness per edge of ``graph.edges`` — the output of any
+        of the repo's decomposers on the pre-edit graph.
+      edits: an :class:`EditBatch` or an ordered sequence of
+        ``(op, u, v)`` tuples, op in {"insert", "delete"}.  No-op edits
+        (deleting an absent edge, inserting a present one) are skipped.
+      kernel / mesh / mesh_axis: forwarded to every region peel
+        (:func:`~repro.core.peel.local_threshold_peel`), so maintenance
+        runs on the same engine the full decomposition would.
+      store: optional :class:`~repro.core.store.GraphStore`; the working
+        graph spills through it between edits (chunk-wise: the splice /
+        filter plans alias untouched chunks), keeping maintenance
+        out-of-core capable.  A graph already carrying a store keeps it.
+      checkpoint_dir / checkpoint_every / resume: the
+        :class:`~repro.core.bottom_up.RoundJournal` knobs — each committed
+        edit journals ``(edges, φ)`` and ``resume=True`` replays only the
+        edits after the newest intact snapshot.
+
+    Returns a :class:`MaintainResult`; ``result.phi`` is bit-identical to
+    a full recompute on ``result.graph.edges`` (the differential suite
+    pins this across the conformance corpus).
+    """
+    if isinstance(graph, Graph):
+        g = graph
+        if store is None:
+            store = g.store
+    else:
+        n0, edges0 = graph
+        g = build_graph(int(n0), np.asarray(edges0), store=store)
+    if store is not None and g.store is None:
+        g = build_graph(g.n, g.edges, store=store)
+    phi = np.asarray(phi, dtype=np.int64).copy()
+    if len(phi) != g.m:
+        raise ValueError(
+            f"phi has {len(phi)} entries but the graph has {g.m} edges")
+    steps = _normalize_edits(edits)
+    stats = OocStats()
+    shape_cache: set = set()
+    peel_kwargs = dict(shape_cache=shape_cache, kernel=kernel, mesh=mesh,
+                       mesh_axis=mesh_axis)
+
+    journal = None
+    start = 0
+    if checkpoint_dir is not None:
+        run_key = _run_key("maintain", g.n, g.edges, budget=0,
+                           partitioner="none", partitioner_seed=0,
+                           edits=_edits_digest(steps))
+        journal = RoundJournal(checkpoint_dir, run_key,
+                               every=checkpoint_every, store=store)
+        if resume:
+            snap = journal.load_latest()
+            if snap is not None:
+                tree, meta = snap
+                if meta.get("stage") != "maint":
+                    raise ValueError(
+                        f"checkpoint_dir {checkpoint_dir!r} holds a "
+                        f"{meta.get('stage')!r} journal, not a maintenance "
+                        f"one; refusing to resume")
+                edges1 = np.asarray(tree["edges"], np.int64)
+                released = g
+                g = build_graph(g.n, edges1, store=store)
+                if store is not None and released.store is store:
+                    # the journaled graph supersedes the caller's spill
+                    released.unload()
+                phi = np.asarray(tree["phi"], np.int64)
+                start = int(meta["index"]) + 1
+                stats = OocStats.from_dict(meta.get("stats", {}))
+                stats.resumed_round = int(meta["index"])
+
+    first = g   # the caller's graph: never released here
+    if store is not None:
+        g.spill()
+    for i in range(start, len(steps)):
+        op, u, v = steps[i]
+        faults.check(faults.MAINTAIN, edit=i, op=op, u=int(u), v=int(v))
+        prev = g
+        if op == "delete":
+            g, phi, applied = _apply_delete(g, phi, u, v, peel_kwargs,
+                                            stats, i)
+        else:
+            g, phi, applied = _apply_insert(g, phi, u, v, peel_kwargs,
+                                            stats, i)
+        if applied:
+            stats.edits_applied += 1
+            stats.rounds += 1
+            if store is not None:
+                g.spill()                   # spill successor first: its
+                if prev is not first:       # plan aliases prev's chunks
+                    prev.release()
+        if journal is not None:
+            journal.record("maint", i, {"phi": phi, "edges": g.edges},
+                           stats)
+    if store is not None:
+        store.absorb_into(stats)
+    return MaintainResult(graph=g, phi=phi, stats=stats)

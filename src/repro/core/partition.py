@@ -513,6 +513,10 @@ class PartitionBatch:
     tri_est: int = 0      # wedge-based triangle estimate of the working
     #                       graph (the partitioner's cost model; compare
     #                       against tri_total via OocStats.tri_est_error)
+    tri_peak_rows: int = 0  # peak host-resident triangle rows while this
+    #                         batch was built: the full list when ``tris``
+    #                         came in as an array, retained-assigned rows
+    #                         plus one store chunk when chunk-streamed
 
     @property
     def tri_locality(self) -> float:
@@ -651,7 +655,11 @@ def build_partition_batch(
     round's list against the surviving edges instead of re-enumerating,
     and passes it here — the enumeration below is skipped and the list is
     scope-filtered to the round's NS union so ``tri_total`` keeps meaning
-    "triangles the round read".
+    "triangles the round read".  ``tris`` may also be an *iterable of
+    (rows, 3) chunks* (the spilled-list streaming path, DESIGN.md §16):
+    chunks are consumed one at a time and reduced to their part-assigned
+    rows before the next is read, so the host never holds the whole list;
+    the observed peak is reported as ``PartitionBatch.tri_peak_rows``.
     """
     from repro.core.support import (_pow2_ceil, _pow4_ceil, list_triangles,
                                     support_from_triangle_list,
@@ -683,20 +691,56 @@ def build_partition_batch(
     # detach: the scoped scan graph is transient (one batch build) and must
     # never allocate store namespaces or spill plans of its own
     g_scan = g if full_scope else g.remove_edges(~in_ns, detach=True)
-    if tris is not None:
-        # incremental path: the caller's filtered full-graph list replaces
-        # the enumeration; scope it the way the scoped scan would
-        tris_g = np.asarray(tris, np.int64).reshape(-1, 3)
-        if not full_scope and len(tris_g):
-            tris_g = tris_g[in_ns[tris_g].all(axis=1)]
+    tri_peak_rows = 0
+    if tris is not None and not isinstance(tris, np.ndarray):
+        # chunk-streamed incremental path (DESIGN.md §16): ``tris`` is an
+        # iterable of (rows, 3) chunks of the spilled list.  Each chunk is
+        # scope-filtered, routed, and reduced to its part-assigned rows
+        # before the next chunk is read, so peak residency is the retained
+        # bucket payload plus one store chunk — never the full 3·T list.
+        # Unassigned (3-part) rows are dropped here instead of being sorted
+        # in front of part 0 like the array path does; the bounds slices
+        # below never read them either way.
+        kept_t: List[np.ndarray] = []
+        kept_p: List[np.ndarray] = []
+        tri_total = tri_assigned = kept_rows = 0
+        for chunk in tris:
+            tc = np.asarray(chunk, np.int64).reshape(-1, 3)
+            tri_peak_rows = max(tri_peak_rows, kept_rows + int(len(tc)))
+            if not full_scope and len(tc):
+                tc = tc[in_ns[tc].all(axis=1)]
+            tri_total += int(len(tc))
+            tp = assign_triangles(g, tc, part_of)
+            keep = tp >= 0
+            tc, tp = tc[keep], tp[keep]
+            tri_assigned += int(len(tc))
+            kept_rows += int(len(tc))
+            if len(tc):
+                kept_t.append(tc)
+                kept_p.append(tp)
+        tri_peak_rows = max(tri_peak_rows, kept_rows)
+        tris_g = (np.concatenate(kept_t) if kept_t
+                  else np.zeros((0, 3), np.int64))
+        tri_part = (np.concatenate(kept_p) if kept_p
+                    else np.zeros(0, np.int64))
     else:
-        tris_g = np.asarray(list_triangles(g_scan), np.int64).reshape(-1, 3)
-        if not full_scope and len(tris_g):
-            ns_eids = np.nonzero(in_ns)[0]
-            tris_g = ns_eids[tris_g]       # back to g's edge ids
-    tri_part = assign_triangles(g, tris_g, part_of)
-    tri_total = int(len(tris_g))
-    tri_assigned = int((tri_part >= 0).sum())
+        if tris is not None:
+            # incremental path: the caller's filtered full-graph list
+            # replaces the enumeration; scope it the way the scoped scan
+            # would
+            tris_g = np.asarray(tris, np.int64).reshape(-1, 3)
+            if not full_scope and len(tris_g):
+                tris_g = tris_g[in_ns[tris_g].all(axis=1)]
+        else:
+            tris_g = np.asarray(list_triangles(g_scan),
+                                np.int64).reshape(-1, 3)
+            if not full_scope and len(tris_g):
+                ns_eids = np.nonzero(in_ns)[0]
+                tris_g = ns_eids[tris_g]       # back to g's edge ids
+        tri_part = assign_triangles(g, tris_g, part_of)
+        tri_total = int(len(tris_g))
+        tri_assigned = int((tri_part >= 0).sum())
+        tri_peak_rows = tri_total
     # the cost model's prediction for this round's scope, recorded next to
     # the ground truth so OocStats.tri_est_error can report its accuracy
     tri_est = int(closed_wedge_estimate(g_scan).sum()) // 3
@@ -719,7 +763,7 @@ def build_partition_batch(
         return PartitionBatch(buckets=[], n_parts=0, real_edges=0,
                               padded_slots=0, max_part_edges=0,
                               tri_total=tri_total, tri_assigned=tri_assigned,
-                              tri_est=tri_est)
+                              tri_est=tri_est, tri_peak_rows=tri_peak_rows)
 
     # size classes on the pow4 grid: lanes of a class are sized to ITS
     # largest member, so one outlier hub part (the PartitionBudgetWarning
@@ -828,4 +872,5 @@ def build_partition_batch(
         buckets=buckets, n_parts=len(per_part), real_edges=total_real,
         padded_slots=total_pad, max_part_edges=max_part,
         tri_total=tri_total, tri_assigned=tri_assigned, tri_est=tri_est,
+        tri_peak_rows=tri_peak_rows,
     )

@@ -340,6 +340,7 @@ def peel_classes(sup0, tris, edge_alive0, max_k=None, *, incidence=None,
     stats = jnp.zeros(N_STATS, jnp.int32)
     resumes = 0
     while True:
+        # trusscheck: allow[TRK104] -- loop-carried arrays keep their (m,)/(T,3) shapes; only cap_t changes, and that retrace IS the deliberate capacity-resume (at most log2 resumes)
         alive, sup, phi, k, stats, overflow = peel_classes_fixedcap(
             sup, tris_j, indptr_j, tids_j, alive, phi, k, stats,
             cap_f=cap_f, cap_t=cap_t, max_k=max_k)
@@ -387,6 +388,7 @@ def peel_threshold(sup0, tris, alive0, removable, thresh, *, incidence=None,
     stats = jnp.zeros(N_STATS, jnp.int32)
     resumes = 0
     while True:
+        # trusscheck: allow[TRK104] -- loop-carried arrays keep their (m,)/(T,3) shapes; only cap_t changes, and that retrace IS the deliberate capacity-resume (at most log2 resumes)
         alive, sup, stats, overflow = peel_threshold_fixedcap(
             sup, tris_j, indptr_j, tids_j, alive, removable, thresh, stats,
             cap_f=cap_f, cap_t=cap_t)
@@ -927,7 +929,8 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
                     kernel: str = "auto", with_stats: bool = False,
                     checkpoint_dir=None, checkpoint_every=1,
                     resume: bool = False, max_retries: int = 2,
-                    store=None, host_memory_budget=None):
+                    store=None, host_memory_budget=None,
+                    edits=None, phi0=None):
     """End-to-end decomposition — the unified host entry point.
 
     ``engine``:
@@ -981,8 +984,19 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
     ignored when the run routes to an in-memory engine.  A non-positive
     ``host_memory_budget`` raises.
 
+    ``edits`` routes the call through incremental maintenance
+    (DESIGN.md §16) instead of a fresh decomposition: the pre-edit graph
+    ``(n, edges)`` is decomposed (or its known trussness accepted via
+    ``phi0``, indexed by the canonical pre-edit edge list) and the edit
+    batch — a :class:`~repro.core.maintain.EditBatch` or ``(op, u, v)``
+    sequence — is applied by :func:`~repro.core.maintain.truss_maintain`.
+    The returned φ indexes the canonical POST-edit edge list, and
+    ``checkpoint_dir`` / ``resume`` journal the maintenance itself (one
+    snapshot per committed edit).  ``phi0`` without ``edits`` raises.
+
     With ``with_stats`` the second return value is a :class:`PeelStats`
-    (in-memory frontier), ``None`` (dense), or an ``OocStats`` (out-of-core).
+    (in-memory frontier), ``None`` (dense), or an ``OocStats`` (out-of-core
+    and maintenance runs).
     """
     import warnings
 
@@ -1001,6 +1015,24 @@ def truss_decompose(n: int, edges: np.ndarray, *, engine: str = "auto",
     if mesh_axes is not None:
         axes = _mesh_axes(mesh_axes)
         mesh_axis = axes[0] if len(axes) == 1 else axes
+    if phi0 is not None and edits is None:
+        raise ValueError("phi0= is only meaningful together with edits=")
+    if edits is not None:
+        from repro.core.maintain import truss_maintain
+
+        if phi0 is None:
+            phi0 = truss_decompose(
+                n, edges, engine=engine, memory_budget=memory_budget,
+                partitioner=partitioner, partitioner_seed=partitioner_seed,
+                mesh=mesh, mesh_axis=mesh_axis, kernel=kernel,
+                max_retries=max_retries)
+        res = truss_maintain(
+            (n, np.asarray(edges)), phi0, edits, kernel=kernel, mesh=mesh,
+            mesh_axis=mesh_axis, store=store,
+            checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every, resume=resume)
+        phi = np.asarray(res.phi, dtype=np.int64)
+        return (phi, res.stats) if with_stats else phi
     g = build_graph(n, edges)
     if g.m == 0:
         phi = np.zeros(0, np.int64)

@@ -181,6 +181,27 @@ class GraphStore:
         when the backend supports it (``rank`` reuse across rounds)."""
         self.put(dst, arr)
 
+    def put_inserted(self, dst: str, src: str, is_new: np.ndarray,
+                     arr: np.ndarray) -> None:
+        """Register ``arr`` under ``dst`` where ``arr[~is_new] == get(src)``
+        (the spill side of ``Graph.add_edges``); a chunked store aliases
+        source chunks with no interior insertion point."""
+        self.put(dst, arr)
+
+    def get_chunks(self, key: str):
+        """Yield ``get(key)`` piecewise so a consumer can bound its peak
+        working set to one chunk; the base store yields the whole array."""
+        arr = self.get(key)
+        if len(arr):
+            yield arr
+
+    def stream_put(self, key: str, dtype, trail: Tuple[int, ...] = ()):
+        """An appendable writer registering ``key`` at ``close()``; the
+        base store buffers and concatenates, a chunked store flushes
+        incrementally at chunk granularity (so a streaming producer never
+        holds the full array)."""
+        return _BufferedStreamWriter(self, key, dtype, trail)
+
     def close(self) -> None:
         """Release backend resources (threads, files)."""
 
@@ -235,6 +256,47 @@ class InMemoryStore(GraphStore):
         for k in [k for k in self._data
                   if k == key or k.startswith(prefix)]:
             del self._data[k]
+
+
+class _BufferedStreamWriter:
+    """Base-store ``stream_put`` writer: buffer chunks, ``put`` on close."""
+
+    def __init__(self, store: GraphStore, key: str, dtype,
+                 trail: Tuple[int, ...]):
+        self._store = store
+        self._key = key
+        self._dtype = np.dtype(dtype)
+        self._trail = tuple(int(d) for d in trail)
+        self._parts: List[np.ndarray] = []
+        self._closed = False
+
+    @property
+    def rows(self) -> int:
+        return sum(len(p) for p in self._parts)
+
+    def append(self, arr: np.ndarray) -> None:
+        part = np.asarray(arr, self._dtype).reshape((-1,) + self._trail)
+        if len(part):
+            self._parts.append(part)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if self._parts:
+            arr = (self._parts[0] if len(self._parts) == 1
+                   else np.concatenate(self._parts))
+        else:
+            arr = np.empty((0,) + self._trail, dtype=self._dtype)
+        self._parts = []
+        self._store.put(self._key, arr)
+
+    def __enter__(self) -> "_BufferedStreamWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if exc[0] is None:
+            self.close()
 
 
 @dataclasses.dataclass
@@ -440,6 +502,74 @@ class ChunkedDiskStore(GraphStore):
                 dtype=src_man.dtype, trail=src_man.trail, rows=src_man.rows,
                 chunks=chunks)
 
+    def put_inserted(self, dst: str, src: str, is_new: np.ndarray,
+                     arr: np.ndarray) -> None:
+        """Chunk-wise splice: ``arr[~is_new] == get(src)`` with new rows at
+        the ``is_new`` positions.  Source chunks with no interior insertion
+        are aliased (zero write I/O); inserted runs and chunks straddling a
+        splice point are written fresh — the insertion mirror of
+        :meth:`put_filtered` (DESIGN.md §16)."""
+        with self._lock:
+            src_man = self._manifests.get(src)
+        is_new = np.asarray(is_new, dtype=bool)
+        arr = np.ascontiguousarray(arr)
+        trail = tuple(int(d) for d in arr.shape[1:])
+        if (src_man is None or len(is_new) != len(arr)
+                or int((~is_new).sum()) != src_man.rows
+                or str(arr.dtype) != src_man.dtype
+                or trail != src_man.trail):
+            self.put(dst, arr)
+            return
+        old_pos = np.nonzero(~is_new)[0]
+        row_bytes = int(arr.itemsize * int(np.prod(trail, dtype=np.int64)))
+        rows_per = max(1, self.chunk_bytes // max(row_bytes, 1))
+        self.release(dst)
+        chunks: List[_Chunk] = []
+        new_refs: List[str] = []
+        state = {"idx": 0}
+
+        def write_fresh(part: np.ndarray) -> None:
+            for start in range(0, len(part), rows_per):
+                piece = part[start:start + rows_per]
+                payload = piece.tobytes()
+                with self._lock:
+                    path = self._next_path()
+                self._write_chunk(path, payload, key=dst,
+                                  index=state["idx"])
+                chunks.append(_Chunk(path=path, key=dst,
+                                     index=state["idx"], rows=len(piece),
+                                     nbytes=len(payload)))
+                state["idx"] += 1
+
+        cursor = 0    # next unemitted row of arr
+        off_old = 0   # rows of src consumed so far
+        for c in src_man.chunks:
+            lo = int(old_pos[off_old])
+            hi = int(old_pos[off_old + c.rows - 1]) + 1
+            if lo > cursor:
+                # insertions falling strictly before this source chunk
+                write_fresh(arr[cursor:lo])
+            if hi - lo == c.rows:
+                chunks.append(_Chunk(path=c.path, key=dst,
+                                     index=state["idx"], rows=c.rows,
+                                     nbytes=c.nbytes))
+                new_refs.append(c.path)
+                state["idx"] += 1
+            else:
+                write_fresh(arr[lo:hi])
+            cursor = hi
+            off_old += c.rows
+        if cursor < len(arr):
+            write_fresh(arr[cursor:])
+        with self._lock:
+            for path in new_refs:
+                self._file_refs[path] = self._file_refs.get(path, 0) + 1
+            for c in chunks:
+                self._file_refs.setdefault(c.path, 1)
+            self._manifests[dst] = _Manifest(
+                dtype=src_man.dtype, trail=trail, rows=len(arr),
+                chunks=chunks)
+
     # -- read side -----------------------------------------------------------
     def _schedule(self, chunks: Iterable[_Chunk]) -> None:
         """Queue background loads for chunks not yet scheduled, admitting
@@ -505,6 +635,27 @@ class ChunkedDiskStore(GraphStore):
             off += c.rows
         return out
 
+    def get_chunks(self, key: str):
+        """The ``get`` loop, yielded per chunk: a consumer's peak working
+        set is one chunk (plus the prefetch window), never the key.  The
+        yielded arrays are read-only views over the chunk payloads."""
+        with self._lock:
+            man = self._manifests.get(key)
+        if man is None:
+            raise StoreError(f"unknown store key {key!r}")
+        dtype = np.dtype(man.dtype)
+        for i, c in enumerate(man.chunks):
+            self._schedule(man.chunks[i + 1:i + 1 + self.lookahead])
+            data, _ = self._acquire(c)
+            yield np.frombuffer(data, dtype=dtype).reshape(
+                (c.rows,) + man.trail)
+
+    def stream_put(self, key: str, dtype, trail: Tuple[int, ...] = ()):
+        """An appendable writer that flushes chunk files incrementally at
+        ``chunk_bytes`` granularity, so a producer filtering one stream
+        into another never holds either side whole."""
+        return _ChunkStreamWriter(self, key, dtype, trail)
+
     def prefetch(self, keys: Sequence[str]) -> None:
         """Warm the head of each key so the next round's first reads hit
         (the rest streams through the per-``get`` lookahead window)."""
@@ -547,3 +698,79 @@ class ChunkedDiskStore(GraphStore):
         with self._lock:
             self._futures.clear()
             self._resident = 0
+
+
+class _ChunkStreamWriter:
+    """Chunked-store ``stream_put`` writer: appended rows are cut into
+    chunk files as soon as a full chunk accumulates, and the manifest is
+    registered atomically at ``close()`` — until then the key keeps its
+    previous contents, so a round can stream-filter a key into its
+    successor while the predecessor is still being read."""
+
+    def __init__(self, store: ChunkedDiskStore, key: str, dtype,
+                 trail: Tuple[int, ...]):
+        self._store = store
+        self._key = key
+        self._dtype = np.dtype(dtype)
+        self._trail = tuple(int(d) for d in trail)
+        row_bytes = int(self._dtype.itemsize
+                        * int(np.prod(self._trail, dtype=np.int64)))
+        self._rows_per = max(1, store.chunk_bytes // max(row_bytes, 1))
+        self._pending: List[np.ndarray] = []
+        self._pending_rows = 0
+        self._chunks: List[_Chunk] = []
+        self._rows = 0
+        self._closed = False
+
+    @property
+    def rows(self) -> int:
+        return self._rows + self._pending_rows
+
+    def append(self, arr: np.ndarray) -> None:
+        part = np.ascontiguousarray(
+            np.asarray(arr, self._dtype).reshape((-1,) + self._trail))
+        if not len(part):
+            return
+        self._pending.append(part)
+        self._pending_rows += len(part)
+        while self._pending_rows >= self._rows_per:
+            self._flush(self._rows_per)
+
+    def _flush(self, rows: int) -> None:
+        buf = (self._pending[0] if len(self._pending) == 1
+               else np.concatenate(self._pending))
+        part, rest = buf[:rows], buf[rows:]
+        self._pending = [rest] if len(rest) else []
+        self._pending_rows = len(rest)
+        payload = np.ascontiguousarray(part).tobytes()
+        store = self._store
+        with store._lock:
+            path = store._next_path()
+        store._write_chunk(path, payload, key=self._key,
+                           index=len(self._chunks))
+        self._chunks.append(_Chunk(path=path, key=self._key,
+                                   index=len(self._chunks), rows=len(part),
+                                   nbytes=len(payload)))
+        self._rows += len(part)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if self._pending_rows:
+            self._flush(self._pending_rows)
+        store = self._store
+        store.release(self._key)
+        with store._lock:
+            for c in self._chunks:
+                store._file_refs[c.path] = 1
+            store._manifests[self._key] = _Manifest(
+                dtype=str(self._dtype), trail=self._trail, rows=self._rows,
+                chunks=self._chunks)
+
+    def __enter__(self) -> "_ChunkStreamWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if exc[0] is None:
+            self.close()

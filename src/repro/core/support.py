@@ -367,6 +367,7 @@ def edge_support_jax(
         plan = [WedgeBucket(ids_pad, g.m, max(g.max_out_deg, 1), c)]
     sup = jnp.zeros(g.m + 1, jnp.int32)
     for bucket in plan:
+        # trusscheck: allow[TRK104] -- bucket eid lengths and D/chunk sit on the pow2 grid wedge_bucket_plan pads to, so distinct shapes (hence compiles) are O(log) per run by design
         sup = sup + _support_scan(
             jnp.asarray(bucket.eids), src, dst, indptr, nbrs, nbr_eid,
             D=bucket.D, iters=iters, chunk=bucket.chunk,
@@ -433,3 +434,20 @@ def spill_triangles(store, key: str, tris: np.ndarray) -> None:
 def load_triangles(store, key: str) -> np.ndarray:
     """Reload a triangle list spilled by :func:`spill_triangles`."""
     return np.asarray(store.get(key), dtype=np.int64).reshape(-1, 3)
+
+
+def iter_triangle_chunks(store, key: str):
+    """Stream a spilled triangle list chunk-wise: yields (rows, 3) int64
+    blocks sized by the store's chunk granularity, so a consumer's peak
+    working set is one chunk instead of the whole 3·T list (the OOC-store
+    fix of DESIGN.md §16)."""
+    for part in store.get_chunks(key):
+        yield np.asarray(part, dtype=np.int64).reshape(-1, 3)
+
+
+def stream_spill_triangles(store, key: str):
+    """An appendable (rows, 3) triangle writer — the streaming counterpart
+    of :func:`spill_triangles`.  The key is registered at ``close()``; on a
+    chunked store, chunk files flush incrementally so the producer never
+    holds the full list either."""
+    return store.stream_put(key, np.int64, (3,))

@@ -48,6 +48,7 @@ def main():
     t0 = time.time()
     for _ in range(args.new_tokens):
         out.append(np.asarray(tok))
+        # trusscheck: allow[TRK104] -- the KV cache is preallocated at max_seq and tok is (requests,), so every decode step reuses one compiled shape
         cache, logits = decode(params, cache, tok)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
     jax.block_until_ready(logits)

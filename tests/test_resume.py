@@ -208,6 +208,59 @@ def test_sigkill_crash_and_resume(tmp_path):
     assert (phi == _ORACLE[name]).all()
 
 
+def test_zone_state_helpers_round_trip():
+    """The locality partitioner's one float of cross-round feedback
+    snapshots and restores; stateless partitioners snapshot as None and
+    ignore restores (no attribute is ever attached to them)."""
+    from repro.core.bottom_up import (_resolve_partitioner,
+                                      _restore_zone_state, _zone_state)
+    loc = _resolve_partitioner("locality")
+    assert _zone_state(loc) is None          # cold start
+    loc.prev_locality = 0.75
+    assert _zone_state(loc) == 0.75
+    loc2 = _resolve_partitioner("locality")
+    _restore_zone_state(loc2, _zone_state(loc))
+    assert loc2.prev_locality == 0.75
+    seq = _resolve_partitioner("sequential")
+    assert _zone_state(seq) is None
+    _restore_zone_state(seq, 0.5)            # must not attach state
+    assert _zone_state(seq) is None
+
+
+def test_locality_zone_state_journaled_and_restored(tmp_path):
+    """Satellite-1 regression: a stage-1 snapshot of a locality run must
+    carry the adaptive partitioner's zone state so the resumed run
+    re-plans its remaining rounds from the journaled feedback instead of
+    the cold default."""
+    from repro.core.bottom_up import (RoundJournal, _mesh_devices,
+                                      _resolve_partitioner,
+                                      _restore_zone_state, _run_key)
+    name, n, ce = CORPUS[3]                  # clustered: locality's regime
+    budget = 16
+    d = str(tmp_path / "ckpt")
+    plan = faults.FaultPlan([faults.FaultRule(
+        site=faults.PARTITIONER, kind="error", where={"stage": 1}, nth=3)])
+    cut = _interrupt(bottom_up_decompose, plan, n=n, edges=ce, budget=budget,
+                     partitioner="locality", checkpoint_dir=d,
+                     checkpoint_every=1)
+    assert cut
+    key = _run_key("bottom_up", n, ce, budget, "locality", 0,
+                   devices=_mesh_devices(None, "data"))
+    tree, meta = RoundJournal(d, key, every=1).load_latest()
+    assert meta["stage"] == "lb"
+    zs = meta.get("zone_state")
+    assert zs is not None and 0.0 <= float(zs) <= 1.0
+    part_fn = _resolve_partitioner("locality")
+    _restore_zone_state(part_fn, zs)
+    assert part_fn.prev_locality == float(zs)
+    with _quiet():
+        res = bottom_up_decompose(n, ce, budget=budget,
+                                  partitioner="locality", checkpoint_dir=d,
+                                  resume=True)
+    assert (res.phi == _ORACLE[name]).all()
+    assert res.stats.resumed_round >= 0
+
+
 _SPILL_KILL_DRIVER = r"""
 import sys
 import numpy as np

@@ -330,3 +330,92 @@ def test_round_journal_charges_store_account(tmp_path):
         assert store.io_account.reserved == 0       # released after save
         # the journal absorbed the store counters into the snapshot stats
         assert stats.chunk_writes == store.stats.chunk_writes > 0
+
+
+# ---------------------------------------------------------------------------
+# insertion splice + chunk streaming (the add_edges / maintenance spill path)
+# ---------------------------------------------------------------------------
+
+def test_put_inserted_aliases_untouched_chunks(tmp_path):
+    with _disk(tmp_path, chunk_bytes=800) as store:   # 100 i64 rows/chunk
+        src = np.arange(400, dtype=np.int64)
+        store.put("g1/x", src)
+        writes0 = store.stats.chunk_writes
+        spilled0 = store.stats.bytes_spilled
+        # splice 10 new rows into the middle of the second chunk: chunks
+        # 0, 2 and 3 have no interior insertion point and must alias
+        is_new = np.zeros(410, dtype=bool)
+        is_new[150:160] = True
+        arr = np.insert(src, 150, 10_000 + np.arange(10, dtype=np.int64))
+        assert (arr[~is_new] == src).all()
+        store.put_inserted("g2/x", "g1/x", is_new, arr)
+        assert (store.get("g2/x") == arr).all()
+        writes = store.stats.chunk_writes - writes0
+        assert 1 <= writes < 5            # a full rewrite would be 5 chunks
+        assert store.stats.bytes_spilled - spilled0 < arr.nbytes
+        # the spliced key survives release of its source (refcounts)
+        store.release("g1/x")
+        assert (store.get("g2/x") == arr).all()
+        store.release("g2/x")
+        assert not glob.glob(str(tmp_path / "store" / "*.bin"))
+
+
+def test_put_inserted_mismatch_falls_back_to_put(tmp_path):
+    with _disk(tmp_path) as store:
+        store.put("g1/x", np.arange(100, dtype=np.int64))
+        arr = np.arange(50, dtype=np.int64)
+        # is_new inconsistent with the source row count: plain put
+        store.put_inserted("g2/x", "g1/x", np.ones(50, dtype=bool), arr)
+        assert (store.get("g2/x") == arr).all()
+        # unknown source key: plain put as well
+        store.put_inserted("g3/x", "nope/x", np.zeros(50, dtype=bool), arr)
+        assert (store.get("g3/x") == arr).all()
+
+
+def test_get_chunks_bounds_peak_to_one_chunk(tmp_path):
+    with _disk(tmp_path) as store:        # 256 B chunks = 32 i64 rows
+        arr = np.arange(2000, dtype=np.int64)
+        store.put("g1/x", arr)
+        parts = []
+        for part in store.get_chunks("g1/x"):
+            assert len(part) <= 32        # never the whole key
+            assert not part.flags.writeable
+            parts.append(np.asarray(part))
+        assert len(parts) > 4
+        assert (np.concatenate(parts) == arr).all()
+        with pytest.raises(StoreError, match="unknown"):
+            list(store.get_chunks("nope/x"))
+
+
+def test_stream_put_flushes_incrementally(tmp_path):
+    with _disk(tmp_path) as store:        # 256 B chunks = 10 (3,)-rows
+        rows = np.arange(300, dtype=np.int64).reshape(-1, 3)
+        files0 = len(glob.glob(str(tmp_path / "store" / "*.bin")))
+        with store.stream_put("g1/tris", np.int64, (3,)) as w:
+            for lo in range(0, 100, 7):   # odd-sized appends
+                w.append(rows[lo:lo + 7])
+                assert w.rows == min(lo + 7, 100)
+            # full chunks are already on disk before close
+            assert len(glob.glob(str(tmp_path / "store" / "*.bin"))) > files0
+            with pytest.raises(StoreError, match="unknown"):
+                store.get("g1/tris")      # registered only at close
+        assert (store.get("g1/tris") == rows).all()
+
+
+def test_stream_put_same_key_keeps_old_until_close(tmp_path):
+    with _disk(tmp_path) as store:
+        old = np.arange(60, dtype=np.int64).reshape(-1, 3)
+        store.put("g1/tris", old)
+        w = store.stream_put("g1/tris", np.int64, (3,))
+        w.append(old[:5] * 2)
+        assert (store.get("g1/tris") == old).all()    # still the old rows
+        w.close()
+        assert (store.get("g1/tris") == old[:5] * 2).all()
+
+
+def test_stream_put_empty_registers_empty_key(tmp_path):
+    with _disk(tmp_path) as store:
+        with store.stream_put("g1/tris", np.int64, (3,)) as w:
+            assert w.rows == 0
+        got = store.get("g1/tris")
+        assert got.shape == (0, 3) and got.dtype == np.int64
